@@ -1,0 +1,68 @@
+"""Paper Table 2 + Fig. 1: LEAR classifier precision/recall and feature
+importance (sentinel features vs original q-d features)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import get_experiment
+from repro.core.lear import augment_features, build_continue_labels
+from repro.metrics.classification import precision_recall
+
+
+def run(exp_name: str, sentinel_idx: int = 0, threshold: float = 0.5) -> dict:
+    exp = get_experiment(exp_name)
+    s = exp.spec.sentinels[sentinel_idx]
+    clf = exp.classifiers[s]
+    ds = exp.splits["test"]
+    per_tree = exp.scores("test")
+    partial = per_tree[..., :s].sum(-1) + exp.ranker.base_score
+    full = per_tree.sum(-1) + exp.ranker.base_score
+    mask = jnp.asarray(ds.mask)
+    labels = jnp.asarray(ds.labels)
+
+    aug = augment_features(jnp.asarray(ds.X), partial, mask)
+    cont_true = build_continue_labels(full, labels, mask, k=15)
+    cont_pred = clf.continue_mask(aug, mask, threshold=threshold)
+    pr = precision_recall(cont_pred, cont_true, mask)
+    pr["sentinel"] = s
+    pr["dataset"] = exp_name
+
+    # Fig. 1 analogue: split-frequency importance of the 4 sentinel features
+    # (score, rank, minmax score, n_candidates) vs original features.
+    F = ds.X.shape[-1]
+    feats = np.asarray(clf.forest.feature).reshape(-1)
+    thr = np.asarray(clf.forest.threshold).reshape(-1)
+    used = feats[np.isfinite(thr)]
+    counts = np.bincount(used, minlength=F + 4)
+    names = ["partial_score", "sentinel_rank", "minmax_score", "n_candidates"]
+    top = np.argsort(-counts)[:10]
+    pr["top_features"] = [
+        (names[i - F] if i >= F else f"qd_feat_{i}", int(counts[i]))
+        for i in top if counts[i] > 0
+    ]
+    pr["sentinel_feature_rank"] = int(
+        min((list(np.argsort(-counts)).index(F + j) for j in range(4)))
+    ) + 1
+    return pr
+
+
+def main(csv: bool = True):
+    out = []
+    for name in ("msn1", "istella"):
+        pr = run(name)
+        out.append(pr)
+        if csv:
+            print(
+                f"table2_{name},exit_precision={pr['exit_precision']:.2f},"
+                f"exit_recall={pr['exit_recall']:.2f},"
+                f"continue_precision={pr['continue_precision']:.2f},"
+                f"continue_recall={pr['continue_recall']:.2f}"
+            )
+            print(f"fig1_{name}_top_features,{pr['top_features'][:5]}")
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""Roofline table: aggregates artifacts/dryrun/*.json into the §Roofline
+report (one row per arch × shape × mesh)."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
+
+
+def load_records() -> list[dict]:
+    out = []
+    for path in sorted(glob.glob(os.path.join(ART, "*.json"))):
+        with open(path) as f:
+            out.append(json.load(f))
+    return out
+
+
+def main(csv: bool = True):
+    records = load_records()
+    rows = []
+    for r in records:
+        tag = f"{r['arch']}/{r['shape']}/{r['mesh']}"
+        if "skipped" in r:
+            rows.append((tag, "SKIP", r["skipped"][:60]))
+            continue
+        if "error" in r:
+            rows.append((tag, "FAIL", r["error"][:60]))
+            continue
+        roof = r["roofline"]
+        rows.append((
+            tag,
+            f"{roof['bound_s']:.3e}",
+            f"dominant={roof['dominant']},compute={roof['compute_s']:.2e},"
+            f"memory={roof['memory_s']:.2e},coll={roof['collective_s']:.2e},"
+            f"useful={roof['useful_ratio']:.2f},"
+            f"mem_gib={r['memory'].get('per_device_total_gib', -1)}",
+        ))
+    if csv:
+        for tag, v, detail in rows:
+            print(f"roofline_{tag},{v},{detail}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,90 @@
+"""Paper Table 1: Full vs EE_ideal vs ERT vs EPT on MSN-1' (test split).
+
+Reports NDCG@10, ΔNDCG vs Full, trees-traversed speedup, and the oracle's
+per-query cut statistics (k_s^μ, k_s^σ) — the paper's exact table layout.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Experiment, get_experiment
+from repro.core.strategies import ept_continue, ert_continue, ideal_continue
+from repro.metrics.ranking import mean_ndcg
+from repro.metrics.speedup import speedup_vs_full
+
+
+def evaluate_strategy(exp: Experiment, sentinel: int, cont, classifier_trees=0):
+    ds = exp.splits["test"]
+    per_tree = exp.scores("test")
+    partial = per_tree[..., :sentinel].sum(-1) + exp.ranker.base_score
+    full = per_tree.sum(-1) + exp.ranker.base_score
+    mask = jnp.asarray(ds.mask)
+    labels = jnp.asarray(ds.labels)
+    scores = jnp.where(cont, full, partial)
+    ndcg = float(mean_ndcg(scores, labels, mask, 10))
+    sp = speedup_vs_full(cont, mask, sentinel, exp.ranker.n_trees,
+                         classifier_trees)
+    return ndcg, sp
+
+
+def run(exp_name: str = "msn1", sentinel_idx: int = 0) -> list[dict]:
+    exp = get_experiment(exp_name)
+    s = exp.spec.sentinels[sentinel_idx]
+    ds = exp.splits["test"]
+    per_tree = exp.scores("test")
+    partial = per_tree[..., :s].sum(-1) + exp.ranker.base_score
+    full = per_tree.sum(-1) + exp.ranker.base_score
+    mask = jnp.asarray(ds.mask)
+    labels = jnp.asarray(ds.labels)
+
+    rows = []
+    ndcg_full = float(mean_ndcg(full, labels, mask, 10))
+    rows.append({"method": "Full", "ndcg@10": ndcg_full, "delta_pct": 0.0,
+                 "speedup": 1.0})
+
+    cont, cut = ideal_continue(partial, full, labels, mask, k=10)
+    ndcg, sp = evaluate_strategy(exp, s, cont)
+    cut_np = np.asarray(cut, dtype=np.float64)
+    rows.append({
+        "method": "EE_ideal", "ndcg@10": ndcg,
+        "delta_pct": 100 * (ndcg - ndcg_full) / ndcg_full, "speedup": sp,
+        "ks_mean": float(cut_np.mean()), "ks_std": float(cut_np.std()),
+    })
+
+    for k_s in (15, 20):
+        cont = ert_continue(partial, mask, k_s=k_s)
+        ndcg, sp = evaluate_strategy(exp, s, cont)
+        rows.append({
+            "method": f"ERT(k_s={k_s})", "ndcg@10": ndcg,
+            "delta_pct": 100 * (ndcg - ndcg_full) / ndcg_full, "speedup": sp,
+        })
+
+    for p in (0.2, 0.5):
+        cont = ept_continue(partial, mask, k_s=15, p=p)
+        ndcg, sp = evaluate_strategy(exp, s, cont)
+        n_kept = np.asarray((cont & mask).sum(axis=1), np.float64)
+        rows.append({
+            "method": f"EPT(k_s=15,p={p})", "ndcg@10": ndcg,
+            "delta_pct": 100 * (ndcg - ndcg_full) / ndcg_full, "speedup": sp,
+            "ks_mean": float(n_kept.mean()), "ks_std": float(n_kept.std()),
+        })
+    return rows
+
+
+def main(csv: bool = True):
+    rows = run()
+    if csv:
+        print("table1_method,ndcg@10,delta_pct,speedup,ks_mean,ks_std")
+        for r in rows:
+            print(
+                f"{r['method']},{r['ndcg@10']:.4f},{r['delta_pct']:+.2f},"
+                f"{r['speedup']:.2f},{r.get('ks_mean', float('nan')):.2f},"
+                f"{r.get('ks_std', float('nan')):.2f}"
+            )
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,136 @@
+"""Shared experiment context for the paper-reproduction benchmarks.
+
+Trains (once, cached under ``artifacts/repro/<dataset>/``) the λ-MART
+teacher and the LEAR classifiers for each sentinel, on synthetic MSN-1' /
+Istella' (see repro.data.synthetic). Ensemble sizes are scaled down from
+the paper's 1,047/1,469 trees (CPU budget); sentinel positions keep the
+paper's *fractional* placement (≈5%/10%/20% of the ensemble).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.lear import LearClassifier, train_lear
+from repro.data.synthetic import LetorDataset, make_letor_dataset
+from repro.forest.ensemble import TreeEnsemble, from_complete_arrays
+from repro.forest.gbdt import GBDTParams, train_lambdamart
+from repro.forest.scoring import score_bitvector
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "repro")
+
+
+@dataclasses.dataclass
+class DatasetSpec:
+    preset: str
+    n_queries: int
+    docs_scale: float
+    n_trees: int
+    sentinels: tuple[int, ...]
+    depth: int = 6
+    lr: float = 0.1
+    seed: int = 0
+
+
+SPECS = {
+    "msn1": DatasetSpec(
+        preset="msn1", n_queries=1000, docs_scale=0.5, n_trees=300,
+        sentinels=(15, 30, 60),
+    ),
+    "istella": DatasetSpec(
+        preset="istella", n_queries=600, docs_scale=0.35, n_trees=400,
+        sentinels=(20, 40, 80),
+    ),
+}
+
+
+def _save_ensemble(path: str, ens: TreeEnsemble) -> None:
+    np.savez(
+        path,
+        feature=np.asarray(ens.feature),
+        threshold=np.asarray(ens.threshold),
+        leaf_value=np.asarray(ens.leaf_value),
+        base_score=np.asarray(ens.base_score),
+    )
+
+
+def _load_ensemble(path: str) -> TreeEnsemble:
+    d = np.load(path)
+    return from_complete_arrays(
+        d["feature"], d["threshold"], d["leaf_value"],
+        base_score=float(d["base_score"]),
+    )
+
+
+@dataclasses.dataclass
+class Experiment:
+    name: str
+    spec: DatasetSpec
+    data: LetorDataset
+    splits: dict
+    ranker: TreeEnsemble
+    classifiers: dict[int, LearClassifier]   # sentinel -> classifier
+
+    def scores(self, split: str):
+        ds = self.splits[split]
+        Q, D, F = ds.X.shape
+        _, per_tree = score_bitvector(
+            self.ranker, jnp.asarray(ds.X.reshape(Q * D, F)),
+            return_per_tree=True,
+        )
+        return per_tree.reshape(Q, D, -1)  # [Q, D, T]
+
+
+def get_experiment(name: str, verbose: bool = True) -> Experiment:
+    spec = SPECS[name]
+    art = os.path.join(ART, name)
+    os.makedirs(art, exist_ok=True)
+    data = make_letor_dataset(
+        spec.preset, n_queries=spec.n_queries, docs_scale=spec.docs_scale,
+        seed=spec.seed,
+    )
+    splits = data.splits()
+
+    ranker_path = os.path.join(art, "ranker.npz")
+    if os.path.exists(ranker_path):
+        ranker = _load_ensemble(ranker_path)
+    else:
+        if verbose:
+            print(f"[{name}] training λ-MART teacher ({spec.n_trees} trees)...",
+                  flush=True)
+        tr = splits["train"]
+        params = GBDTParams(
+            n_trees=spec.n_trees, depth=spec.depth, learning_rate=spec.lr
+        )
+        ranker = train_lambdamart(
+            tr.X, tr.labels.astype(np.float32), tr.mask, params, k=10
+        )
+        _save_ensemble(ranker_path, ranker)
+
+    classifiers = {}
+    cls_split = splits["classifier"]
+    for s in spec.sentinels:
+        cpath = os.path.join(art, f"lear_s{s}.npz")
+        if os.path.exists(cpath):
+            classifiers[s] = LearClassifier(
+                forest=_load_ensemble(cpath), sentinel=s
+            )
+        else:
+            if verbose:
+                print(f"[{name}] training LEAR classifier @ sentinel {s}...",
+                      flush=True)
+            clf = train_lear(
+                cls_split.X, cls_split.labels, cls_split.mask, ranker,
+                sentinel=s, k=15,
+            )
+            _save_ensemble(cpath, clf.forest)
+            classifiers[s] = clf
+
+    return Experiment(
+        name=name, spec=spec, data=data, splits=splits, ranker=ranker,
+        classifiers=classifiers,
+    )

@@ -1,0 +1,49 @@
+"""Benchmark entry point: one section per paper table/figure + system benches.
+
+    PYTHONPATH=src python -m benchmarks.run [--only SECTION]
+
+Prints ``name,us_per_call_or_value,derived`` CSV lines per section.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+SECTIONS = ("table1", "classifier", "tradeoff", "kernels", "roofline")
+
+
+def main() -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--only", choices=SECTIONS, default=None)
+    args = p.parse_args()
+
+    sections = [args.only] if args.only else list(SECTIONS)
+    for section in sections:
+        print(f"# === {section} ===", flush=True)
+        t0 = time.time()
+        try:
+            if section == "table1":
+                from benchmarks import bench_table1
+                bench_table1.main()
+            elif section == "classifier":
+                from benchmarks import bench_classifier
+                bench_classifier.main()
+            elif section == "tradeoff":
+                from benchmarks import bench_tradeoff
+                bench_tradeoff.main()
+            elif section == "kernels":
+                from benchmarks import bench_kernels
+                bench_kernels.main()
+            elif section == "roofline":
+                from benchmarks import bench_roofline
+                bench_roofline.main()
+        except Exception as e:  # noqa: BLE001
+            print(f"{section}_ERROR,{type(e).__name__},{e}", file=sys.stderr)
+            raise
+        print(f"# {section} done in {time.time() - t0:.1f}s", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""Architecture registry: ``get_config(name)`` / ``get_smoke_config(name)``.
+
+10 assigned architectures + the paper's own λ-MART/LEAR forest config.
+"""
+
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import (
+    ArchConfig,
+    ForestConfig,
+    NequIPConfig,
+    RecSysConfig,
+    ShapeSpec,
+    TransformerConfig,
+)
+
+_MODULES = {
+    "qwen2.5-14b": "repro.configs.qwen2_5_14b",
+    "minitron-4b": "repro.configs.minitron_4b",
+    "qwen3-4b": "repro.configs.qwen3_4b",
+    "deepseek-moe-16b": "repro.configs.deepseek_moe_16b",
+    "llama4-maverick-400b-a17b": "repro.configs.llama4_maverick",
+    "nequip": "repro.configs.nequip",
+    "bert4rec": "repro.configs.bert4rec",
+    "din": "repro.configs.din",
+    "deepfm": "repro.configs.deepfm",
+    "dlrm-rm2": "repro.configs.dlrm_rm2",
+    "lear-msn1": "repro.configs.lear_msn1",
+}
+
+ASSIGNED_ARCHS = tuple(k for k in _MODULES if k != "lear-msn1")
+
+
+def list_archs() -> tuple[str, ...]:
+    return tuple(_MODULES)
+
+
+def get_config(name: str) -> ArchConfig:
+    return importlib.import_module(_MODULES[name]).config()
+
+
+def get_smoke_config(name: str) -> ArchConfig:
+    return importlib.import_module(_MODULES[name]).smoke_config()
+
+
+__all__ = [
+    "ArchConfig",
+    "ForestConfig",
+    "NequIPConfig",
+    "RecSysConfig",
+    "ShapeSpec",
+    "TransformerConfig",
+    "ASSIGNED_ARCHS",
+    "list_archs",
+    "get_config",
+    "get_smoke_config",
+]

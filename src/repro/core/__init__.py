@@ -1,0 +1,36 @@
+"""LEAR — the paper's contribution: learned early-exit for additive ranking
+ensembles, plus the heuristic baselines it is evaluated against.
+
+- :mod:`repro.core.strategies` — ERT / EPT (Cambazoglu et al. 2010) and the
+  per-query oracle EE_ideal, all as pure vectorized functions over padded
+  ``[Q, D]`` blocks.
+- :mod:`repro.core.lear` — LEAR itself: sentinel feature augmentation,
+  Continue/Exit label construction, cost-sensitive weighting
+  ``w_d = 2^{r_d}/f_q(l_d)``, 10-tree logistic GBDT classifier.
+- :mod:`repro.core.cascade` — the execution engine: sentinel-partitioned
+  ensemble traversal with batch compaction (the TPU realization of
+  document-level early exit).
+"""
+
+from repro.core.strategies import ert_continue, ept_continue, ideal_continue
+from repro.core.lear import (
+    LearClassifier,
+    augment_features,
+    build_continue_labels,
+    instance_weights,
+    train_lear,
+)
+from repro.core.cascade import CascadeRanker, CascadeResult
+
+__all__ = [
+    "ert_continue",
+    "ept_continue",
+    "ideal_continue",
+    "LearClassifier",
+    "augment_features",
+    "build_continue_labels",
+    "instance_weights",
+    "train_lear",
+    "CascadeRanker",
+    "CascadeResult",
+]

@@ -1,0 +1,111 @@
+"""Sentinel-partitioned cascade execution — early exit as batch compaction.
+
+Two execution paths with identical ranking semantics:
+
+- :meth:`CascadeRanker.rank` — *reference* path: scores every document
+  through head and tail, applies the continue mask arithmetically. Used for
+  quality evaluation and as the oracle for the compacted path. Cost is
+  accounted in the paper's currency (trees traversed), not saved.
+- :meth:`CascadeRanker.rank_compacted` — *production* path: after the
+  sentinel, surviving documents are gathered into a dense prefix (one
+  stable argsort over the exit mask) and ONLY that compacted block runs the
+  tail trees through the Pallas kernel. This is the TPU realization of
+  document-level early exit: the saved work is the reduced doc dimension of
+  the dominant kernel. A static ``capacity`` bounds the compacted block so
+  the step stays jit-compatible; overflow documents (beyond capacity)
+  continue anyway — quality is never sacrificed silently.
+
+The strategy is injected as a callable ``(partial, mask, aux) → continue
+mask`` so LEAR / ERT / EPT / EE_ideal all run through the same engine.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial as _partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.forest.ensemble import TreeEnsemble, slice_trees
+from repro.forest.scoring import score_bitvector
+from repro.kernels.ops import forest_score
+from repro.metrics.speedup import speedup_vs_full
+
+
+@dataclasses.dataclass
+class CascadeResult:
+    scores: jax.Array          # [Q, D] final scores (exited docs keep partial)
+    continue_mask: jax.Array   # [Q, D]
+    speedup: float             # trees-traversed speedup vs Full
+    overflow: int = 0          # docs beyond compaction capacity (0 = exact)
+
+
+@dataclasses.dataclass
+class CascadeRanker:
+    ensemble: TreeEnsemble
+    sentinel: int
+    strategy: Callable[..., jax.Array]
+    classifier_trees: int = 0   # extra per-doc cost charged for the strategy
+
+    def _head_tail(self):
+        head = slice_trees(self.ensemble, 0, self.sentinel)
+        tail = slice_trees(self.ensemble, self.sentinel, self.ensemble.n_trees)
+        return head, tail
+
+    def rank(self, X: jax.Array, mask: jax.Array, **strategy_kwargs) -> CascadeResult:
+        """Reference path: full compute, masked combine."""
+        Q, D, F = X.shape
+        flat = X.reshape(Q * D, F)
+        head, tail = self._head_tail()
+        partial = score_bitvector(head, flat).reshape(Q, D)
+        cont = self.strategy(partial, mask, **strategy_kwargs)
+        tail_scores = score_bitvector(tail, flat).reshape(Q, D)
+        scores = jnp.where(cont, partial + tail_scores, partial)
+        sp = speedup_vs_full(
+            cont, mask, self.sentinel, self.ensemble.n_trees, self.classifier_trees
+        )
+        return CascadeResult(scores=scores, continue_mask=cont, speedup=sp)
+
+    def rank_compacted(
+        self,
+        X: jax.Array,
+        mask: jax.Array,
+        capacity: int,
+        **strategy_kwargs,
+    ) -> CascadeResult:
+        """Production path: tail trees see only the compacted survivors."""
+        Q, D, F = X.shape
+        head, tail = self._head_tail()
+        partial = forest_score(head, X.reshape(Q * D, F)).reshape(Q, D)
+        cont = self.strategy(partial, mask, **strategy_kwargs)
+        scores, n_cont = _compacted_tail(
+            X, partial, cont, tail, capacity
+        )
+        overflow = int(jnp.maximum(n_cont - capacity, 0))
+        sp = speedup_vs_full(
+            cont, mask, self.sentinel, self.ensemble.n_trees, self.classifier_trees
+        )
+        return CascadeResult(
+            scores=scores, continue_mask=cont, speedup=sp, overflow=overflow
+        )
+
+
+@_partial(jax.jit, static_argnames=("capacity",))
+def _compacted_tail(X, partial, cont, tail: TreeEnsemble, capacity: int):
+    """Gather survivors → dense block of ``capacity`` → tail kernel → scatter."""
+    Q, D, F = X.shape
+    flat_cont = cont.reshape(Q * D)
+    n_cont = flat_cont.sum()
+    # Stable partition: surviving indices first, padding (any index) after.
+    order = jnp.argsort(~flat_cont, stable=True)
+    sel = order[:capacity]                                     # [C]
+    x_sel = X.reshape(Q * D, F)[sel]                           # [C, F]
+    tail_sel = forest_score(tail, x_sel)                       # [C]
+    valid = jnp.arange(capacity) < n_cont
+    deltas = jnp.zeros((Q * D,), jnp.float32).at[sel].add(
+        jnp.where(valid, tail_sel, 0.0)
+    )
+    scores = partial + deltas.reshape(Q, D)
+    return scores, n_cont

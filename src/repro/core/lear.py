@@ -1,0 +1,148 @@
+"""LEAR: the learned early-exit classifier (the paper's §2 contribution).
+
+Pipeline (faithful to the paper):
+
+1. Score the classifier-training split through the FULL λ-MART ensemble and
+   through the first ``s`` trees (sentinel partials).
+2. **Labels** — ``Continue`` = documents that are relevant (label > 0) AND
+   ranked in the full ensemble's top-``k`` (k = 15); everything else is
+   ``Exit``.
+3. **Augmented representation** — the original query-document features plus
+   four sentinel-time signals: partial score, rank at the sentinel,
+   per-query min–max-normalized partial score, and the query's candidate
+   count.
+4. **Cost-sensitive weights** — ``w_d = 2^{r_d} / f_q(l_d)`` with ``f_q``
+   the per-query frequency of the document's Continue/Exit label.
+5. **Classifier** — a small 10-tree GBDT minimizing weighted logistic loss
+   (same trainer family as the ranker, mirroring LightGBM-on-LightGBM).
+6. At serving time, ``Continue`` ⇔ P(Continue) ≥ confidence threshold; the
+   threshold sweeps the efficiency/effectiveness trade-off (paper Fig. 2).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.forest.ensemble import TreeEnsemble
+from repro.forest.gbdt import GBDTParams, train_gbdt
+from repro.forest.scoring import score_bitvector
+from repro.metrics.ranking import rank_from_scores
+
+N_AUG = 4  # sentinel-time features appended to the q-d vector
+
+
+def augment_features(
+    X: jax.Array,         # [Q, D, F]
+    partial: jax.Array,   # [Q, D]
+    mask: jax.Array,      # [Q, D]
+) -> jax.Array:
+    """Append the four sentinel-time features → [Q, D, F + 4]."""
+    ranks = rank_from_scores(partial, mask).astype(jnp.float32)
+    lo = jnp.where(mask, partial, jnp.inf).min(axis=-1, keepdims=True)
+    hi = jnp.where(mask, partial, -jnp.inf).max(axis=-1, keepdims=True)
+    norm = (partial - lo) / jnp.maximum(hi - lo, 1e-9)
+    n_cand = mask.sum(axis=-1, keepdims=True).astype(jnp.float32)
+    aug = jnp.stack(
+        [
+            partial,
+            ranks,
+            jnp.clip(norm, 0.0, 1.0),
+            jnp.broadcast_to(n_cand, partial.shape),
+        ],
+        axis=-1,
+    )
+    aug = jnp.where(mask[..., None], aug, 0.0)
+    return jnp.concatenate([X, aug], axis=-1)
+
+
+def build_continue_labels(
+    full_scores: jax.Array,  # [Q, D] scores of the complete ensemble
+    rel_labels: jax.Array,   # [Q, D] graded relevance
+    mask: jax.Array,
+    k: int = 15,
+) -> jax.Array:
+    """Continue = relevant AND in the full ensemble's top-k (paper §2)."""
+    final_rank = rank_from_scores(full_scores, mask)
+    return mask & (rel_labels > 0) & (final_rank < k)
+
+
+def instance_weights(
+    continue_labels: jax.Array,  # [Q, D] bool
+    rel_labels: jax.Array,       # [Q, D]
+    mask: jax.Array,
+) -> jax.Array:
+    """w_d = 2^{r_d} / f_q(l_d); f_q = per-query frequency of d's class."""
+    n = jnp.maximum(mask.sum(axis=-1, keepdims=True), 1).astype(jnp.float32)
+    n_cont = (continue_labels & mask).sum(axis=-1, keepdims=True).astype(jnp.float32)
+    f_cont = jnp.maximum(n_cont, 1.0) / n
+    f_exit = jnp.maximum(n - n_cont, 1.0) / n
+    f = jnp.where(continue_labels, f_cont, f_exit)
+    w = jnp.exp2(rel_labels.astype(jnp.float32)) / f
+    return jnp.where(mask, w, 0.0)
+
+
+@dataclasses.dataclass
+class LearClassifier:
+    """The trained Continue/Exit forest + its sentinel."""
+
+    forest: TreeEnsemble
+    sentinel: int
+
+    @property
+    def n_trees(self) -> int:
+        return self.forest.n_trees
+
+    def prob_continue(self, X_aug: jax.Array) -> jax.Array:
+        """P(Continue) for augmented features [Q, D, F+4] → [Q, D]."""
+        Q, D, F = X_aug.shape
+        logits = score_bitvector(self.forest, X_aug.reshape(Q * D, F))
+        return jax.nn.sigmoid(logits).reshape(Q, D)
+
+    def continue_mask(self, X_aug, mask, threshold: float) -> jax.Array:
+        """Continue ⇔ P(Continue) ≥ threshold. Higher = more aggressive EE."""
+        return mask & (self.prob_continue(X_aug) >= threshold)
+
+
+def train_lear(
+    X: np.ndarray,            # [Q, D, F] classifier-train split
+    rel_labels: np.ndarray,   # [Q, D]
+    mask: np.ndarray,         # [Q, D]
+    ranker: TreeEnsemble,
+    sentinel: int,
+    k: int = 15,
+    params: GBDTParams | None = None,
+) -> LearClassifier:
+    """Train the LEAR classifier against a frozen λ-MART ranker."""
+    # Depth-5 / lr-0.2 selected on the tune split (the paper fine-tunes the
+    # classifier with HyperOpt): the shallower forest is better calibrated
+    # on the minority Continue class at low thresholds.
+    params = params or GBDTParams(
+        n_trees=10, depth=5, learning_rate=0.2, reg_lambda=1.0
+    )
+    Q, D, F = X.shape
+    flat = jnp.asarray(X.reshape(Q * D, F))
+    _, per_tree = score_bitvector(ranker, flat, return_per_tree=True)
+    partial = (
+        per_tree[:, :sentinel].sum(axis=1) + ranker.base_score
+    ).reshape(Q, D)
+    full = (per_tree.sum(axis=1) + ranker.base_score).reshape(Q, D)
+
+    mask_j = jnp.asarray(mask)
+    rel_j = jnp.asarray(rel_labels)
+    cont = build_continue_labels(full, rel_j, mask_j, k=k)
+    w = instance_weights(cont, rel_j, mask_j)
+    X_aug = augment_features(jnp.asarray(X), partial, mask_j)
+
+    Fa = F + N_AUG
+    forest = train_gbdt(
+        np.asarray(X_aug).reshape(Q * D, Fa),
+        np.asarray(cont).reshape(-1).astype(np.float32),
+        params,
+        objective="logistic",
+        weights=np.asarray(w).reshape(-1),
+    )
+    return LearClassifier(forest=forest, sentinel=sentinel)

@@ -1,0 +1,69 @@
+"""Heuristic early-exit baselines (Cambazoglu et al., WSDM'10) + the oracle.
+
+All strategies act at a sentinel: given per-document *partial* scores after
+``s`` trees, return the boolean ``continue`` mask over padded ``[Q, D]``
+blocks. Exited documents keep their partial score as final score.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.metrics.ranking import rank_from_scores
+
+NEG = -1e30
+
+
+def ert_continue(partial: jax.Array, mask: jax.Array, k_s: int) -> jax.Array:
+    """EE Using Rank Thresholds: keep the top-``k_s`` by partial score."""
+    ranks = rank_from_scores(partial, mask)
+    return mask & (ranks < k_s)
+
+
+def ept_continue(partial: jax.Array, mask: jax.Array, k_s: int, p: float) -> jax.Array:
+    """EE Using Proximity Thresholds: keep docs with score ≥ σ_{k_s} − p.
+
+    σ_{k_s} is the k_s-th best partial score of the query; larger ``p``
+    keeps more documents (more conservative).
+    """
+    masked = jnp.where(mask, partial, NEG)
+    kth = jax.lax.top_k(masked, k_s)[0][..., -1]            # [Q]
+    return mask & (partial >= (kth - p)[..., None])
+
+
+def ideal_continue(
+    partial: jax.Array,
+    full: jax.Array,
+    labels: jax.Array,
+    mask: jax.Array,
+    k: int = 10,
+) -> tuple[jax.Array, jax.Array]:
+    """EE_ideal: per-query oracle cut k_s^q (paper §2, Table 1).
+
+    The paper's oracle selects, per query, the **minimum** rank cut at the
+    sentinel such that NDCG@k of the merged ranking (continuing docs score
+    with the full ensemble, exited docs keep their partial score) equals
+    the full ensemble's NDCG@k. This accounts for exited documents
+    intruding into the top-k with partial scores — keeping the final top-k
+    alone is not sufficient.
+
+    Returns ``(continue_mask, k_s^q)`` so Table 1's k_s^μ / k_s^σ can be
+    reported.
+    """
+    from repro.metrics.ranking import ndcg_at_k  # local import to avoid cycle
+
+    sent_rank = rank_from_scores(partial, mask)
+    ndcg_full = ndcg_at_k(full, labels, mask, k)                   # [Q]
+    D = partial.shape[-1]
+
+    def ndcg_at_cut(c):
+        cont = mask & (sent_rank < c)
+        scores = jnp.where(cont, full, partial)
+        return ndcg_at_k(scores, labels, mask, k)                  # [Q]
+
+    ndcgs = jax.lax.map(ndcg_at_cut, jnp.arange(D + 1))            # [D+1, Q]
+    ok = ndcgs >= ndcg_full[None, :] - 1e-9
+    first = jnp.argmax(ok, axis=0)                                 # first True
+    cut = jnp.where(ok.any(axis=0), first, D)
+    return mask & (sent_rank < cut[:, None]), cut

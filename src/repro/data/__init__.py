@@ -1,0 +1,13 @@
+from repro.data.synthetic import LetorDataset, make_letor_dataset, PRESETS
+from repro.data.pipeline import TokenPipeline, QueryBatcher
+from repro.data.graph_sampler import CSRGraph, sample_neighbors
+
+__all__ = [
+    "LetorDataset",
+    "make_letor_dataset",
+    "PRESETS",
+    "TokenPipeline",
+    "QueryBatcher",
+    "CSRGraph",
+    "sample_neighbors",
+]

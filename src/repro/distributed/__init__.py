@@ -1,0 +1,23 @@
+from repro.distributed.sharding import (
+    Rules,
+    single_pod_rules,
+    multi_pod_rules,
+    local_rules,
+    sharding_rules,
+    current_rules,
+    constrain,
+    resolve,
+    spec_to_sharding,
+)
+
+__all__ = [
+    "Rules",
+    "single_pod_rules",
+    "multi_pod_rules",
+    "local_rules",
+    "sharding_rules",
+    "current_rules",
+    "constrain",
+    "resolve",
+    "spec_to_sharding",
+]

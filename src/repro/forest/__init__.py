@@ -1,0 +1,39 @@
+"""Tree-ensemble substrate: tensorized forests, scoring, and GBDT training.
+
+The paper's workload is an additive ensemble of regression trees (λ-MART).
+This package provides:
+
+- :mod:`repro.forest.ensemble` — the tensorized ``TreeEnsemble`` pytree with
+  QuickScorer-style false-node bitmasks, padded to ``[n_trees, n_nodes]``.
+- :mod:`repro.forest.scoring` — pure-jnp reference scorers (bitvector and
+  level-by-level traversal) used as oracles for the Pallas kernel.
+- :mod:`repro.forest.binning` — quantile feature binning (256 bins).
+- :mod:`repro.forest.gbdt` — histogram-based, level-wise GBDT trainer in JAX
+  (L2 / logistic / LambdaRank objectives, per-instance weights).
+- :mod:`repro.forest.lambdamart` — NDCG lambda gradients for λ-MART.
+"""
+
+from repro.forest.ensemble import TreeEnsemble, slice_trees, concat_ensembles
+from repro.forest.scoring import (
+    score_bitvector,
+    score_level,
+    score_numpy_oracle,
+    partial_scores,
+)
+from repro.forest.binning import quantile_bins, apply_bins
+from repro.forest.gbdt import GBDTParams, train_gbdt, train_lambdamart
+
+__all__ = [
+    "TreeEnsemble",
+    "slice_trees",
+    "concat_ensembles",
+    "score_bitvector",
+    "score_level",
+    "score_numpy_oracle",
+    "partial_scores",
+    "quantile_bins",
+    "apply_bins",
+    "GBDTParams",
+    "train_gbdt",
+    "train_lambdamart",
+]

@@ -1,0 +1,147 @@
+"""Pallas TPU kernel: additive tree-ensemble scoring (QuickScorer, TPU-native).
+
+Tiling
+------
+Grid ``(B / BB, T / BT)``; docs are the parallel axis, tree-blocks the
+sequential (minor) accumulation axis. Per grid step, VMEM holds:
+
+- one doc block      ``x        [BB, F]``   (f32)
+- one tree block     ``feature  [BT, N]`` / ``threshold [BT, N]`` (i32/f32)
+-                    ``mask_lo/hi [BT, N]`` (u32, QuickScorer false-node masks)
+-                    ``leaf_value [BT, L]`` (f32)
+- the output block   ``scores   [BB]``     (f32, accumulated across tree blocks)
+
+Algorithm (per doc block × tree block)
+--------------------------------------
+1. **Feature gather as MXU matmul** — the CPU algorithm's per-node feature
+   load becomes ``x [BB, F] @ onehot(feature)ᵀ [F, BT·N]``, a dense matmul
+   the MXU executes at full rate. One-hot is built in-register from a lane
+   iota; no gather instruction is emitted.
+2. Node predicates ``x_f <= θ`` select either the all-ones word or the
+   node's false-mask (two u32 lanes).
+3. Order-free AND-reduction over the node axis (contiguous-halves tree
+   reduction — legal because AND is associative/commutative).
+4. Exit leaf = count-trailing-zeros via ``popcount(~m & (m−1))`` on the two
+   lanes, then leaf values are contracted against an in-register one-hot
+   (small ``[BB, BT, L]`` elementwise-sum, VPU work).
+5. Tree-block partial scores accumulate into the output block; the first
+   tree step zero-initializes.
+
+VMEM budget (defaults ``BB=256, BT=16, N=63→64, L=64, F≤256``):
+x 256·256·4 = 256 KiB; node tables 16·64·(4+4+4+4+4) ≈ 20 KiB;
+onehot intermediate 256·1024·4 = 1 MiB; masks 256·16·64·4·2 = 2 MiB →
+well under the ~16 MiB/core VMEM envelope with double buffering.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+ALL_ONES = np.uint32(0xFFFFFFFF)
+
+
+def _ctz64(hi: jax.Array, lo: jax.Array) -> jax.Array:
+    lo_nz = lo != 0
+    m = jnp.where(lo_nz, lo, hi)
+    ctz32 = jax.lax.population_count(~m & (m - jnp.uint32(1)))
+    return jnp.where(lo_nz, ctz32, ctz32 + jnp.uint32(32)).astype(jnp.int32)
+
+
+def _forest_score_kernel(
+    x_ref,        # [BB, F] f32
+    feat_ref,     # [BT, N] i32
+    thr_ref,      # [BT, N] f32
+    mlo_ref,      # [BT, N] u32
+    mhi_ref,      # [BT, N] u32
+    leaf_ref,     # [BT, L] f32
+    out_ref,      # [BB] f32 (accumulated over tree-block grid axis)
+):
+    x = x_ref[...]
+    feat = feat_ref[...]
+    BB, F = x.shape
+    BT, N = feat.shape
+    L = leaf_ref.shape[1]
+
+    # (1) Feature gather via one-hot MXU matmul: xf[b, t*N+n] = x[b, feat[t,n]].
+    flat_feat = feat.reshape(BT * N)
+    onehot = (flat_feat[:, None] == jax.lax.iota(jnp.int32, F)[None, :]).astype(x.dtype)
+    xf = jax.lax.dot_general(
+        x, onehot,
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ).reshape(BB, BT, N)
+
+    # (2) Predicates → mask selection.
+    pred_true = xf <= thr_ref[...][None, :, :]
+    m_lo = jnp.where(pred_true, ALL_ONES, mlo_ref[...][None, :, :])
+    m_hi = jnp.where(pred_true, ALL_ONES, mhi_ref[...][None, :, :])
+
+    # (3) AND tree-reduction over nodes (N padded to a power of two upstream).
+    n = N
+    while n > 1:
+        half = n // 2
+        m_lo = m_lo[..., :half] & m_lo[..., half:n]
+        m_hi = m_hi[..., :half] & m_hi[..., half:n]
+        n = half
+    and_lo = m_lo[..., 0]
+    and_hi = m_hi[..., 0]
+
+    # (4) Exit leaf → leaf-value contraction.
+    leaf = _ctz64(and_hi, and_lo)                                   # [BB, BT]
+    leaf_onehot = (
+        leaf[:, :, None] == jax.lax.iota(jnp.int32, L)[None, None, :]
+    ).astype(jnp.float32)
+    per_tree = jnp.sum(leaf_onehot * leaf_ref[...][None, :, :], axis=2)  # [BB, BT]
+    partial = per_tree.sum(axis=1)                                  # [BB]
+
+    # (5) Accumulate across the sequential tree-block axis.
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    out_ref[...] += partial
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_b", "block_t", "interpret")
+)
+def forest_score_pallas(
+    x: jax.Array,          # [B, F] f32 (B % block_b == 0, F lane-padded)
+    feature: jax.Array,    # [T, N] i32 (T % block_t == 0, N power of two)
+    threshold: jax.Array,  # [T, N] f32
+    mask_lo: jax.Array,    # [T, N] u32
+    mask_hi: jax.Array,    # [T, N] u32
+    leaf_value: jax.Array,  # [T, L] f32
+    *,
+    block_b: int = 256,
+    block_t: int = 16,
+    interpret: bool = True,
+) -> jax.Array:
+    B, F = x.shape
+    T, N = feature.shape
+    L = leaf_value.shape[1]
+    assert B % block_b == 0 and T % block_t == 0, (B, block_b, T, block_t)
+    assert N & (N - 1) == 0, f"node axis must be a power of two, got {N}"
+
+    grid = (B // block_b, T // block_t)
+    tree_spec = lambda n: pl.BlockSpec((block_t, n), lambda i, j: (j, 0))
+    return pl.pallas_call(
+        _forest_score_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, F), lambda i, j: (i, 0)),
+            tree_spec(N),
+            tree_spec(N),
+            tree_spec(N),
+            tree_spec(N),
+            tree_spec(L),
+        ],
+        out_specs=pl.BlockSpec((block_b,), lambda i, j: (i,)),
+        out_shape=jax.ShapeDtypeStruct((B,), jnp.float32),
+        interpret=interpret,
+    )(x, feature, threshold, mask_lo, mask_hi, leaf_value)

@@ -1,0 +1,69 @@
+"""Jit'd public wrapper around the Pallas forest-scoring kernel.
+
+Handles padding to kernel alignment (doc blocks, tree blocks, power-of-two
+node axis, lane-padded feature axis) and unpadding of the result. On CPU
+(this container) the kernel runs in interpret mode; on TPU it compiles to
+Mosaic.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.forest.ensemble import TreeEnsemble
+from repro.kernels.forest_score import forest_score_pallas
+
+LANE = 128
+
+
+def _pad_to(x: jax.Array, axis: int, multiple: int, value=0):
+    size = x.shape[axis]
+    pad = (-size) % multiple
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+def _next_pow2(n: int) -> int:
+    return 1 << (n - 1).bit_length()
+
+
+def forest_score(
+    ens: TreeEnsemble,
+    X: jax.Array,
+    *,
+    block_b: int = 256,
+    block_t: int = 16,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Score ``X: [B, F]`` through the ensemble with the Pallas kernel."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    B, F = X.shape
+    T, N = ens.feature.shape
+
+    block_b = min(block_b, _next_pow2(max(B, 8)))
+    block_t = min(block_t, _next_pow2(max(T, 1)))
+
+    x = _pad_to(X.astype(jnp.float32), 0, block_b)
+    x = _pad_to(x, 1, LANE)
+    n_pad = _next_pow2(max(N, 2))
+    # Padded nodes: threshold +inf ⇒ predicate always true ⇒ all-ones mask.
+    feat = _pad_to(_pad_to(ens.feature, 1, n_pad), 0, block_t)
+    thr = _pad_to(_pad_to(ens.threshold.astype(jnp.float32), 1, n_pad, np.inf),
+                  0, block_t, np.inf)
+    ones = np.uint32(0xFFFFFFFF)
+    mlo = _pad_to(_pad_to(ens.mask_lo, 1, n_pad, ones), 0, block_t, ones)
+    mhi = _pad_to(_pad_to(ens.mask_hi, 1, n_pad, ones), 0, block_t, ones)
+    # Padded trees: leaf values 0 ⇒ contribute nothing.
+    leaf = _pad_to(ens.leaf_value.astype(jnp.float32), 0, block_t)
+
+    scores = forest_score_pallas(
+        x, feat, thr, mlo, mhi, leaf,
+        block_b=block_b, block_t=block_t, interpret=interpret,
+    )
+    return scores[:B] + ens.base_score

@@ -1,0 +1,33 @@
+"""Pure-jnp oracle for the forest-scoring kernel (no Pallas).
+
+Semantically identical to :func:`repro.forest.scoring.score_bitvector`, kept
+self-contained here per the kernels/ convention so the kernel test sweep has
+a dependency-free reference.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+ALL_ONES = jnp.uint32(0xFFFFFFFF)
+
+
+def _ctz64(hi, lo):
+    lo_nz = lo != 0
+    m = jnp.where(lo_nz, lo, hi)
+    ctz32 = jax.lax.population_count(~m & (m - jnp.uint32(1)))
+    return jnp.where(lo_nz, ctz32, ctz32 + jnp.uint32(32)).astype(jnp.int32)
+
+
+def forest_score_ref(x, feature, threshold, mask_lo, mask_hi, leaf_value):
+    """x: [B, F]; tree arrays [T, N] / [T, L] → scores [B] f32."""
+    xf = x[:, feature]                                  # [B, T, N]
+    pred_true = xf <= threshold[None]
+    m_lo = jnp.where(pred_true, ALL_ONES, mask_lo[None])
+    m_hi = jnp.where(pred_true, ALL_ONES, mask_hi[None])
+    and_lo = jax.lax.reduce(m_lo, ALL_ONES, jax.lax.bitwise_and, dimensions=(2,))
+    and_hi = jax.lax.reduce(m_hi, ALL_ONES, jax.lax.bitwise_and, dimensions=(2,))
+    leaf = _ctz64(and_hi, and_lo)                       # [B, T]
+    per_tree = jnp.take_along_axis(leaf_value[None], leaf[:, :, None], axis=2)[..., 0]
+    return per_tree.sum(axis=1).astype(jnp.float32)

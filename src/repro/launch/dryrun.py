@@ -1,0 +1,199 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell this:
+1. builds the production mesh (16×16 single-pod / 2×16×16 multi-pod),
+2. resolves the arch's logical axes against the mesh rules,
+3. ``jax.jit(step, in_shardings=…).lower(abstract_state, input_specs)``,
+4. ``.compile()`` — proving the sharded program is coherent (no sharding
+   mismatches, no unsupported collectives, memory fits),
+5. records ``memory_analysis()`` / ``cost_analysis()`` / the roofline terms
+   to ``artifacts/dryrun/<cell>.json`` for EXPERIMENTS.md.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-4b \
+        --shape train_4k --multi-pod
+    PYTHONPATH=src python -m repro.launch.dryrun --all
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs import ASSIGNED_ARCHS, get_config, list_archs
+from repro.configs.base import TransformerConfig
+from repro.distributed.sharding import (
+    multi_pod_rules,
+    sharding_rules,
+    single_pod_rules,
+)
+from repro.launch.mesh import make_production_mesh
+from repro.launch import roofline as rf
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "../../../artifacts/dryrun")
+
+
+def is_logical(x) -> bool:
+    return isinstance(x, tuple) and all(
+        isinstance(e, (str, type(None))) for e in x
+    )
+
+
+def to_shardings(mesh, rules, logical_tree):
+    return jax.tree.map(
+        lambda lg: jax.sharding.NamedSharding(mesh, rules.resolve(*lg)),
+        logical_tree,
+        is_leaf=is_logical,
+    )
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             override_cfg=None) -> dict:
+    from repro.models.api import make_cell
+
+    cfg = override_cfg or get_config(arch)
+    shapes = {s.name: s for s in cfg.shapes}
+    shape = shapes[shape_name]
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    record = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "kind": shape.kind,
+    }
+    if shape.skip_reason:
+        record["skipped"] = shape.skip_reason
+        return record, None
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = multi_pod_rules() if multi_pod else single_pod_rules()
+    cell = make_cell(cfg, shape)
+
+    t0 = time.time()
+    with sharding_rules(rules), jax.sharding.set_mesh(mesh):
+        state_sh = to_shardings(mesh, rules, cell.state_logical())
+        input_sh = to_shardings(mesh, rules, cell.input_logical())
+        lowered = jax.jit(
+            cell.step, in_shardings=(state_sh, input_sh)
+        ).lower(cell.abstract_state(), cell.input_specs())
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+        mem = compiled.memory_analysis()
+        chips = mesh.devices.size
+        model_flops = (
+            rf.lm_model_flops(cfg, shape)
+            if isinstance(cfg, TransformerConfig) else 0.0
+        )
+        hlo_text = compiled.as_text()
+        roof = rf.roofline(compiled, chips=chips, model_flops=model_flops,
+                           hlo_text=hlo_text)
+
+    record.update(
+        {
+            "lower_s": round(t_lower, 1),
+            "compile_s": round(t_compile, 1),
+            "chips": chips,
+            "memory": _mem_dict(mem, chips),
+            "roofline": roof.to_dict(),
+        }
+    )
+    return record, hlo_text
+
+
+def _mem_dict(mem, chips: int) -> dict:
+    out = {}
+    for field in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "generated_code_size_in_bytes"):
+        v = getattr(mem, field, None)
+        if v is not None:
+            out[field] = int(v)
+    # XLA:CPU reports whole-program sizes; per-device = /chips under SPMD.
+    if "argument_size_in_bytes" in out:
+        out["per_device_total_gib"] = round(
+            (out.get("argument_size_in_bytes", 0)
+             + out.get("output_size_in_bytes", 0)
+             + out.get("temp_size_in_bytes", 0)) / chips / 2**30, 3
+        )
+    return out
+
+
+def all_cells(include_forest: bool = True):
+    archs = list(ASSIGNED_ARCHS) + (["lear-msn1"] if include_forest else [])
+    for arch in archs:
+        cfg = get_config(arch)
+        for shape in cfg.shapes:
+            for multi_pod in (False, True):
+                yield arch, shape.name, multi_pod
+
+
+def main():
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", choices=list_archs())
+    p.add_argument("--shape")
+    p.add_argument("--multi-pod", action="store_true")
+    p.add_argument("--all", action="store_true")
+    p.add_argument("--out", default=None)
+    args = p.parse_args()
+
+    out_dir = args.out or os.path.normpath(ARTIFACTS)
+    os.makedirs(out_dir, exist_ok=True)
+
+    if args.all:
+        cells = list(all_cells())
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch, args.shape, args.multi_pod)]
+
+    failures = 0
+    for arch, shape, multi_pod in cells:
+        mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+        tag = f"{arch}__{shape}__{mesh_name}".replace("/", "_")
+        path = os.path.join(out_dir, tag + ".json")
+        if os.path.exists(path):
+            with open(path) as f:
+                cached = json.load(f)
+            if "error" not in cached:
+                print(f"[skip-cached] {tag}")
+                continue
+        print(f"[dryrun] {tag} ...", flush=True)
+        try:
+            record, hlo_text = run_cell(arch, shape, multi_pod)
+        except Exception as e:  # noqa: BLE001 — record and continue
+            failures += 1
+            record, hlo_text = {
+                "arch": arch, "shape": shape, "mesh": mesh_name,
+                "error": f"{type(e).__name__}: {e}",
+                "traceback": traceback.format_exc()[-2000:],
+            }, None
+            print(f"  FAILED: {record['error']}", flush=True)
+        with open(path, "w") as f:
+            json.dump(record, f, indent=1)
+        if hlo_text is not None:
+            import gzip
+
+            with gzip.open(os.path.join(out_dir, tag + ".hlo.gz"), "wt") as f:
+                f.write(hlo_text)
+        if "roofline" in record:
+            r = record["roofline"]
+            print(
+                f"  ok: compile={record['compile_s']}s "
+                f"compute={r['compute_s']:.2e}s memory={r['memory_s']:.2e}s "
+                f"coll={r['collective_s']:.2e}s dominant={r['dominant']}",
+                flush=True,
+            )
+        elif "skipped" in record:
+            print(f"  skipped: {record['skipped']}", flush=True)
+    print(f"done, {failures} failures")
+    return failures
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,33 @@
+"""Production mesh construction.
+
+Single pod: 16 × 16 = 256 chips, axes ("data", "model").
+Multi-pod:  2 × 16 × 16 = 512 chips, axes ("pod", "data", "model") — the
+"pod" axis is an additional data-parallel dimension with slower (DCI)
+links; logical rules place only batch-like axes (and the widest expert
+dimension) on it.
+
+``make_production_mesh`` is a FUNCTION so importing this module never
+touches jax device state; callers (dryrun.py) must set
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
+import.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )
+
+
+def make_local_mesh() -> jax.sharding.Mesh:
+    """1×1 mesh over the single local device — CPU tests of the mesh path."""
+    return jax.make_mesh(
+        (1, 1), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2,
+    )

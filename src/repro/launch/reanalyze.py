@@ -1,0 +1,49 @@
+"""Re-derive roofline records from saved .hlo.gz artifacts (no recompile).
+
+    PYTHONPATH=src python -m repro.launch.reanalyze
+"""
+
+from __future__ import annotations
+
+import glob
+import gzip
+import json
+import os
+
+from repro.configs import get_config
+from repro.configs.base import TransformerConfig
+from repro.launch import roofline as rf
+
+ART = os.path.normpath(
+    os.path.join(os.path.dirname(__file__), "../../../artifacts/dryrun")
+)
+
+
+def main():
+    for path in sorted(glob.glob(os.path.join(ART, "*.json"))):
+        with open(path) as f:
+            record = json.load(f)
+        if "skipped" in record or "error" in record:
+            continue
+        hlo_path = path.replace(".json", ".hlo.gz")
+        if not os.path.exists(hlo_path):
+            continue
+        with gzip.open(hlo_path, "rt") as f:
+            hlo = f.read()
+        cfg = get_config(record["arch"])
+        shape = {s.name: s for s in cfg.shapes}[record["shape"]]
+        model_flops = (
+            rf.lm_model_flops(cfg, shape)
+            if isinstance(cfg, TransformerConfig) else 0.0
+        )
+        roof = rf.roofline(None, chips=record["chips"],
+                           model_flops=model_flops, hlo_text=hlo)
+        record["roofline"] = roof.to_dict()
+        with open(path, "w") as f:
+            json.dump(record, f, indent=1)
+        print(os.path.basename(path), roof.dominant,
+              f"bound={roof.bound_s:.3e}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,167 @@
+"""Roofline term extraction from compiled dry-run artifacts.
+
+Three terms per (arch × shape × mesh), in seconds (TPU v5e constants):
+
+    compute    = HLO_FLOPs            / (chips × 197e12 FLOP/s bf16)
+    memory     = HLO_bytes_accessed   / (chips × 819e9  B/s HBM)
+    collective = collective_bytes     / (chips × 50e9   B/s ICI per link)
+
+``cost_analysis()`` supplies FLOPs and bytes. Collective bytes are parsed
+from the post-optimization HLO (``compiled.as_text()``): we sum the result
+shapes of every all-reduce / all-gather / reduce-scatter / all-to-all /
+collective-permute, with all-reduce counted twice (ring = reduce-scatter +
+all-gather). This is the standard static estimate; it ignores link
+contention and overlap (the §Perf log reasons about both explicitly).
+
+MODEL_FLOPS (6·N·D dense / 6·N_active·D MoE) is computed per arch so the
+useful-compute ratio exposes remat and dispatch overheads.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+
+PEAK_FLOPS = 197e12        # bf16 / chip
+HBM_BW = 819e9             # B/s / chip
+ICI_BW = 50e9              # B/s / link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict[str, int]:
+    """Per-collective-kind summed result bytes from post-opt HLO."""
+    out: dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        m = re.match(r"(?:ROOT )?%?[\w.\-]+ = (.+?) (\w[\w\-]*)\(", stripped)
+        if not m:
+            continue
+        shape_str, op = m.groups()
+        for kind in _COLLECTIVES:
+            if op == kind or op.startswith(kind + "-"):
+                out[kind] += _shape_bytes(shape_str)
+                break
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float
+    bytes_accessed: float
+    coll_bytes: float
+    coll_breakdown: dict[str, int]
+    chips: int
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    model_flops: float
+    useful_ratio: float
+
+    @property
+    def dominant(self) -> str:
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    def to_dict(self) -> dict:
+        return {
+            **dataclasses.asdict(self),
+            "dominant": self.dominant,
+            "bound_s": self.bound_s,
+        }
+
+
+def roofline(compiled, chips: int, model_flops: float = 0.0,
+             hlo_text: str | None = None) -> Roofline:
+    """Roofline terms from the SPMD-partitioned per-device HLO.
+
+    Uses the trip-count-aware walker (repro.launch.hlo_analysis) — XLA's
+    ``cost_analysis()`` does not multiply while-loop bodies, which is off by
+    ~layers × microbatches for scanned programs. The walker's numbers are
+    per device, so terms need no further division by ``chips``;
+    ``model_flops`` is a global quantity and is compared against
+    ``flops × chips``.
+    """
+    from repro.launch import hlo_analysis
+
+    text = hlo_text if hlo_text is not None else compiled.as_text()
+    cost = hlo_analysis.analyze(text)
+    total_flops = cost.flops * chips
+    return Roofline(
+        flops=cost.flops,
+        bytes_accessed=cost.bytes,
+        coll_bytes=cost.coll_bytes,
+        coll_breakdown={k: int(v) for k, v in cost.coll_breakdown.items()},
+        chips=chips,
+        compute_s=cost.flops / PEAK_FLOPS,
+        memory_s=cost.bytes / HBM_BW,
+        collective_s=cost.coll_bytes / ICI_BW,
+        model_flops=model_flops,
+        useful_ratio=(model_flops / total_flops) if total_flops else 0.0,
+    )
+
+
+# ---------------------------------------------------------------------------
+# MODEL_FLOPS per arch (6·N·D rule).
+# ---------------------------------------------------------------------------
+
+
+def lm_param_count(cfg, active: bool = False) -> float:
+    """Parameter count (total or active-per-token) for a TransformerConfig."""
+    D, V = cfg.d_model, cfg.vocab_size
+    H, Hkv, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    attn = D * H * Dh + 2 * D * Hkv * Dh + H * Dh * D
+    embed = 2 * V * D
+    total = embed
+    n_dense = cfg.n_dense_layers if cfg.is_moe else cfg.n_layers
+    dense_ff = cfg.dense_d_ff or cfg.d_ff
+    total += n_dense * (attn + 3 * D * dense_ff)
+    if cfg.is_moe:
+        Fe = cfg.d_ff_expert or cfg.d_ff
+        n_active = cfg.top_k if active else cfg.n_experts
+        expert = 3 * D * Fe
+        shared = cfg.n_shared_experts * 3 * D * Fe
+        total += cfg.n_moe_layers * (attn + n_active * expert + shared
+                                     + D * cfg.n_experts)
+    return float(total)
+
+
+def lm_model_flops(cfg, shape) -> float:
+    n_tokens = shape.global_batch * shape.seq_len
+    if shape.kind == "decode":
+        n_tokens = shape.global_batch
+    n = lm_param_count(cfg, active=True)
+    mult = 6.0 if shape.kind == "train" else 2.0
+    return mult * n * n_tokens

@@ -1,0 +1,86 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> [...]``.
+
+Runs a REDUCED config on CPU by default (the full configs only lower via
+dryrun.py in this container); on a real TPU slice the same entry point runs
+the full config by passing ``--full`` under a real mesh. Implements the
+production loop: resumable pipeline, periodic checkpointing, watchdog-style
+failure handling (any step exception → restore from last checkpoint and
+continue — the single-process analogue of the restart-on-node-failure
+policy described in DESIGN.md §6).
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config, get_smoke_config, list_archs
+from repro.configs.base import ShapeSpec
+from repro.models.api import make_cell
+from repro.models.synth import synthesize_inputs
+from repro.train.checkpoint import latest_step, restore_checkpoint, save_checkpoint
+
+
+def main():
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", choices=list_archs(), required=True)
+    p.add_argument("--steps", type=int, default=20)
+    p.add_argument("--ckpt-every", type=int, default=10)
+    p.add_argument("--ckpt-dir", default=None)
+    p.add_argument("--full", action="store_true",
+                   help="use the full (not smoke) config — TPU slices only")
+    args = p.parse_args()
+
+    cfg = get_config(args.arch) if args.full else get_smoke_config(args.arch)
+    shape = _train_shape(cfg)
+    cell = make_cell(cfg, shape)
+    ckpt_dir = args.ckpt_dir or os.path.join("artifacts", "train", cfg.name)
+
+    state = cell.init_state(jax.random.key(0))
+    start = 0
+    if latest_step(ckpt_dir) is not None:
+        state, extra = restore_checkpoint(ckpt_dir, state)
+        start = int(extra["step"])
+        print(f"resumed from step {start}")
+
+    step_fn = jax.jit(cell.step)
+    t0 = time.time()
+    for i in range(start, args.steps):
+        batch = synthesize_inputs(cell, seed=i)
+        try:
+            state, metrics = step_fn(state, batch)
+        except Exception as e:  # noqa: BLE001 — watchdog path
+            print(f"step {i} failed ({e}); restoring last checkpoint")
+            state, extra = restore_checkpoint(ckpt_dir, state)
+            continue
+        if (i + 1) % 5 == 0:
+            print(f"step {i + 1:4d}  loss {float(metrics['loss']):.4f}  "
+                  f"({(time.time() - t0) / (i + 1 - start):.2f}s/step)")
+        if (i + 1) % args.ckpt_every == 0:
+            save_checkpoint(ckpt_dir, i + 1, state, extra={"step": i + 1})
+    print("done")
+
+
+def _train_shape(cfg) -> ShapeSpec:
+    from repro.configs.base import (
+        NequIPConfig, RecSysConfig, TransformerConfig,
+    )
+
+    if isinstance(cfg, TransformerConfig):
+        return ShapeSpec(name="cli_train", kind="train", seq_len=64,
+                         global_batch=8, microbatch=4)
+    if isinstance(cfg, NequIPConfig):
+        return ShapeSpec(name="cli_train", kind="train", n_nodes=64,
+                         n_edges=192, graph_batch=4)
+    if isinstance(cfg, RecSysConfig):
+        return ShapeSpec(name="cli_train", kind="train", batch=64)
+    raise SystemExit(f"{cfg.name} is not trainable (forest configs use "
+                     f"examples/quickstart.py)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,13 @@
+from repro.metrics.ranking import dcg_at_k, ndcg_at_k, rank_from_scores, mean_ndcg
+from repro.metrics.classification import precision_recall
+from repro.metrics.speedup import trees_traversed, speedup_vs_full
+
+__all__ = [
+    "dcg_at_k",
+    "ndcg_at_k",
+    "rank_from_scores",
+    "mean_ndcg",
+    "precision_recall",
+    "trees_traversed",
+    "speedup_vs_full",
+]

@@ -1,0 +1,31 @@
+"""Binary Continue/Exit classifier metrics (paper Table 2)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def precision_recall(pred_continue, true_continue, mask):
+    """Per-class precision/recall for the Continue (1) / Exit (0) classes.
+
+    Returns a dict matching the paper's Table 2 layout.
+    """
+    pred_continue = pred_continue & mask
+    true_continue = true_continue & mask
+    pred_exit = (~pred_continue) & mask
+    true_exit = (~true_continue) & mask
+
+    def _pr(pred, true):
+        tp = (pred & true).sum()
+        p = tp / jnp.maximum(pred.sum(), 1)
+        r = tp / jnp.maximum(true.sum(), 1)
+        return float(p), float(r)
+
+    p_c, r_c = _pr(pred_continue, true_continue)
+    p_e, r_e = _pr(pred_exit, true_exit)
+    return {
+        "continue_precision": p_c,
+        "continue_recall": r_c,
+        "exit_precision": p_e,
+        "exit_recall": r_e,
+    }

@@ -1,0 +1,51 @@
+"""Ranking quality metrics (NDCG@k) over padded per-query blocks.
+
+All functions take padded arrays ``[Q, D]`` with a boolean ``mask`` marking
+real documents; padding never contributes to gains or ranks. Exponential
+gains ``2^label - 1`` and log2 discounts, per the paper (NDCG@10 on 0..4
+graded labels).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG = -1e30
+
+
+def gain(labels: jax.Array) -> jax.Array:
+    return jnp.exp2(labels.astype(jnp.float32)) - 1.0
+
+
+def rank_from_scores(scores: jax.Array, mask: jax.Array) -> jax.Array:
+    """0-based rank of each doc within its query (0 = best). Padding ranks last.
+
+    Deterministic tie-break by document index (stable argsort).
+    """
+    masked = jnp.where(mask, scores, NEG)
+    order = jnp.argsort(-masked, axis=-1, stable=True)     # [Q, D] doc ids by rank
+    ranks = jnp.argsort(order, axis=-1, stable=True)       # [Q, D] rank of each doc
+    return ranks.astype(jnp.int32)
+
+
+def dcg_at_k(scores: jax.Array, labels: jax.Array, mask: jax.Array, k: int) -> jax.Array:
+    ranks = rank_from_scores(scores, mask)
+    disc = 1.0 / jnp.log2(ranks.astype(jnp.float32) + 2.0)
+    contrib = jnp.where(mask & (ranks < k), gain(labels) * disc, 0.0)
+    return contrib.sum(axis=-1)
+
+
+def ideal_dcg_at_k(labels: jax.Array, mask: jax.Array, k: int) -> jax.Array:
+    return dcg_at_k(labels.astype(jnp.float32), labels, mask, k)
+
+
+def ndcg_at_k(scores: jax.Array, labels: jax.Array, mask: jax.Array, k: int = 10) -> jax.Array:
+    """Per-query NDCG@k; queries with zero ideal DCG get NDCG 1 (convention)."""
+    idcg = ideal_dcg_at_k(labels, mask, k)
+    dcg = dcg_at_k(scores, labels, mask, k)
+    return jnp.where(idcg > 0, dcg / jnp.maximum(idcg, 1e-12), 1.0)
+
+
+def mean_ndcg(scores, labels, mask, k: int = 10) -> jax.Array:
+    return ndcg_at_k(scores, labels, mask, k).mean()

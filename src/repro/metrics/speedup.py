@@ -1,0 +1,37 @@
+"""Scoring-cost accounting in the paper's own currency: trees traversed.
+
+The paper (§3, Table 1) estimates speedup as
+``total trees traversed by Full / total trees traversed by the EE method``,
+where a document that exits at sentinel ``s`` costs ``s`` trees and a
+continuing document costs ``n_trees``; the EE classifier itself costs
+``classifier_trees`` per scored document (LEAR's 10-tree forest), which we
+charge explicitly — the paper includes classifier latency in its timings.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def trees_traversed(
+    continue_mask,
+    mask,
+    sentinel: int,
+    n_trees: int,
+    classifier_trees: int = 0,
+) -> jnp.ndarray:
+    """Total tree traversals for one EE configuration. Arrays are [Q, D]."""
+    n_docs = mask.sum()
+    n_cont = (continue_mask & mask).sum()
+    return (
+        n_docs * (sentinel + classifier_trees)
+        + n_cont * (n_trees - sentinel)
+    ).astype(jnp.float32)
+
+
+def speedup_vs_full(
+    continue_mask, mask, sentinel: int, n_trees: int, classifier_trees: int = 0
+) -> float:
+    full = mask.sum() * n_trees
+    ee = trees_traversed(continue_mask, mask, sentinel, n_trees, classifier_trees)
+    return float(full / ee)

@@ -1,0 +1,7 @@
+"""Model zoo: the 10 assigned architectures + the paper's forest cascade.
+
+LM transformers (scan-over-layers, GQA, optional qk-norm/QKV-bias/MoE):
+qwen2.5-14b, minitron-4b, qwen3-4b, deepseek-moe-16b, llama4-maverick.
+GNN: nequip (E(3)-equivariant tensor products). RecSys: bert4rec, din,
+deepfm, dlrm-rm2 (EmbeddingBag built from take + segment_sum).
+"""

@@ -1,0 +1,165 @@
+"""Shared neural layers: RMSNorm, RoPE, blockwise attention, GLU MLP.
+
+Attention is implemented flash-style in pure JAX: an online-softmax double
+scan over query and key/value blocks, so no ``[S, S]`` score matrix is ever
+materialized — mandatory for the 32k-token prefill shapes, and the reason
+``long_500k`` would be *memory*-feasible were the assigned archs not
+quadratic-compute in the first place (see DESIGN.md).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.sharding import constrain
+
+NEG_INF = -1e30
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)).astype(dtype)
+
+
+def rope_frequencies(d_head: int, theta: float) -> np.ndarray:
+    return 1.0 / (theta ** (np.arange(0, d_head, 2, dtype=np.float32) / d_head))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [B, S, H, Dh]; positions: [B, S] or [S]."""
+    d_head = x.shape[-1]
+    freqs = jnp.asarray(rope_frequencies(d_head, theta))
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [B, S, Dh/2]
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def _online_softmax_block(carry, scores, v_blk):
+    """One online-softmax update. scores: [..., Q, K]; v_blk: [..., K, Dh]."""
+    acc, row_max, row_sum = carry
+    blk_max = scores.max(axis=-1)
+    new_max = jnp.maximum(row_max, blk_max)
+    correction = jnp.exp(row_max - new_max)
+    p = jnp.exp(scores - new_max[..., None])
+    acc = acc * correction[..., None] + jnp.einsum(
+        "...qk,...kd->...qd", p, v_blk.astype(jnp.float32)
+    )
+    row_sum = row_sum * correction + p.sum(axis=-1)
+    return acc, new_max, row_sum
+
+
+def blockwise_attention(
+    q: jax.Array,      # [B, Sq, H, Dh]
+    k: jax.Array,      # [B, Skv, Hkv, Dh]
+    v: jax.Array,      # [B, Skv, Hkv, Dh]
+    *,
+    causal: bool = True,
+    q_offset: int = 0,          # absolute position of q[0] (chunked prefill)
+    q_block: int = 512,
+    kv_block: int = 1024,
+    causal_skip: bool = False,  # §Perf: unroll q blocks, skip masked kv blocks
+) -> jax.Array:
+    """GQA flash-style attention; returns [B, Sq, H, Dh].
+
+    ``causal_skip`` replaces the q-block scan with a python unroll whose
+    kv scan only covers blocks at-or-below the causal diagonal — halving
+    attention FLOPs (upper triangle never computed) at the cost of an
+    HLO that grows with the number of q blocks.
+    """
+    B, Sq, H, Dh = q.shape
+    _, Skv, Hkv, _ = k.shape
+    G = H // Hkv
+    q_block = min(q_block, Sq)
+    kv_block = min(kv_block, Skv)
+    assert Sq % q_block == 0 and Skv % kv_block == 0
+    nq, nk = Sq // q_block, Skv // kv_block
+    scale = 1.0 / np.sqrt(Dh)
+
+    # Block axes LEADING so lax.scan iterates blocks, not batch.
+    qr = (
+        q.reshape(B, nq, q_block, Hkv, G, Dh)
+        .transpose(1, 0, 3, 4, 2, 5)          # [nq, B, Hkv, G, q_block, Dh]
+        .astype(jnp.float32)
+    )
+    kr = k.reshape(B, nk, kv_block, Hkv, Dh).transpose(1, 0, 3, 2, 4)
+    vr = v.reshape(B, nk, kv_block, Hkv, Dh).transpose(1, 0, 3, 2, 4)
+    # kr/vr: [nk, B, Hkv, kv_block, Dh]
+
+    def q_step(q_t, q_idx, n_kv_blocks):
+        # q_t: [B, Hkv, G, q_block, Dh]
+        init = (
+            jnp.zeros((B, Hkv, G, q_block, Dh), jnp.float32),
+            jnp.full((B, Hkv, G, q_block), NEG_INF, jnp.float32),
+            jnp.zeros((B, Hkv, G, q_block), jnp.float32),
+        )
+
+        def kv_step(carry, ki):
+            k_blk, v_blk, k_idx = ki  # [B, Hkv, kv_block, Dh]
+            scores = jnp.einsum(
+                "bhgqd,bhkd->bhgqk", q_t, k_blk.astype(jnp.float32)
+            ) * scale
+            if causal:
+                qpos = q_offset + q_idx * q_block + jnp.arange(q_block)
+                kpos = k_idx * kv_block + jnp.arange(kv_block)
+                mask = qpos[:, None] >= kpos[None, :]
+                scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+            vb = v_blk[:, :, None]  # [B, Hkv, 1, kv_block, Dh]
+            return _online_softmax_block(carry, scores, vb), None
+
+        (acc, _, row_sum), _ = jax.lax.scan(
+            kv_step, init,
+            (kr[:n_kv_blocks], vr[:n_kv_blocks], jnp.arange(n_kv_blocks)),
+        )
+        out = acc / jnp.maximum(row_sum[..., None], 1e-30)
+        return out  # [B, Hkv, G, q_block, Dh]
+
+    if causal_skip and causal:
+        # Unrolled q blocks: block i attends kv blocks [0, ceil(end/kv_block)).
+        outs = []
+        for i in range(nq):
+            q_end = q_offset + (i + 1) * q_block
+            n_kv = min(nk, -(-q_end // kv_block))
+            outs.append(q_step(qr[i], jnp.int32(i), n_kv))
+        outs = jnp.stack(outs)
+    else:
+        _, outs = jax.lax.scan(
+            lambda _, qi: (None, q_step(qi[0], qi[1], nk)),
+            None, (qr, jnp.arange(nq)),
+        )
+    # outs: [nq, B, Hkv, G, q_block, Dh] → [B, Sq, H, Dh]
+    out = outs.transpose(1, 0, 4, 2, 3, 5).reshape(B, Sq, H, Dh)
+    return out.astype(q.dtype)
+
+
+def decode_attention(
+    q: jax.Array,        # [B, 1, H, Dh] current-token queries
+    k_cache: jax.Array,  # [B, S_max, Hkv, Dh]
+    v_cache: jax.Array,
+    pos: jax.Array,      # [] current length (tokens < pos are valid)
+) -> jax.Array:
+    B, _, H, Dh = q.shape
+    _, S, Hkv, _ = k_cache.shape
+    G = H // Hkv
+    scale = 1.0 / np.sqrt(Dh)
+    qf = q.reshape(B, Hkv, G, Dh).astype(jnp.float32)
+    scores = jnp.einsum("bhgd,bshd->bhgs", qf, k_cache.astype(jnp.float32)) * scale
+    valid = jnp.arange(S)[None, None, None, :] < pos
+    scores = jnp.where(valid, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgs,bshd->bhgd", probs, v_cache.astype(jnp.float32))
+    return out.reshape(B, 1, H, Dh).astype(q.dtype)
+
+
+def glu_mlp(x: jax.Array, w_gate, w_up, w_down) -> jax.Array:
+    h = jax.nn.silu(x @ w_gate) * (x @ w_up)
+    h = constrain(h, "batch", None, "ff")
+    return h @ w_down

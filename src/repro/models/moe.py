@@ -1,0 +1,91 @@
+"""Mixture-of-Experts FFN: grouped token-choice dispatch, GSPMD-shardable.
+
+TPU adaptation of switch/GShard routing without the ``[tokens, E, C]``
+one-hot dispatch einsum (which is memory-infeasible at 1M tokens): tokens
+are organized into static *dispatch groups* (one group per sequence at
+train/prefill; a single group at decode). Within each group, each expert
+gathers its top-``C`` chosen tokens by router probability (token-choice
+with capacity, priority = probability), runs the expert FFN as one batched
+einsum over ``[G, E, C, D]``, and scatter-adds results back weighted by the
+(renormalized) router probabilities.
+
+Sharding: groups → data axes, experts → EP axes ("model", + "pod" on the
+multi-pod mesh). The gather/scatter is *within-group*, hence local to a
+data shard; the activation reshard between group-sharded and expert-sharded
+layouts is GSPMD's all-to-all — exactly classic MoE dispatch.
+
+Capacity: C = ceil(T_group · top_k / E · capacity_factor). Tokens beyond an
+expert's capacity are dropped (standard GShard semantics); the residual
+connection carries them unchanged. An auxiliary load-balancing loss
+(Switch-style) is returned to the trainer.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+
+
+def _capacity(tokens_per_group: int, n_experts: int, top_k: int, cf: float) -> int:
+    c = int(tokens_per_group * top_k * cf / n_experts) + 1
+    return min(max(4, c), tokens_per_group)
+
+
+def moe_ffn(
+    x: jax.Array,            # [G, T, D] tokens in dispatch groups
+    router_w: jax.Array,     # [D, E]
+    w_gate: jax.Array,       # [E, D, F]
+    w_up: jax.Array,         # [E, D, F]
+    w_down: jax.Array,       # [E, F, D]
+    *,
+    top_k: int,
+    capacity_factor: float,
+) -> tuple[jax.Array, jax.Array]:
+    """Returns (output [G, T, D], aux load-balance loss [])."""
+    G, T, D = x.shape
+    E = router_w.shape[1]
+    C = _capacity(T, E, top_k, capacity_factor)
+
+    logits = (x.astype(jnp.float32) @ router_w.astype(jnp.float32))  # [G, T, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_idx = jax.lax.top_k(probs, top_k)                     # [G, T, k]
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)  # renorm
+
+    # Per-token-per-expert routing weight (0 if not chosen).
+    chose = jax.nn.one_hot(top_idx, E, dtype=jnp.float32)            # [G, T, k, E]
+    weight = (chose * top_p[..., None]).sum(axis=2)                  # [G, T, E]
+
+    # Switch aux loss: E * Σ_e (fraction routed to e) · (mean prob of e).
+    frac = (weight > 0).astype(jnp.float32).mean(axis=1)             # [G, E]
+    mean_p = probs.mean(axis=1)
+    aux = (E * (frac * mean_p).sum(axis=-1)).mean()
+
+    # Token-choice with capacity: each expert takes its top-C tokens by prob.
+    priority = jnp.where(weight > 0, weight, -1.0)                   # [G, T, E]
+    _, token_idx = jax.lax.top_k(priority.transpose(0, 2, 1), C)     # [G, E, C]
+
+    def gather_group(xg, idxg, wg):
+        x_sel = xg[idxg]                                             # [E, C, D]
+        w_sel = jnp.take_along_axis(wg.transpose(1, 0), idxg, axis=1)  # [E, C]
+        return x_sel, w_sel
+
+    x_sel, w_sel = jax.vmap(gather_group)(x, token_idx, weight)      # [G,E,C,D]
+    w_sel = jnp.maximum(w_sel, 0.0)                                  # padding → 0
+    x_sel = constrain(x_sel, "groups", "experts", None, None)
+
+    h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", x_sel, w_gate)) * jnp.einsum(
+        "gecd,edf->gecf", x_sel, w_up
+    )
+    y_sel = jnp.einsum("gecf,efd->gecd", h, w_down)                  # [G,E,C,D]
+    y_sel = y_sel * w_sel[..., None].astype(y_sel.dtype)
+
+    def scatter_group(idxg, yg):
+        flat_idx = idxg.reshape(E * C)
+        flat_y = yg.reshape(E * C, D)
+        return jnp.zeros((T, D), flat_y.dtype).at[flat_idx].add(flat_y)
+
+    y = jax.vmap(scatter_group)(token_idx, y_sel)                    # [G, T, D]
+    y = constrain(y, "groups", None, None)
+    return y.astype(x.dtype), aux

@@ -1,0 +1,392 @@
+"""RecSys architectures: DLRM, DeepFM, DIN, BERT4Rec.
+
+The hot path is the sparse embedding lookup. JAX has no native EmbeddingBag
+and no CSR sparse — :func:`embedding_bag` builds it from ``jnp.take`` +
+``jax.ops.segment_sum`` (sum-combined multi-hot bags). Tables are
+row-sharded ("rows" → "model"); GSPMD lowers the gather over a row-sharded
+table to per-shard range gathers + all-reduce, which is exactly how
+large-scale TBE sharding works.
+
+``retrieval_cand`` (1 query × 10⁶ candidates) is served by per-family
+``score_candidates`` functions that compute the user side once and batch
+the candidate side as one dense matmul/interaction sweep — never a loop.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import RecSysConfig
+from repro.distributed.sharding import constrain
+
+
+# ---------------------------------------------------------------------------
+# Embedding substrate.
+# ---------------------------------------------------------------------------
+
+
+ROW_PAD = 512  # tables padded to shard boundaries (16 | 32 model ways)
+
+
+def pad_rows(v: int) -> int:
+    return -(-v // ROW_PAD) * ROW_PAD
+
+
+def embedding_bag(table: jax.Array, ids: jax.Array, combine: str = "sum"):
+    """table [V, D]; ids [..., n_per_bag] → [..., D] (sum/mean over the bag)."""
+    vecs = jnp.take(table, ids, axis=0)
+    out = vecs.sum(axis=-2)
+    if combine == "mean":
+        out = out / ids.shape[-1]
+    return out
+
+
+def _mlp(x, weights, final_activation=None):
+    *hidden, (w_last, b_last) = weights
+    for w, b in hidden:
+        x = jax.nn.relu(x @ w + b)
+    x = x @ w_last + b_last
+    if final_activation is not None:
+        x = final_activation(x)
+    return x
+
+
+def _mlp_init(key, dims: tuple[int, ...], dtype=jnp.float32):
+    keys = jax.random.split(key, len(dims) - 1)
+    out = []
+    for i, k in enumerate(keys):
+        fan = dims[i]
+        out.append(
+            (
+                jax.random.normal(k, (dims[i], dims[i + 1]), dtype) * fan**-0.5,
+                jnp.zeros((dims[i + 1],), dtype),
+            )
+        )
+    return out
+
+
+def _mlp_logical(dims: tuple[int, ...]):
+    # Dense-MLP weights are KB-scale: replicate (sharding 40-wide layers over
+    # 16 devices fails divisibility and saves nothing).
+    return [((None, None), (None,)) for _ in range(len(dims) - 1)]
+
+
+# ---------------------------------------------------------------------------
+# DLRM (arXiv:1906.00091) — dot interaction.
+# ---------------------------------------------------------------------------
+
+
+def dlrm_init(cfg: RecSysConfig, key):
+    keys = jax.random.split(key, 3 + len(cfg.vocab_sizes))
+    tables = {
+        f"t{i}": jax.random.normal(keys[i], (pad_rows(v), cfg.embed_dim), jnp.float32)
+        * v**-0.25 * 0.1
+        for i, v in enumerate(cfg.vocab_sizes)
+    }
+    n_vec = len(cfg.vocab_sizes) + 1
+    n_pairs = n_vec * (n_vec - 1) // 2
+    top_in = cfg.bot_mlp[-1] + n_pairs
+    return {
+        "tables": tables,
+        "bot": _mlp_init(keys[-2], (cfg.n_dense, *cfg.bot_mlp)),
+        "top": _mlp_init(keys[-1], (top_in, *cfg.top_mlp)),
+    }
+
+
+def dlrm_logical(cfg: RecSysConfig):
+    return {
+        "tables": {f"t{i}": ("rows", None) for i in range(len(cfg.vocab_sizes))},
+        "bot": _mlp_logical((cfg.n_dense, *cfg.bot_mlp)),
+        "top": _mlp_logical((cfg.bot_mlp[-1] + 1, *cfg.top_mlp)),
+    }
+
+
+def _dot_interaction(vecs: jax.Array) -> jax.Array:
+    """vecs [B, n, D] → upper-triangle pairwise dots [B, n(n−1)/2]."""
+    n = vecs.shape[1]
+    z = jnp.einsum("bnd,bmd->bnm", vecs, vecs)
+    iu, ju = np.triu_indices(n, k=1)
+    return z[:, iu, ju]
+
+
+def dlrm_forward(cfg: RecSysConfig, params, batch) -> jax.Array:
+    dense = constrain(batch["dense"], "batch", None)              # [B, 13]
+    sparse = constrain(batch["sparse"], "batch", None, None)      # [B, 26, hot]
+    bot = _mlp(dense, params["bot"], jax.nn.relu)                 # [B, D]
+    embs = [
+        embedding_bag(params["tables"][f"t{i}"], sparse[:, i])
+        for i in range(len(cfg.vocab_sizes))
+    ]
+    vecs = jnp.stack([bot, *embs], axis=1)                        # [B, 27, D]
+    feats = jnp.concatenate([bot, _dot_interaction(vecs)], axis=-1)
+    return _mlp(feats, params["top"])[..., 0]                     # logits [B]
+
+
+def dlrm_score_candidates(cfg: RecSysConfig, params, batch) -> jax.Array:
+    """1 user (dense + 25 fields) × C candidate items (last field)."""
+    dense = batch["dense"]                                        # [1, 13]
+    sparse = batch["sparse"]                                      # [1, 25, hot]
+    cands = constrain(batch["cand_ids"], "cands")                 # [C]
+    bot = _mlp(dense, params["bot"], jax.nn.relu)                 # [1, D]
+    user_embs = [
+        embedding_bag(params["tables"][f"t{i}"], sparse[:, i])
+        for i in range(len(cfg.vocab_sizes) - 1)
+    ]
+    user_vecs = jnp.concatenate([bot, *user_embs], axis=0)        # [26, D]
+    cand_vec = jnp.take(params["tables"][f"t{len(cfg.vocab_sizes) - 1}"],
+                        cands, axis=0)                            # [C, D]
+    # User-user dots are candidate-independent; compute once.
+    n_u = user_vecs.shape[0]
+    uu = jnp.einsum("nd,md->nm", user_vecs, user_vecs)
+    iu, ju = np.triu_indices(n_u, k=1)
+    uu_flat = uu[iu, ju]                                          # [n_u(n_u-1)/2]
+    uc = jnp.einsum("cd,nd->cn", cand_vec, user_vecs)             # [C, n_u]
+    C = cands.shape[0]
+    feats = jnp.concatenate(
+        [
+            jnp.broadcast_to(bot[0], (C, bot.shape[1])),
+            jnp.broadcast_to(uu_flat, (C, uu_flat.shape[0])),
+            uc,
+        ],
+        axis=-1,
+    )
+    return _mlp(feats, params["top"])[..., 0]                     # [C]
+
+
+# ---------------------------------------------------------------------------
+# DeepFM (arXiv:1703.04247) — FM + deep on one concatenated table.
+# ---------------------------------------------------------------------------
+
+
+def deepfm_init(cfg: RecSysConfig, key):
+    V = pad_rows(sum(cfg.vocab_sizes))
+    k = jax.random.split(key, 4)
+    deep_in = cfg.n_sparse * cfg.embed_dim
+    return {
+        "table": jax.random.normal(k[0], (V, cfg.embed_dim), jnp.float32) * 0.01,
+        "first_order": jax.random.normal(k[1], (V, 1), jnp.float32) * 0.01,
+        "deep": _mlp_init(k[2], (deep_in, *cfg.mlp, 1)),
+        "bias": jnp.zeros(()),
+    }
+
+
+def deepfm_logical(cfg: RecSysConfig):
+    return {
+        "table": ("rows", None),
+        "first_order": ("rows", None),
+        "deep": _mlp_logical((cfg.n_sparse * cfg.embed_dim, *cfg.mlp, 1)),
+        "bias": (),
+    }
+
+
+def deepfm_forward(cfg: RecSysConfig, params, batch) -> jax.Array:
+    ids = constrain(batch["ids"], "batch", None)                  # [B, 39] global ids
+    v = jnp.take(params["table"], ids, axis=0)                    # [B, 39, D]
+    w = jnp.take(params["first_order"], ids, axis=0)[..., 0]      # [B, 39]
+    fm1 = w.sum(-1)
+    s = v.sum(axis=1)
+    fm2 = 0.5 * ((s * s).sum(-1) - (v * v).sum(axis=(1, 2)))
+    deep = _mlp(v.reshape(v.shape[0], -1), params["deep"])[..., 0]
+    return fm1 + fm2 + deep + params["bias"]
+
+
+def deepfm_score_candidates(cfg: RecSysConfig, params, batch) -> jax.Array:
+    """User fields fixed, candidate = last field swept over C ids."""
+    ids = batch["ids"]                                            # [1, 38]
+    cands = constrain(batch["cand_ids"], "cands")                 # [C]
+    vu = jnp.take(params["table"], ids[0], axis=0)                # [38, D]
+    wu = jnp.take(params["first_order"], ids[0], axis=0).sum()
+    vc = jnp.take(params["table"], cands, axis=0)                 # [C, D]
+    wc = jnp.take(params["first_order"], cands, axis=0)[..., 0]   # [C]
+    su = vu.sum(0)
+    s = su[None] + vc
+    fm2 = 0.5 * ((s * s).sum(-1) - ((vu * vu).sum() + (vc * vc).sum(-1)))
+    deep_in = jnp.concatenate(
+        [jnp.broadcast_to(vu.reshape(-1), (cands.shape[0], vu.size)), vc], axis=-1
+    )
+    deep = _mlp(deep_in, params["deep"])[..., 0]
+    return wu + wc + fm2 + deep + params["bias"]
+
+
+# ---------------------------------------------------------------------------
+# DIN (arXiv:1706.06978) — target attention over user history.
+# ---------------------------------------------------------------------------
+
+
+def din_init(cfg: RecSysConfig, key):
+    k = jax.random.split(key, 3)
+    D = cfg.embed_dim
+    return {
+        "item_table": jax.random.normal(k[0], (pad_rows(cfg.item_vocab), D), jnp.float32) * 0.01,
+        "attn": _mlp_init(k[1], (4 * D, *cfg.attn_mlp, 1)),
+        "out": _mlp_init(k[2], (3 * D, *cfg.mlp, 1)),
+    }
+
+
+def din_logical(cfg: RecSysConfig):
+    return {
+        "item_table": ("rows", None),
+        "attn": _mlp_logical((4 * cfg.embed_dim, *cfg.attn_mlp, 1)),
+        "out": _mlp_logical((3 * cfg.embed_dim, *cfg.mlp, 1)),
+    }
+
+
+def _din_user_vec(params, hist_vec, target_vec, hist_mask):
+    """hist [B, S, D], target [B, D] → attention-pooled user vec [B, D]."""
+    t = jnp.broadcast_to(target_vec[:, None], hist_vec.shape)
+    attn_in = jnp.concatenate(
+        [t, hist_vec, t - hist_vec, t * hist_vec], axis=-1
+    )
+    scores = _mlp(attn_in, params["attn"])[..., 0]                 # [B, S]
+    scores = jnp.where(hist_mask, scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bs,bsd->bd", w, hist_vec)
+
+
+def din_forward(cfg: RecSysConfig, params, batch) -> jax.Array:
+    hist = constrain(batch["hist_ids"], "batch", None)            # [B, S]
+    target = constrain(batch["target_id"], "batch")               # [B]
+    hist_mask = hist >= 0
+    hist_vec = jnp.take(params["item_table"], jnp.maximum(hist, 0), axis=0)
+    target_vec = jnp.take(params["item_table"], target, axis=0)
+    user = _din_user_vec(params, hist_vec, target_vec, hist_mask)
+    feats = jnp.concatenate([user, target_vec, user * target_vec], axis=-1)
+    return _mlp(feats, params["out"])[..., 0]
+
+
+def din_score_candidates(cfg: RecSysConfig, params, batch) -> jax.Array:
+    """One user history × C candidates — candidate-dependent attention."""
+    hist = batch["hist_ids"][0]                                   # [S]
+    cands = constrain(batch["cand_ids"], "cands")                 # [C]
+    hist_mask = (hist >= 0)[None]
+    hist_vec = jnp.take(params["item_table"], jnp.maximum(hist, 0), axis=0)
+    cand_vec = jnp.take(params["item_table"], cands, axis=0)      # [C, D]
+    hv = jnp.broadcast_to(hist_vec[None], (cands.shape[0], *hist_vec.shape))
+    user = _din_user_vec(params, hv, cand_vec, hist_mask)
+    feats = jnp.concatenate([user, cand_vec, user * cand_vec], axis=-1)
+    return _mlp(feats, params["out"])[..., 0]
+
+
+# ---------------------------------------------------------------------------
+# BERT4Rec (arXiv:1904.06690) — bidirectional transformer, tied softmax.
+# ---------------------------------------------------------------------------
+
+
+def bert4rec_init(cfg: RecSysConfig, key):
+    D, L = cfg.embed_dim, cfg.n_blocks
+    k = jax.random.split(key, 8)
+    norm = lambda kk, s, fan: jax.random.normal(kk, s, jnp.float32) * fan**-0.5
+    d_ff = 4 * D
+    return {
+        "item_embed": norm(k[0], (pad_rows(cfg.item_vocab + 1), D), 1.0) * 0.02,  # +1 = [MASK]
+        "pos_embed": norm(k[1], (cfg.seq_len, D), 1.0) * 0.02,
+        "blocks": {
+            "ln1": jnp.ones((L, D)),
+            "ln2": jnp.ones((L, D)),
+            "wqkv": norm(k[2], (L, D, 3 * D), D),
+            "wo": norm(k[3], (L, D, D), D),
+            "w1": norm(k[4], (L, D, d_ff), D),
+            "b1": jnp.zeros((L, d_ff)),
+            "w2": norm(k[5], (L, d_ff, D), d_ff),
+            "b2": jnp.zeros((L, D)),
+        },
+        "final_ln": jnp.ones((D,)),
+    }
+
+
+def bert4rec_logical(cfg: RecSysConfig):
+    return {
+        "item_embed": ("rows", None),
+        "pos_embed": (None, None),
+        "blocks": {
+            "ln1": ("layers", None),
+            "ln2": ("layers", None),
+            "wqkv": ("layers", None, "qkv"),
+            "wo": ("layers", "qkv", None),
+            "w1": ("layers", None, "ff"),
+            "b1": ("layers", "ff"),
+            "w2": ("layers", "ff", None),
+            "b2": ("layers", None),
+        },
+        "final_ln": (None,),
+    }
+
+
+def bert4rec_encode(cfg: RecSysConfig, params, ids: jax.Array) -> jax.Array:
+    """ids [B, S] → hidden [B, S, D]; bidirectional (no causal mask)."""
+    from repro.models.layers import rms_norm  # shared RMSNorm
+
+    B, S = ids.shape
+    D, H = cfg.embed_dim, cfg.n_heads
+    Dh = D // H
+    x = jnp.take(params["item_embed"], ids, axis=0) + params["pos_embed"][None, :S]
+    x = constrain(x, "batch", None, None)
+
+    def block(x, blk):
+        h = rms_norm(x, blk["ln1"])
+        qkv = (h @ blk["wqkv"]).reshape(B, S, 3, H, Dh)
+        q, k, v = qkv[:, :, 0], qkv[:, :, 1], qkv[:, :, 2]
+        scores = jnp.einsum("bqhd,bkhd->bhqk", q, k) / np.sqrt(Dh)
+        attn = jax.nn.softmax(scores, axis=-1)
+        o = jnp.einsum("bhqk,bkhd->bqhd", attn, v).reshape(B, S, D)
+        x = x + o @ blk["wo"]
+        h = rms_norm(x, blk["ln2"])
+        x = x + jax.nn.gelu(h @ blk["w1"] + blk["b1"]) @ blk["w2"] + blk["b2"]
+        return x, None
+
+    x, _ = jax.lax.scan(block, x, params["blocks"])
+    return rms_norm(x, params["final_ln"])
+
+
+def bert4rec_masked_loss(cfg: RecSysConfig, params, batch) -> jax.Array:
+    """Cloze training: predict items at masked positions (tied softmax)."""
+    h = bert4rec_encode(cfg, params, batch["ids"])                # [B, S, D]
+    logits = jnp.einsum("bsd,vd->bsv", h, params["item_embed"])
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, batch["labels"][..., None], axis=-1)[..., 0]
+    nll = (logz - gold) * batch["mask_pos"]
+    return nll.sum() / jnp.maximum(batch["mask_pos"].sum(), 1.0)
+
+
+def bert4rec_forward(cfg: RecSysConfig, params, batch) -> jax.Array:
+    """Serve: next-item score for a provided target at the last position."""
+    h = bert4rec_encode(cfg, params, batch["ids"])[:, -1]         # [B, D]
+    tgt = jnp.take(params["item_embed"], batch["target_id"], axis=0)
+    return (h * tgt).sum(-1)
+
+
+def bert4rec_score_candidates(cfg: RecSysConfig, params, batch) -> jax.Array:
+    h = bert4rec_encode(cfg, params, batch["ids"])[:, -1]         # [1, D]
+    cands = constrain(batch["cand_ids"], "cands")
+    cand_vec = jnp.take(params["item_embed"], cands, axis=0)      # [C, D]
+    return (cand_vec @ h[0])
+
+
+# ---------------------------------------------------------------------------
+# Family dispatch.
+# ---------------------------------------------------------------------------
+
+INIT = {"dlrm": dlrm_init, "deepfm": deepfm_init, "din": din_init,
+        "bert4rec": bert4rec_init}
+LOGICAL = {"dlrm": dlrm_logical, "deepfm": deepfm_logical, "din": din_logical,
+           "bert4rec": bert4rec_logical}
+FORWARD = {"dlrm": dlrm_forward, "deepfm": deepfm_forward, "din": din_forward,
+           "bert4rec": bert4rec_forward}
+SCORE_CANDIDATES = {
+    "dlrm": dlrm_score_candidates,
+    "deepfm": deepfm_score_candidates,
+    "din": din_score_candidates,
+    "bert4rec": bert4rec_score_candidates,
+}
+
+
+def loss_fn(cfg: RecSysConfig, params, batch) -> jax.Array:
+    if cfg.family == "bert4rec":
+        return bert4rec_masked_loss(cfg, params, batch)
+    logits = FORWARD[cfg.family](cfg, params, batch)
+    y = batch["label"].astype(jnp.float32)
+    return jnp.mean(
+        jnp.maximum(logits, 0) - logits * y + jnp.log1p(jnp.exp(-jnp.abs(logits)))
+    )

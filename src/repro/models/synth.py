@@ -1,0 +1,97 @@
+"""Synthesize valid random inputs for any Cell (smoke tests / examples).
+
+Integer inputs are drawn within the valid range implied by the config
+(vocab sizes, node counts, …); ``ShapeDtypeStruct`` specs come straight
+from ``cell.input_specs()`` so smoke tests exercise exactly the dry-run
+input structure.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.configs.base import (
+    ForestConfig,
+    NequIPConfig,
+    RecSysConfig,
+    TransformerConfig,
+)
+from repro.models.api import Cell
+
+
+def synthesize_inputs(cell: Cell, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    cfg, shape = cell.cfg, cell.shape
+    specs = cell.input_specs()
+    out = {}
+    for name, spec in specs.items():
+        out[name] = _one(name, spec, cfg, shape, rng)
+    return out
+
+
+def _ints(rng, shape, hi):
+    return rng.integers(0, max(int(hi), 1), size=shape).astype(np.int32)
+
+
+def _one(name, spec, cfg, shape, rng):
+    import jax
+
+    if isinstance(spec, dict) or not hasattr(spec, "shape"):
+        return jax.tree.map(
+            lambda s: _one(name, s, cfg, shape, rng), spec,
+            is_leaf=lambda x: hasattr(x, "shape"),
+        )
+    shp, dt = spec.shape, spec.dtype
+
+    if np.issubdtype(dt, np.floating):
+        if name == "mask_pos":
+            return (rng.random(shp) < 0.15).astype(np.float32)
+        return rng.normal(size=shp).astype(dt)
+    if dt == np.bool_:
+        m = rng.random(shp) < 0.8
+        if m.ndim == 2:
+            m[:, 0] = True
+        return m
+
+    # Integer inputs: range depends on semantics.
+    if isinstance(cfg, TransformerConfig):
+        if name == "pos":
+            return np.int32(min(8, shape.seq_len - 1))
+        return _ints(rng, shp, cfg.vocab_size)
+    if isinstance(cfg, NequIPConfig):
+        if name == "species":
+            return _ints(rng, shp, cfg.n_species)
+        if name in ("edge_src", "edge_dst"):
+            return _ints(rng, shp, shape.n_nodes)
+        if name == "graph_id":
+            n_graphs = shape.graph_batch or 1
+            return np.sort(_ints(rng, shp, n_graphs))
+        return _ints(rng, shp, 4)
+    if isinstance(cfg, RecSysConfig):
+        if cfg.family == "dlrm" and name == "sparse":
+            ids = np.stack(
+                [_ints(rng, shp[:1] + shp[2:], v) for v in cfg.vocab_sizes[: shp[1]]],
+                axis=1,
+            )
+            return ids
+        if cfg.family == "deepfm" and name == "ids":
+            offs = np.cumsum([0, *cfg.vocab_sizes[:-1]])
+            cols = shp[1]
+            ids = np.stack(
+                [offs[i] + _ints(rng, shp[:1], cfg.vocab_sizes[i]) for i in range(cols)],
+                axis=1,
+            )
+            return ids.astype(np.int32)
+        if name == "cand_ids":
+            hi = {
+                "dlrm": cfg.vocab_sizes[-1] if cfg.vocab_sizes else 1,
+                "deepfm": sum(cfg.vocab_sizes),
+                "din": cfg.item_vocab,
+                "bert4rec": cfg.item_vocab,
+            }[cfg.family]
+            return _ints(rng, shp, hi)
+        if name in ("hist_ids", "target_id", "ids", "labels"):
+            return _ints(rng, shp, cfg.item_vocab or sum(cfg.vocab_sizes))
+    if isinstance(cfg, ForestConfig):
+        return _ints(rng, shp, 2)
+    return _ints(rng, shp, 2)

@@ -1,0 +1,4 @@
+from repro.serve.ranking_service import RankingService, ServiceStats
+from repro.serve.lm_serve import generate
+
+__all__ = ["RankingService", "ServiceStats", "generate"]

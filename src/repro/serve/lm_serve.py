@@ -1,0 +1,47 @@
+"""LM serving driver: prefill once, decode autoregressively with KV cache."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import TransformerConfig
+from repro.models import transformer as tfm
+
+
+def generate(
+    cfg: TransformerConfig,
+    params,
+    prompt_tokens: jax.Array,   # [B, S_prompt]
+    n_steps: int,
+    cache_len: int | None = None,
+    temperature: float = 0.0,
+    key=None,
+):
+    """Greedy (or sampled) generation; returns [B, n_steps] tokens."""
+    B, S = prompt_tokens.shape
+    cache_len = cache_len or (S + n_steps)
+    logits, caches = jax.jit(
+        lambda p, t: tfm.prefill(cfg, p, t, cache_len=cache_len)
+    )(params, prompt_tokens)
+
+    decode = jax.jit(
+        lambda p, tok, c, pos: tfm.decode_step(cfg, p, tok, c, pos)
+    )
+
+    out = []
+    tok = _pick(logits, temperature, key, 0)
+    for i in range(n_steps):
+        out.append(tok)
+        logits, caches = decode(params, tok, caches, jnp.int32(S + i))
+        tok = _pick(logits, temperature, key, i + 1)
+    return jnp.concatenate(out, axis=1)
+
+
+def _pick(logits, temperature, key, i):
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+    k = jax.random.fold_in(key, i)
+    return jax.random.categorical(k, logits / temperature, axis=-1).astype(
+        jnp.int32
+    )[:, None]

@@ -1,0 +1,145 @@
+"""Batched ranking service with the LEAR cascade as a first-class feature.
+
+The serving path the paper targets: a query arrives with its candidate
+documents (already feature-extracted); the service scores them through the
+λ-MART ensemble with document-level early exit and returns the top-k.
+
+Production concerns handled here:
+- request batching into fixed-size padded blocks (jit-stable shapes);
+- compaction capacity chosen from observed continue rates (p99 headroom),
+  re-jitting only when the capacity bucket changes;
+- cost accounting per batch (trees traversed, the paper's own metric) and
+  service-level stats;
+- graceful degradation: if survivors exceed capacity, the overflow
+  documents keep their sentinel scores (bounded quality loss, never a
+  crash) and the stats record it.
+
+The same class serves the beyond-paper cascade for recsys retrieval
+(sentinel scorer = any cheap model, full scorer = any expensive model) via
+the ``sentinel_fn`` / ``full_fn`` hooks — see examples/cascade_retrieval.py.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.cascade import CascadeRanker
+from repro.core.lear import LearClassifier, augment_features
+from repro.forest.ensemble import TreeEnsemble
+
+
+@dataclasses.dataclass
+class ServiceStats:
+    batches: int = 0
+    queries: int = 0
+    docs: int = 0
+    docs_continued: int = 0
+    overflow_docs: int = 0
+    trees_traversed: float = 0.0
+    trees_full_equiv: float = 0.0
+
+    @property
+    def speedup(self) -> float:
+        return self.trees_full_equiv / max(self.trees_traversed, 1.0)
+
+    @property
+    def continue_rate(self) -> float:
+        return self.docs_continued / max(self.docs, 1)
+
+
+class RankingService:
+    """LEAR-cascade ranking over padded [Q, D, F] request blocks."""
+
+    def __init__(
+        self,
+        ensemble: TreeEnsemble,
+        classifier: LearClassifier,
+        threshold: float = 0.5,
+        capacity_headroom: float = 1.25,
+        top_k: int = 10,
+    ):
+        self.ensemble = ensemble
+        self.classifier = classifier
+        self.threshold = threshold
+        self.headroom = capacity_headroom
+        self.top_k = top_k
+        self.stats = ServiceStats()
+        self._capacity_bucket: int | None = None
+
+        def strategy(partial, mask, features=None):
+            aug = augment_features(features, partial, mask)
+            return self.classifier.continue_mask(aug, mask, self.threshold)
+
+        self.cascade = CascadeRanker(
+            ensemble=ensemble,
+            sentinel=classifier.sentinel,
+            strategy=strategy,
+            classifier_trees=classifier.n_trees,
+        )
+
+    def _pick_capacity(self, n_docs: int) -> int:
+        if self._capacity_bucket is None:
+            # Cold start: assume 40% continue rate.
+            want = int(0.4 * n_docs * self.headroom)
+        else:
+            want = self._capacity_bucket
+        # Bucket to powers of two to bound re-jits.
+        cap = 1 << max(6, int(np.ceil(np.log2(max(want, 64)))))
+        return min(cap, n_docs)
+
+    def rank_batch(self, X: jax.Array, mask: jax.Array):
+        """X: [Q, D, F]; returns (top-k doc indices [Q, k], scores [Q, D])."""
+        Q, D, _ = X.shape
+        n_docs = Q * D
+        capacity = self._pick_capacity(n_docs)
+        result = self.cascade.rank_compacted(
+            X, mask, capacity=capacity, features=X
+        )
+        n_cont = int(result.continue_mask.sum())
+        # Adapt the capacity bucket to the observed continue rate.
+        self._capacity_bucket = int(n_cont * self.headroom)
+
+        s = self.stats
+        s.batches += 1
+        s.queries += Q
+        s.docs += int(mask.sum())
+        s.docs_continued += n_cont
+        s.overflow_docs += result.overflow
+        sentinel, T = self.classifier.sentinel, self.ensemble.n_trees
+        s.trees_traversed += (
+            int(mask.sum()) * (sentinel + self.classifier.n_trees)
+            + n_cont * (T - sentinel)
+        )
+        s.trees_full_equiv += int(mask.sum()) * T
+
+        masked = jnp.where(mask, result.scores, -jnp.inf)
+        top_idx = jax.lax.top_k(masked, self.top_k)[1]
+        return np.asarray(top_idx), np.asarray(result.scores)
+
+
+@dataclasses.dataclass
+class TwoStageCascade:
+    """Beyond-paper: LEAR-style cascade over arbitrary scorers.
+
+    ``sentinel_fn`` cheaply scores all candidates; a learned (or threshold)
+    filter keeps the promising ones; ``full_fn`` scores the survivors. Used
+    for recsys ``retrieval_cand`` in examples/cascade_retrieval.py.
+    """
+
+    sentinel_fn: Callable[[jax.Array], jax.Array]   # ids -> cheap scores
+    full_fn: Callable[[jax.Array], jax.Array]       # ids -> full scores
+    keep_fraction: float = 0.05
+
+    def score(self, cand_ids: jax.Array):
+        cheap = self.sentinel_fn(cand_ids)
+        C = cand_ids.shape[0]
+        keep = max(1, int(C * self.keep_fraction))
+        top_vals, top_idx = jax.lax.top_k(cheap, keep)
+        survivors = cand_ids[top_idx]
+        full = self.full_fn(survivors)
+        return survivors, full, cheap

@@ -1,0 +1,18 @@
+from repro.train.optimizer import Optimizer, adamw, adafactor, adagrad_rowwise, get_optimizer
+from repro.train.trainer import TrainState, make_train_step
+from repro.train.checkpoint import save_checkpoint, restore_checkpoint, latest_step
+from repro.train.elastic import remesh
+
+__all__ = [
+    "Optimizer",
+    "adamw",
+    "adafactor",
+    "adagrad_rowwise",
+    "get_optimizer",
+    "TrainState",
+    "make_train_step",
+    "save_checkpoint",
+    "restore_checkpoint",
+    "latest_step",
+    "remesh",
+]

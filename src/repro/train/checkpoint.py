@@ -1,0 +1,112 @@
+"""Checkpoint/restart: pytree → flat .npz + JSON treedef, atomic, keep-N.
+
+Fault-tolerance contract:
+- writes are atomic (tmp file + ``os.replace``), so a job killed mid-save
+  never corrupts the latest checkpoint;
+- the data-pipeline cursor and the step counter are saved WITH the model
+  state, so restart resumes the exact batch sequence;
+- ``keep_last`` bounds disk usage; restore picks the newest complete step.
+
+No orbax offline — this is a complete minimal implementation with the same
+semantics a TPU job needs (per-host save of addressable shards would slot
+in at ``_to_numpy``; on CPU all arrays are host-local).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import re
+from typing import Any
+
+import jax
+import numpy as np
+
+_SEP = "/"
+
+
+def _flatten(tree) -> dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _SEP.join(_path_str(p) for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def _path_str(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return str(p.idx)
+    if hasattr(p, "name"):
+        return str(p.name)
+    return str(p)
+
+
+def save_checkpoint(
+    directory: str,
+    step: int,
+    state: Any,
+    extra: dict | None = None,
+    keep_last: int = 3,
+) -> str:
+    os.makedirs(directory, exist_ok=True)
+    flat = _flatten(state)
+    tmp = os.path.join(directory, f".tmp_step_{step}.npz")
+    final = os.path.join(directory, f"step_{step:010d}.npz")
+    np.savez(tmp, **flat)
+    os.replace(tmp, final)
+    meta = {"step": step, "extra": extra or {}, "keys": sorted(flat)}
+    tmp_meta = os.path.join(directory, f".tmp_step_{step}.json")
+    with open(tmp_meta, "w") as f:
+        json.dump(meta, f)
+    os.replace(tmp_meta, os.path.join(directory, f"step_{step:010d}.json"))
+    _gc(directory, keep_last)
+    return final
+
+
+def _steps(directory: str) -> list[int]:
+    if not os.path.isdir(directory):
+        return []
+    out = []
+    for name in os.listdir(directory):
+        m = re.fullmatch(r"step_(\d+)\.npz", name)
+        if m and os.path.exists(os.path.join(directory, name.replace(".npz", ".json"))):
+            out.append(int(m.group(1)))
+    return sorted(out)
+
+
+def _gc(directory: str, keep_last: int) -> None:
+    steps = _steps(directory)
+    for s in steps[:-keep_last] if keep_last else []:
+        for ext in (".npz", ".json"):
+            try:
+                os.remove(os.path.join(directory, f"step_{s:010d}{ext}"))
+            except FileNotFoundError:
+                pass
+
+
+def latest_step(directory: str) -> int | None:
+    steps = _steps(directory)
+    return steps[-1] if steps else None
+
+
+def restore_checkpoint(directory: str, target: Any, step: int | None = None):
+    """Restore into the structure of ``target`` (a template pytree).
+
+    Returns (state, extra). Raises FileNotFoundError if no checkpoint.
+    """
+    if step is None:
+        step = latest_step(directory)
+    if step is None:
+        raise FileNotFoundError(f"no checkpoint in {directory}")
+    data = np.load(os.path.join(directory, f"step_{step:010d}.npz"))
+    with open(os.path.join(directory, f"step_{step:010d}.json")) as f:
+        meta = json.load(f)
+    paths, treedef = jax.tree_util.tree_flatten_with_path(target)
+    leaves = []
+    for path, leaf in paths:
+        key = _SEP.join(_path_str(p) for p in path)
+        arr = data[key]
+        leaves.append(arr.astype(leaf.dtype) if hasattr(leaf, "dtype") else arr)
+    return jax.tree_util.tree_unflatten(treedef, leaves), meta["extra"]

@@ -1,0 +1,58 @@
+"""Elastic re-meshing: resume the same logical program on a different mesh.
+
+Because every placement in this framework is expressed through *logical*
+axis rules (:mod:`repro.distributed.sharding`), surviving a node failure is:
+
+1. restore the last checkpoint (host numpy),
+2. build a new mesh from the surviving device count,
+3. re-resolve the SAME logical specs against the new mesh,
+4. ``jax.device_put`` the pytree with the new shardings, and re-jit.
+
+``remesh`` implements steps 2–4. Shrinking the data axis is always legal
+(batch re-divides); changing the model axis is validated against the
+divisibility of every sharded dimension before committing.
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+
+from repro.distributed.sharding import Rules
+
+
+def validate_divisibility(tree, logical_tree, rules: Rules, mesh: Mesh):
+    """Check every sharded dim divides its mesh-axis product."""
+    problems = []
+
+    def check(path, leaf, logical):
+        spec = rules.resolve(*logical)
+        for dim, axes in zip(leaf.shape, spec):
+            if axes is None:
+                continue
+            axes = axes if isinstance(axes, tuple) else (axes,)
+            ways = 1
+            for a in axes:
+                ways *= mesh.shape[a]
+            if dim % ways:
+                problems.append((jax.tree_util.keystr(path), dim, ways))
+
+    jax.tree_util.tree_map_with_path(
+        check, tree, logical_tree,
+        is_leaf=lambda x: hasattr(x, "shape"),
+    )
+    return problems
+
+
+def remesh(tree, logical_tree, rules: Rules, mesh: Mesh):
+    """Re-place a pytree onto ``mesh`` under ``rules``. Raises on bad divisors."""
+    problems = validate_divisibility(tree, logical_tree, rules, mesh)
+    if problems:
+        raise ValueError(f"re-mesh would shard non-divisible dims: {problems[:5]}")
+
+    def put(leaf, logical):
+        return jax.device_put(leaf, NamedSharding(mesh, rules.resolve(*logical)))
+
+    return jax.tree.map(
+        put, tree, logical_tree, is_leaf=lambda x: hasattr(x, "shape")
+    )

@@ -1,0 +1,175 @@
+"""Optimizers as pure pytree transforms (no optax offline).
+
+- ``adamw``      — bf16 params / f32 moments, decoupled weight decay.
+- ``adafactor``  — factored second moment, no momentum (Shazeer & Stern):
+  state is O(rows + cols) per matrix. Used for llama4-maverick (400B), where
+  full AdamW state cannot fit the single-pod mesh.
+- ``adagrad_rowwise`` — DLRM-style: embedding tables (first dim ≥ 2¹⁶) get
+  one accumulator scalar per ROW; everything else dense Adagrad. This is
+  the production optimizer for 10⁸-row tables.
+
+Optimizer states mirror the param tree, so the same logical-axis sharding
+rules apply (ZeRO-1 for free: stacked-layer moments inherit the L→"data"
+sharding of their params).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable
+    update: Callable  # (grads, state, params) -> (new_params, new_state)
+
+
+def _cast_like(x, ref):
+    return x.astype(ref.dtype)
+
+
+def adamw(lr: float = 1e-3, b1: float = 0.9, b2: float = 0.95,
+          eps: float = 1e-8, weight_decay: float = 0.01) -> Optimizer:
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {
+            "m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+            "count": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params):
+        count = state["count"] + 1
+        c1 = 1.0 - b1 ** count.astype(jnp.float32)
+        c2 = 1.0 - b2 ** count.astype(jnp.float32)
+
+        def leaf(g, m, v, p):
+            g = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * g * g
+            step = (m / c1) / (jnp.sqrt(v / c2) + eps)
+            new_p = p.astype(jnp.float32) - lr * (step + weight_decay * p.astype(jnp.float32))
+            return _cast_like(new_p, p), m, v
+
+        flat_p, treedef = jax.tree.flatten(params)
+        flat_g = treedef.flatten_up_to(grads)
+        flat_m = treedef.flatten_up_to(state["m"])
+        flat_v = treedef.flatten_up_to(state["v"])
+        new = [leaf(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+        return (
+            treedef.unflatten([t[0] for t in new]),
+            {
+                "m": treedef.unflatten([t[1] for t in new]),
+                "v": treedef.unflatten([t[2] for t in new]),
+                "count": count,
+            },
+        )
+
+    return Optimizer(init=init, update=update)
+
+
+def adafactor(lr: float = 1e-2, eps: float = 1e-30,
+              clip_threshold: float = 1.0) -> Optimizer:
+    """Factored second moment, no momentum; decay ∝ step^-0.8."""
+
+    def init(params):
+        def leaf(p):
+            if p.ndim >= 2:
+                return {
+                    "vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+                }
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+        return {"f": jax.tree.map(leaf, params), "count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        count = state["count"] + 1
+        decay = 1.0 - count.astype(jnp.float32) ** -0.8
+
+        def leaf(g, s, p):
+            g = g.astype(jnp.float32)
+            g2 = g * g + eps
+            if p.ndim >= 2:
+                vr = decay * s["vr"] + (1 - decay) * g2.mean(axis=-1)
+                vc = decay * s["vc"] + (1 - decay) * g2.mean(axis=-2)
+                denom = vr.mean(axis=-1, keepdims=True)
+                u = g / jnp.sqrt(
+                    (vr / jnp.maximum(denom, eps))[..., None]
+                    * vc[..., None, :]
+                    + eps
+                )
+                new_s = {"vr": vr, "vc": vc}
+            else:
+                v = decay * s["v"] + (1 - decay) * g2
+                u = g / jnp.sqrt(v + eps)
+                new_s = {"v": v}
+            # Update clipping (RMS ≤ clip_threshold).
+            rms = jnp.sqrt(jnp.mean(u * u) + eps)
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            new_p = p.astype(jnp.float32) - lr * u
+            return _cast_like(new_p, p), new_s
+
+        flat_p, treedef = jax.tree.flatten(params)
+        flat_g = treedef.flatten_up_to(grads)
+        flat_s = treedef.flatten_up_to(state["f"])
+        new = [leaf(g, s, p) for g, s, p in zip(flat_g, flat_s, flat_p)]
+        new_params = treedef.unflatten([t[0] for t in new])
+        new_f = treedef.unflatten([t[1] for t in new])
+        return new_params, {"f": new_f, "count": count}
+
+    return Optimizer(init=init, update=update)
+
+
+ROWWISE_MIN_ROWS = 1 << 16
+
+
+def adagrad_rowwise(lr: float = 0.01, eps: float = 1e-8) -> Optimizer:
+    """Row-wise Adagrad for big tables; dense Adagrad elsewhere."""
+
+    def is_table(p):
+        return p.ndim == 2 and p.shape[0] >= ROWWISE_MIN_ROWS
+
+    def init(params):
+        def leaf(p):
+            if is_table(p):
+                return jnp.zeros(p.shape[:1], jnp.float32)
+            return jnp.zeros(p.shape, jnp.float32)
+
+        return {"acc": jax.tree.map(leaf, params)}
+
+    def update(grads, state, params):
+        def leaf(g, a, p):
+            g = g.astype(jnp.float32)
+            if is_table(p):
+                a = a + (g * g).mean(axis=-1)
+                step = g / (jnp.sqrt(a)[:, None] + eps)
+            else:
+                a = a + g * g
+                step = g / (jnp.sqrt(a) + eps)
+            return _cast_like(p.astype(jnp.float32) - lr * step, p), a
+
+        flat_p, treedef = jax.tree.flatten(params)
+        flat_g = treedef.flatten_up_to(grads)
+        flat_a = treedef.flatten_up_to(state["acc"])
+        new = [leaf(g, a, p) for g, a, p in zip(flat_g, flat_a, flat_p)]
+        return (
+            treedef.unflatten([t[0] for t in new]),
+            {"acc": treedef.unflatten([t[1] for t in new])},
+        )
+
+    return Optimizer(init=init, update=update)
+
+
+def get_optimizer(name: str, lr: float = 1e-3) -> Optimizer:
+    if name == "adamw":
+        return adamw(lr)
+    if name == "adafactor":
+        return adafactor(lr)
+    if name == "adagrad_rowwise":
+        return adagrad_rowwise(lr)
+    raise ValueError(f"unknown optimizer {name!r}")

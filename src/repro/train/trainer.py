@@ -1,0 +1,103 @@
+"""Train-step factory: grad accumulation, aux metrics, optional grad clip.
+
+``make_train_step(loss_fn, optimizer, microbatch)`` returns a pure
+``step(state, batch) → (state, metrics)``:
+
+- microbatch > 0 splits the global batch on its leading axis and
+  accumulates gradients with ``lax.scan`` (compute of microbatch *i+1*
+  overlaps the DP all-reduce of microbatch *i*'s gradients under XLA's
+  latency-hiding scheduler — the standard accumulation overlap).
+- Gradient accumulation dtype is configurable (f32 default; bf16 for the
+  400B config where the f32 accumulator alone would not fit).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.train.optimizer import Optimizer
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class TrainState:
+    params: Any
+    opt_state: Any
+    step: jax.Array
+
+
+def init_state(params, optimizer: Optimizer) -> TrainState:
+    return TrainState(
+        params=params,
+        opt_state=optimizer.init(params),
+        step=jnp.zeros((), jnp.int32),
+    )
+
+
+def make_train_step(
+    loss_fn: Callable,            # (params, batch) -> scalar loss
+    optimizer: Optimizer,
+    microbatch: int = 0,
+    grad_clip: float = 0.0,
+    accum_dtype=jnp.float32,
+):
+    def grads_of(params, batch):
+        return jax.value_and_grad(loss_fn)(params, batch)
+
+    def step(state: TrainState, batch) -> tuple[TrainState, dict]:
+        params = state.params
+        if microbatch:
+            lead = jax.tree.leaves(batch)[0].shape[0]
+            assert lead % microbatch == 0, (lead, microbatch)
+            n_chunks = lead // microbatch
+            chunked = jax.tree.map(
+                lambda x: constrain(
+                    x.reshape(n_chunks, microbatch, *x.shape[1:]),
+                    None, "batch", *([None] * (x.ndim - 1)),
+                ),
+                batch,
+            )
+
+            def accum(carry, mb):
+                loss_sum, gacc = carry
+                loss, g = grads_of(params, mb)
+                gacc = jax.tree.map(
+                    lambda a, b: a + b.astype(accum_dtype), gacc, g
+                )
+                return (loss_sum + loss, gacc), None
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, accum_dtype), params
+            )
+            (loss_sum, gsum), _ = jax.lax.scan(
+                accum, (jnp.float32(0.0), zeros), chunked
+            )
+            loss = loss_sum / n_chunks
+            grads = jax.tree.map(lambda g: g / n_chunks, gsum)
+        else:
+            loss, grads = grads_of(params, batch)
+
+        gnorm = optax_global_norm(grads)
+        if grad_clip > 0:
+            scale = jnp.minimum(1.0, grad_clip / jnp.maximum(gnorm, 1e-9))
+            grads = jax.tree.map(lambda g: g * scale, grads)
+
+        new_params, new_opt = optimizer.update(grads, state.opt_state, params)
+        new_state = TrainState(
+            params=new_params, opt_state=new_opt, step=state.step + 1
+        )
+        return new_state, {"loss": loss, "grad_norm": gnorm}
+
+    return step
+
+
+def optax_global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves)
+    )

@@ -1,0 +1,121 @@
+"""Forest substrate tests: scorer equivalence, slicing, GBDT training."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.forest import (
+    GBDTParams,
+    TreeEnsemble,
+    score_bitvector,
+    score_level,
+    score_numpy_oracle,
+    partial_scores,
+    slice_trees,
+    train_gbdt,
+    train_lambdamart,
+)
+from repro.forest.ensemble import random_ensemble, from_arrays
+from repro.metrics.ranking import mean_ndcg
+
+
+@pytest.fixture(scope="module")
+def rng():
+    return np.random.default_rng(0)
+
+
+@pytest.mark.parametrize("depth", [1, 3, 6])
+@pytest.mark.parametrize("n_trees", [1, 17])
+def test_scorers_agree(rng, depth, n_trees):
+    ens = random_ensemble(0, n_trees=n_trees, depth=depth, n_features=12)
+    X = rng.normal(size=(64, 12)).astype(np.float32)
+    ref = score_numpy_oracle(ens, X)
+    bv = np.asarray(score_bitvector(ens, jnp.asarray(X)))
+    lv = np.asarray(score_level(ens, jnp.asarray(X)))
+    np.testing.assert_allclose(bv, ref, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(lv, ref, rtol=1e-5, atol=1e-5)
+
+
+def test_irregular_tree_from_arrays(rng):
+    # A lopsided 3-internal-node tree:      n0
+    #                                     /    \
+    #                                    n1    leafC
+    #                                   /  \
+    #                                leafA  n2
+    #                                      /  \
+    #                                   leafB leafD
+    feats = [np.array([0, 1, 2])]
+    thrs = [np.array([0.0, -1.0, 0.5], dtype=np.float32)]
+    lefts = [np.array([1, -1, -2])]
+    rights = [np.array([-3, 2, -4])]
+    leaf_vals = [np.array([1.0, 2.0, 3.0, 4.0], dtype=np.float32)]
+    ens = from_arrays(feats, thrs, lefts, rights, leaf_vals)
+    X = rng.normal(size=(128, 3)).astype(np.float32)
+    ref = score_numpy_oracle(ens, X)
+    bv = np.asarray(score_bitvector(ens, jnp.asarray(X)))
+    np.testing.assert_allclose(bv, ref, rtol=1e-5)
+
+
+def test_partial_plus_tail_equals_full(rng):
+    ens = random_ensemble(1, n_trees=40, depth=5, n_features=8)
+    X = rng.normal(size=(32, 8)).astype(np.float32)
+    head, tail = partial_scores(ens, jnp.asarray(X), sentinel=13)
+    full = score_bitvector(ens, jnp.asarray(X))
+    np.testing.assert_allclose(np.asarray(head + tail), np.asarray(full), rtol=1e-4, atol=1e-5)
+
+
+def test_slice_trees_matches_manual(rng):
+    ens = random_ensemble(2, n_trees=20, depth=4, n_features=6)
+    X = rng.normal(size=(16, 6)).astype(np.float32)
+    head = score_bitvector(slice_trees(ens, 0, 7), jnp.asarray(X))
+    tail = score_bitvector(slice_trees(ens, 7, 20), jnp.asarray(X))
+    full = score_bitvector(ens, jnp.asarray(X))
+    np.testing.assert_allclose(np.asarray(head + tail), np.asarray(full), rtol=1e-4, atol=1e-5)
+
+
+def test_gbdt_l2_fits_function(rng):
+    X = rng.normal(size=(2000, 5)).astype(np.float32)
+    y = (np.sin(X[:, 0]) + 0.5 * (X[:, 1] > 0) + 0.1 * X[:, 2]).astype(np.float32)
+    params = GBDTParams(n_trees=40, depth=4, learning_rate=0.2)
+    ens = train_gbdt(X, y, params, objective="l2")
+    pred = np.asarray(score_bitvector(ens, jnp.asarray(X)))
+    mse = float(np.mean((pred - y) ** 2))
+    base = float(np.var(y))
+    assert mse < 0.15 * base, f"GBDT failed to fit: mse={mse}, var={base}"
+
+
+def test_gbdt_logistic_classifies(rng):
+    X = rng.normal(size=(2000, 4)).astype(np.float32)
+    y = (X[:, 0] + 0.5 * X[:, 1] > 0).astype(np.float32)
+    w = np.where(y > 0, 2.0, 1.0).astype(np.float32)  # cost-sensitive path
+    params = GBDTParams(n_trees=30, depth=4, learning_rate=0.3)
+    ens = train_gbdt(X, y, params, objective="logistic", weights=w)
+    logits = np.asarray(score_bitvector(ens, jnp.asarray(X)))
+    acc = float(np.mean((logits > 0) == (y > 0.5)))
+    assert acc > 0.9, f"accuracy {acc}"
+
+
+def test_lambdamart_improves_ndcg(rng):
+    Q, D, F = 60, 24, 6
+    X = rng.normal(size=(Q, D, F)).astype(np.float32)
+    # Relevance depends on two features → learnable ranking signal.
+    util = X[..., 0] + 0.7 * X[..., 1] + 0.2 * rng.normal(size=(Q, D))
+    labels = np.clip(np.digitize(util, [-0.5, 0.5, 1.2, 1.8]), 0, 4).astype(np.float32)
+    mask = np.ones((Q, D), dtype=bool)
+    mask[:, 20:] = rng.random((Q, 4)) > 0.5  # ragged queries
+    params = GBDTParams(n_trees=30, depth=4, learning_rate=0.2)
+    ens = train_lambdamart(X, labels, mask, params, k=10)
+    flat = jnp.asarray(X.reshape(Q * D, F))
+    scores = np.asarray(score_bitvector(ens, flat)).reshape(Q, D)
+    ndcg = float(mean_ndcg(jnp.asarray(scores), jnp.asarray(labels), jnp.asarray(mask), k=10))
+    rand = float(mean_ndcg(jnp.asarray(rng.normal(size=(Q, D)).astype(np.float32)),
+                           jnp.asarray(labels), jnp.asarray(mask), k=10))
+    assert ndcg > rand + 0.15, f"lambdamart ndcg {ndcg} vs random {rand}"
+
+
+def test_bitvector_bf16_thresholds_close(rng):
+    ens = random_ensemble(3, n_trees=10, depth=4, n_features=4)
+    X = rng.normal(size=(16, 4)).astype(np.float32)
+    full = np.asarray(score_bitvector(ens, jnp.asarray(X)))
+    assert np.all(np.isfinite(full))

@@ -1,0 +1,68 @@
+"""Correctness of the flash-style blockwise attention vs naive attention."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.layers import blockwise_attention, decode_attention
+
+
+def naive_attention(q, k, v, causal, q_offset=0):
+    B, Sq, H, Dh = q.shape
+    _, Skv, Hkv, _ = k.shape
+    G = H // Hkv
+    qf = q.reshape(B, Sq, Hkv, G, Dh).astype(np.float32)
+    scores = np.einsum("bqhgd,bkhd->bhgqk", qf, np.asarray(k, np.float32))
+    scores /= np.sqrt(Dh)
+    if causal:
+        qpos = q_offset + np.arange(Sq)
+        mask = qpos[:, None] >= np.arange(Skv)[None, :]
+        scores = np.where(mask[None, None, None], scores, -1e30)
+    p = np.exp(scores - scores.max(-1, keepdims=True))
+    p = p / p.sum(-1, keepdims=True)
+    out = np.einsum("bhgqk,bkhd->bqhgd", p, np.asarray(v, np.float32))
+    return out.reshape(B, Sq, H, Dh)
+
+
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize(
+    "B,Sq,Skv,H,Hkv,q_block,kv_block",
+    [
+        (2, 64, 64, 4, 2, 16, 32),
+        (3, 32, 32, 6, 1, 8, 8),     # B != n_blocks (regression: axis swap)
+        (1, 128, 128, 2, 2, 128, 16),
+        (2, 48, 48, 4, 4, 16, 48),
+    ],
+)
+def test_blockwise_matches_naive(causal, B, Sq, Skv, H, Hkv, q_block, kv_block):
+    rng = np.random.default_rng(B * Sq + H)
+    Dh = 16
+    q = rng.normal(size=(B, Sq, H, Dh)).astype(np.float32)
+    k = rng.normal(size=(B, Skv, Hkv, Dh)).astype(np.float32)
+    v = rng.normal(size=(B, Skv, Hkv, Dh)).astype(np.float32)
+    got = np.asarray(
+        blockwise_attention(
+            jnp.asarray(q), jnp.asarray(k), jnp.asarray(v),
+            causal=causal, q_block=q_block, kv_block=kv_block,
+        )
+    )
+    ref = naive_attention(q, k, v, causal)
+    np.testing.assert_allclose(got, ref, rtol=2e-4, atol=2e-4)
+
+
+def test_decode_matches_naive_last_token():
+    rng = np.random.default_rng(0)
+    B, S, H, Hkv, Dh = 2, 32, 4, 2, 16
+    pos = 20
+    q = rng.normal(size=(B, 1, H, Dh)).astype(np.float32)
+    k_cache = rng.normal(size=(B, S, Hkv, Dh)).astype(np.float32)
+    v_cache = rng.normal(size=(B, S, Hkv, Dh)).astype(np.float32)
+    got = np.asarray(
+        decode_attention(jnp.asarray(q), jnp.asarray(k_cache),
+                         jnp.asarray(v_cache), jnp.int32(pos))
+    )
+    ref = naive_attention(
+        q, k_cache[:, :pos], v_cache[:, :pos], causal=False
+    )
+    np.testing.assert_allclose(got, ref, rtol=2e-4, atol=2e-4)

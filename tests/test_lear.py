@@ -1,0 +1,145 @@
+"""LEAR core tests: strategies, labels/weights, classifier, cascade engine."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    CascadeRanker,
+    augment_features,
+    build_continue_labels,
+    ept_continue,
+    ert_continue,
+    ideal_continue,
+    instance_weights,
+    train_lear,
+)
+from repro.data import make_letor_dataset
+from repro.forest import GBDTParams, score_bitvector, train_lambdamart
+from repro.forest.ensemble import random_ensemble
+from repro.metrics import mean_ndcg, precision_recall
+
+
+@pytest.fixture(scope="module")
+def small_ltr():
+    ds = make_letor_dataset("msn1", n_queries=80, n_features=24, docs_scale=0.3, seed=1)
+    params = GBDTParams(n_trees=40, depth=4, learning_rate=0.2)
+    ens = train_lambdamart(ds.X, ds.labels.astype(np.float32), ds.mask, params, k=10)
+    return ds, ens
+
+
+def _scores(ens, ds):
+    Q, D, F = ds.X.shape
+    return np.asarray(
+        score_bitvector(ens, jnp.asarray(ds.X.reshape(Q * D, F)))
+    ).reshape(Q, D)
+
+
+def test_ert_keeps_exactly_topk(small_ltr):
+    ds, ens = small_ltr
+    partial = jnp.asarray(_scores(ens, ds))
+    mask = jnp.asarray(ds.mask)
+    cont = ert_continue(partial, mask, k_s=15)
+    per_q = np.asarray(cont.sum(axis=1))
+    expect = np.minimum(np.asarray(mask.sum(axis=1)), 15)
+    np.testing.assert_array_equal(per_q, expect)
+
+
+def test_ept_monotone_in_p(small_ltr):
+    ds, ens = small_ltr
+    partial = jnp.asarray(_scores(ens, ds))
+    mask = jnp.asarray(ds.mask)
+    n_prev = -1
+    for p in (0.0, 0.2, 0.5, 1.0):
+        n = int(ept_continue(partial, mask, k_s=15, p=p).sum())
+        assert n >= n_prev  # larger p ⇒ more conservative ⇒ more continues
+        n_prev = n
+    # p=0 keeps at least the top-k_s themselves.
+    assert int(ept_continue(partial, mask, 15, 0.0).sum()) >= int(
+        ert_continue(partial, mask, 15).sum()
+    )
+
+
+def test_ideal_preserves_ndcg(small_ltr):
+    ds, ens = small_ltr
+    Q, D, F = ds.X.shape
+    flat = jnp.asarray(ds.X.reshape(Q * D, F))
+    _, per_tree = score_bitvector(ens, flat, return_per_tree=True)
+    sentinel = 10
+    partial = np.asarray(per_tree[:, :sentinel].sum(axis=1)).reshape(Q, D)
+    full = np.asarray(per_tree.sum(axis=1)).reshape(Q, D)
+    mask = jnp.asarray(ds.mask)
+    labels = jnp.asarray(ds.labels)
+    cont, cut = ideal_continue(
+        jnp.asarray(partial), jnp.asarray(full), labels, mask, k=10
+    )
+    ee_scores = jnp.where(cont, jnp.asarray(full), jnp.asarray(partial))
+    ndcg_full = float(mean_ndcg(jnp.asarray(full), labels, mask, 10))
+    ndcg_ee = float(mean_ndcg(ee_scores, labels, mask, 10))
+    assert ndcg_ee >= ndcg_full - 1e-6, (ndcg_ee, ndcg_full)
+    # Oracle cuts must be valid ranks.
+    assert int(cut.min()) >= 0 and int(cut.max()) <= ds.X.shape[1]
+
+
+def test_labels_and_weights(small_ltr):
+    ds, ens = small_ltr
+    full = jnp.asarray(_scores(ens, ds))
+    mask = jnp.asarray(ds.mask)
+    rel = jnp.asarray(ds.labels)
+    cont = build_continue_labels(full, rel, mask, k=15)
+    # Continue docs are relevant and ≤ 15 per query.
+    assert int((cont & (rel == 0)).sum()) == 0
+    assert int(cont.sum(axis=1).max()) <= 15
+    w = instance_weights(cont, rel, mask)
+    assert float(w[~np.asarray(mask)].sum() if (~np.asarray(mask)).any() else 0.0) == 0.0
+    # Continue docs (minority) should get larger average weight than exits.
+    w_np, c_np, m_np = np.asarray(w), np.asarray(cont), np.asarray(ds.mask)
+    if c_np.any():
+        assert w_np[c_np].mean() > w_np[m_np & ~c_np].mean()
+
+
+def test_augment_features_shape_and_range(small_ltr):
+    ds, ens = small_ltr
+    partial = jnp.asarray(_scores(ens, ds))
+    mask = jnp.asarray(ds.mask)
+    aug = augment_features(jnp.asarray(ds.X), partial, mask)
+    Q, D, F = ds.X.shape
+    assert aug.shape == (Q, D, F + 4)
+    norm = np.asarray(aug[..., F + 2])
+    assert norm.min() >= 0.0 and norm.max() <= 1.0
+
+
+def test_train_lear_recall(small_ltr):
+    ds, ens = small_ltr
+    sentinel = 10
+    clf = train_lear(ds.X, ds.labels, ds.mask, ens, sentinel=sentinel, k=15)
+    assert clf.n_trees == 10
+    Q, D, F = ds.X.shape
+    flat = jnp.asarray(ds.X.reshape(Q * D, F))
+    _, per_tree = score_bitvector(ens, flat, return_per_tree=True)
+    partial = (per_tree[:, :sentinel].sum(axis=1) + ens.base_score).reshape(Q, D)
+    full = (per_tree.sum(axis=1) + ens.base_score).reshape(Q, D)
+    mask = jnp.asarray(ds.mask)
+    aug = augment_features(jnp.asarray(ds.X), partial, mask)
+    cont_true = build_continue_labels(full, jnp.asarray(ds.labels), mask, k=15)
+    cont_pred = clf.continue_mask(aug, mask, threshold=0.5)
+    pr = precision_recall(cont_pred, cont_true, mask)
+    # In-sample recall on Continue should be high (paper: 0.97/0.99 on test).
+    assert pr["continue_recall"] > 0.85, pr
+
+
+def test_cascade_compacted_matches_reference(small_ltr):
+    ds, ens = small_ltr
+    mask = jnp.asarray(ds.mask)
+    cascade = CascadeRanker(
+        ensemble=ens, sentinel=10,
+        strategy=lambda partial, m: ert_continue(partial, m, k_s=12),
+    )
+    ref = cascade.rank(jnp.asarray(ds.X), mask)
+    capacity = int(ref.continue_mask.sum()) + 8
+    got = cascade.rank_compacted(jnp.asarray(ds.X), mask, capacity=capacity)
+    assert got.overflow == 0
+    np.testing.assert_allclose(
+        np.asarray(got.scores), np.asarray(ref.scores), rtol=1e-4, atol=1e-5
+    )
+    assert got.speedup > 1.5  # k_s=12 of ~36 docs/query must cut work a lot

@@ -1,0 +1,137 @@
+"""Property-based tests (hypothesis) for system invariants.
+
+Invariants:
+1. Kernel/oracle agreement on arbitrary ensembles and inputs.
+2. Early-exit strategy sanity: ERT keeps exactly min(k_s, n_docs); EPT is
+   monotone in p and always ⊇ ERT(k_s).
+3. Head+tail decomposition equals full scoring at any sentinel.
+4. NDCG invariance under score-order-preserving transforms.
+5. NequIP rotation equivariance: energies invariant, forces covariant.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.strategies import ept_continue, ert_continue
+from repro.forest.ensemble import random_ensemble
+from repro.forest.scoring import partial_scores, score_bitvector, score_numpy_oracle
+from repro.kernels.ops import forest_score
+from repro.metrics.ranking import ndcg_at_k
+
+SETTINGS = dict(max_examples=20, deadline=None)
+
+
+@given(
+    n_trees=st.integers(1, 24),
+    depth=st.integers(1, 6),
+    n_feat=st.integers(1, 40),
+    n_docs=st.integers(1, 48),
+    seed=st.integers(0, 2**16),
+)
+@settings(**SETTINGS)
+def test_kernel_matches_oracle_property(n_trees, depth, n_feat, n_docs, seed):
+    rng = np.random.default_rng(seed)
+    ens = random_ensemble(seed, n_trees=n_trees, depth=depth, n_features=n_feat)
+    X = rng.normal(size=(n_docs, n_feat)).astype(np.float32)
+    got = np.asarray(forest_score(ens, jnp.asarray(X), interpret=True))
+    ref = score_numpy_oracle(ens, X)
+    np.testing.assert_allclose(got, ref, rtol=1e-4, atol=1e-4)
+
+
+@given(
+    sentinel=st.integers(0, 20),
+    seed=st.integers(0, 2**16),
+)
+@settings(**SETTINGS)
+def test_head_tail_decomposition(sentinel, seed):
+    rng = np.random.default_rng(seed)
+    ens = random_ensemble(seed, n_trees=20, depth=4, n_features=6)
+    X = jnp.asarray(rng.normal(size=(16, 6)).astype(np.float32))
+    head, tail = partial_scores(ens, X, sentinel)
+    full = score_bitvector(ens, X)
+    np.testing.assert_allclose(np.asarray(head + tail), np.asarray(full),
+                               rtol=1e-4, atol=1e-5)
+
+
+@given(
+    k_s=st.integers(1, 30),
+    n_docs=st.integers(2, 64),
+    seed=st.integers(0, 2**16),
+)
+@settings(**SETTINGS)
+def test_ert_counts(k_s, n_docs, seed):
+    rng = np.random.default_rng(seed)
+    partial = jnp.asarray(rng.normal(size=(4, n_docs)).astype(np.float32))
+    mask = jnp.asarray(rng.random((4, n_docs)) < 0.8)
+    cont = ert_continue(partial, mask, k_s=k_s)
+    per_q = np.asarray(cont.sum(axis=1))
+    expect = np.minimum(np.asarray(mask.sum(axis=1)), k_s)
+    np.testing.assert_array_equal(per_q, expect)
+
+
+@given(
+    p1=st.floats(0.0, 1.0),
+    p2=st.floats(0.0, 1.0),
+    seed=st.integers(0, 2**16),
+)
+@settings(**SETTINGS)
+def test_ept_monotone_and_superset(p1, p2, seed):
+    lo, hi = min(p1, p2), max(p1, p2)
+    rng = np.random.default_rng(seed)
+    partial = jnp.asarray(rng.normal(size=(3, 40)).astype(np.float32))
+    mask = jnp.ones((3, 40), bool)
+    c_lo = ept_continue(partial, mask, k_s=10, p=lo)
+    c_hi = ept_continue(partial, mask, k_s=10, p=hi)
+    assert bool((~c_lo | c_hi).all())            # monotone: lo ⊆ hi
+    c_ert = ert_continue(partial, mask, k_s=10)
+    assert bool((~c_ert | c_lo).all())           # EPT ⊇ ERT at any p ≥ 0
+
+
+@given(
+    scale=st.floats(0.1, 10.0),
+    shift=st.floats(-5.0, 5.0),
+    seed=st.integers(0, 2**16),
+)
+@settings(**SETTINGS)
+def test_ndcg_invariant_to_monotone_transform(scale, shift, seed):
+    rng = np.random.default_rng(seed)
+    scores = jnp.asarray(rng.normal(size=(5, 30)).astype(np.float32))
+    labels = jnp.asarray(rng.integers(0, 5, size=(5, 30)))
+    mask = jnp.asarray(rng.random((5, 30)) < 0.9)
+    a = ndcg_at_k(scores, labels, mask, 10)
+    b = ndcg_at_k(scores * scale + shift, labels, mask, 10)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5)
+
+
+@settings(max_examples=5, deadline=None)
+@given(seed=st.integers(0, 2**10))
+def test_nequip_rotation_equivariance(seed):
+    from repro.configs import get_smoke_config
+    from repro.models import nequip as nq
+    from repro.models.so3 import _random_rotation
+
+    cfg = get_smoke_config("nequip")
+    rng = np.random.default_rng(seed)
+    N, E = 12, 30
+    params = nq.init(cfg, jax.random.key(seed))
+    pos = rng.normal(size=(N, 3)).astype(np.float32)
+    species = rng.integers(0, cfg.n_species, size=N).astype(np.int32)
+    src = rng.integers(0, N, size=E).astype(np.int32)
+    dst = rng.integers(0, N, size=E).astype(np.int32)
+
+    def energy(p):
+        return nq.forward_energy(
+            cfg, params, jnp.asarray(p), jnp.asarray(species),
+            jnp.asarray(src), jnp.asarray(dst),
+        )[0]
+
+    R = _random_rotation(rng).astype(np.float32)
+    e1 = float(energy(pos))
+    e2 = float(energy(pos @ R.T))
+    np.testing.assert_allclose(e1, e2, rtol=2e-4, atol=2e-5)
+
+    f1 = np.asarray(jax.grad(lambda p: energy(p))(jnp.asarray(pos)))
+    f2 = np.asarray(jax.grad(lambda p: energy(p))(jnp.asarray(pos @ R.T)))
+    np.testing.assert_allclose(f1 @ R.T, f2, rtol=2e-3, atol=2e-4)
