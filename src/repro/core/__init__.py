@@ -9,7 +9,10 @@ ensembles, plus the heuristic baselines it is evaluated against.
   ``w_d = 2^{r_d}/f_q(l_d)``, 10-tree logistic GBDT classifier.
 - :mod:`repro.core.cascade` — the execution engine: sentinel-partitioned
   ensemble traversal with batch compaction (the TPU realization of
-  document-level early exit).
+  document-level early exit), including the multi-sentinel progressive
+  engine (one segmented head launch + one compacted tail launch).
+- :mod:`repro.core.compaction` — O(n) cumsum survivor compaction plus the
+  O(n log n) argsort reference it replaced.
 """
 
 from repro.core.strategies import ert_continue, ept_continue, ideal_continue
@@ -20,7 +23,11 @@ from repro.core.lear import (
     instance_weights,
     train_lear,
 )
-from repro.core.cascade import CascadeRanker, CascadeResult
+from repro.core.cascade import CascadeRanker, CascadeResult, bucket_capacity
+from repro.core.compaction import (
+    compact_indices_argsort,
+    compact_indices_cumsum,
+)
 
 __all__ = [
     "ert_continue",
@@ -33,4 +40,7 @@ __all__ = [
     "train_lear",
     "CascadeRanker",
     "CascadeResult",
+    "bucket_capacity",
+    "compact_indices_cumsum",
+    "compact_indices_argsort",
 ]

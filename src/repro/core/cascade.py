@@ -1,19 +1,46 @@
 """Sentinel-partitioned cascade execution — early exit as batch compaction.
 
-Two execution paths with identical ranking semantics:
+Three execution paths with identical ranking semantics:
 
 - :meth:`CascadeRanker.rank` — *reference* path: scores every document
   through head and tail, applies the continue mask arithmetically. Used for
-  quality evaluation and as the oracle for the compacted path. Cost is
+  quality evaluation and as the oracle for the compacted paths. Cost is
   accounted in the paper's currency (trees traversed), not saved.
-- :meth:`CascadeRanker.rank_compacted` — *production* path: after the
-  sentinel, surviving documents are gathered into a dense prefix (one
-  stable argsort over the exit mask) and ONLY that compacted block runs the
-  tail trees through the Pallas kernel. This is the TPU realization of
-  document-level early exit: the saved work is the reduced doc dimension of
-  the dominant kernel. A static ``capacity`` bounds the compacted block so
-  the step stays jit-compatible; overflow documents (beyond capacity)
-  continue anyway — quality is never sacrificed silently.
+- :meth:`CascadeRanker.rank_compacted` — single-sentinel *reference
+  production* path: after the sentinel, surviving documents are gathered
+  into a dense prefix (O(n) cumsum stable partition) and ONLY that
+  compacted block runs the tail trees through the Pallas kernel.
+- :meth:`CascadeRanker.rank_progressive` — the *multi-sentinel engine* and
+  the serving hot path. One sentinel-segmented Pallas launch over the head
+  trees yields the prefix score of every document at EVERY sentinel
+  (``[Q, D, S]``); stage decisions are then pure vector work (no kernel,
+  no HBM round-trip between stages), exit masks are nested
+  (``alive_k = alive_{k-1} ∧ continue_k`` — a document that exits never
+  re-enters), and exactly ONE tail launch runs the remaining trees on the
+  cumsum-compacted survivors of the last stage. Head and tail score from
+  the same cached padded buffer set (:func:`repro.kernels.ops.padded_forest`
+  — pad once, score many), so an S-stage cascade costs 1 segmented head
+  launch + 1 tail launch instead of S+1 launches with full re-slice/re-pad
+  and an HBM round-trip each.
+
+  Design note: for LEAR-scale ensembles the final sentinel sits at a few
+  percent of the ensemble (s_S ≪ T), so scoring every document through the
+  whole head region — rather than per-stage tails on shrinking survivor
+  sets — trades a small amount of redundant VPU work on early-exited
+  documents for the elimination of S−1 kernel launches, S−1 HBM partial
+  round-trips, and all intermediate gather/scatter traffic. The speedup
+  metric stays in the paper's currency (trees *logically* traversed under
+  early-exit semantics), matching :func:`metrics.speedup.trees_traversed`.
+
+A static ``capacity`` bounds each compacted block so the step stays
+jit-compatible; :func:`bucket_capacity` buckets requested capacities to
+powers of two so the jit cache stays bounded. Survivors beyond capacity
+keep their sentinel prefix score (bounded, graceful quality degradation —
+never a crash), and the overflow count is a LAZY device scalar: the hot
+path never blocks on it (read it in a stats path via
+``int(result.overflow)``). For the same reason, ``rank_progressive``
+reports ``speedup`` as a lazy device scalar too; the reference paths keep
+returning host floats.
 
 The strategy is injected as a callable ``(partial, mask, aux) → continue
 mask`` so LEAR / ERT / EPT / EE_ideal all run through the same engine.
@@ -22,24 +49,40 @@ mask`` so LEAR / ERT / EPT / EE_ideal all run through the same engine.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial as _partial
-from typing import Callable
+from typing import Callable, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
+from repro.core.compaction import COMPACTORS, compact_indices_cumsum
 from repro.forest.ensemble import TreeEnsemble, slice_trees
 from repro.forest.scoring import score_bitvector
-from repro.kernels.ops import forest_score
-from repro.metrics.speedup import speedup_vs_full
+from repro.kernels.ops import (
+    forest_score,
+    forest_score_range,
+    forest_score_segments,
+    padded_forest,
+)
+from repro.metrics.speedup import speedup_progressive, speedup_vs_full
+
+
+def bucket_capacity(want: int, limit: int, minimum: int = 64) -> int:
+    """Power-of-two capacity bucketing (bounded jit cache), clipped to limit."""
+    cap = 1 << int(np.ceil(np.log2(max(want, minimum, 1))))
+    return min(cap, limit)
 
 
 @dataclasses.dataclass
 class CascadeResult:
     scores: jax.Array          # [Q, D] final scores (exited docs keep partial)
-    continue_mask: jax.Array   # [Q, D]
-    speedup: float             # trees-traversed speedup vs Full
-    overflow: int = 0          # docs beyond compaction capacity (0 = exact)
+    continue_mask: jax.Array   # [Q, D] — survivors of the LAST stage
+    speedup: float | jax.Array  # trees-traversed speedup vs Full (lazy scalar
+    #                             on the progressive path; host float on the
+    #                             reference paths)
+    overflow: jax.Array | int = 0  # lazy device scalar; docs beyond capacity
+    stage_masks: list | None = None   # progressive: nested alive mask per stage
+    partials: jax.Array | None = None  # progressive: [Q, D, S] sentinel prefixes
 
 
 @dataclasses.dataclass
@@ -48,11 +91,19 @@ class CascadeRanker:
     sentinel: int
     strategy: Callable[..., jax.Array]
     classifier_trees: int = 0   # extra per-doc cost charged for the strategy
+    _ht_cache: tuple | None = dataclasses.field(
+        default=None, init=False, repr=False, compare=False
+    )
 
     def _head_tail(self):
-        head = slice_trees(self.ensemble, 0, self.sentinel)
-        tail = slice_trees(self.ensemble, self.sentinel, self.ensemble.n_trees)
-        return head, tail
+        # Sliced sub-ensembles are cached: repeated rank*() calls reuse the
+        # same TreeEnsemble objects (and therefore their padded-buffer
+        # caches) instead of re-slicing per call.
+        if self._ht_cache is None:
+            head = slice_trees(self.ensemble, 0, self.sentinel)
+            tail = slice_trees(self.ensemble, self.sentinel, self.ensemble.n_trees)
+            self._ht_cache = (head, tail)
+        return self._ht_cache
 
     def rank(self, X: jax.Array, mask: jax.Array, **strategy_kwargs) -> CascadeResult:
         """Reference path: full compute, masked combine."""
@@ -73,17 +124,16 @@ class CascadeRanker:
         X: jax.Array,
         mask: jax.Array,
         capacity: int,
+        compaction: str = "cumsum",
         **strategy_kwargs,
     ) -> CascadeResult:
-        """Production path: tail trees see only the compacted survivors."""
+        """Single-sentinel production path: tail sees only compacted survivors."""
         Q, D, F = X.shape
         head, tail = self._head_tail()
         partial = forest_score(head, X.reshape(Q * D, F)).reshape(Q, D)
         cont = self.strategy(partial, mask, **strategy_kwargs)
-        scores, n_cont = _compacted_tail(
-            X, partial, cont, tail, capacity
-        )
-        overflow = int(jnp.maximum(n_cont - capacity, 0))
+        scores, n_cont = _compacted_tail(X, partial, cont, tail, capacity, compaction)
+        overflow = jnp.maximum(n_cont - capacity, 0)  # lazy: no device sync
         sp = speedup_vs_full(
             cont, mask, self.sentinel, self.ensemble.n_trees, self.classifier_trees
         )
@@ -91,21 +141,120 @@ class CascadeRanker:
             scores=scores, continue_mask=cont, speedup=sp, overflow=overflow
         )
 
+    def rank_progressive(
+        self,
+        X: jax.Array,
+        mask: jax.Array,
+        sentinels: Sequence[int],
+        capacities: Sequence[int] | int | None = None,
+        strategies: Sequence[Callable[..., jax.Array]] | None = None,
+        *,
+        classifier_trees: Sequence[int] | int | None = None,
+        block_t: int = 16,
+        **strategy_kwargs,
+    ) -> CascadeResult:
+        """Multi-sentinel engine: 1 segmented head launch + ≤1 tail launch.
 
-@_partial(jax.jit, static_argnames=("capacity",))
-def _compacted_tail(X, partial, cont, tail: TreeEnsemble, capacity: int):
-    """Gather survivors → dense block of ``capacity`` → tail kernel → scatter."""
+        ``sentinels`` need not be tree-block aligned (segments are padded
+        independently in the cached buffers). ``capacities`` bounds the
+        compacted survivor block per stage (only the last stage launches a
+        kernel; earlier entries bound the bookkeeping/overflow accounting);
+        ``None`` derives them from :func:`bucket_capacity`. ``strategies``
+        defaults to ``self.strategy`` at every stage; ``classifier_trees``
+        (int or per-stage sequence) defaults to ``self.classifier_trees``
+        at every stage for the cost accounting. With a single sentinel this
+        path is bit-exact with :meth:`rank_compacted`, and ``speedup`` /
+        ``overflow`` stay lazy device scalars — the hot path never syncs.
+        """
+        Q, D, F = X.shape
+        sentinels = tuple(int(s) for s in sentinels)
+        S = len(sentinels)
+        T = self.ensemble.n_trees
+        assert S >= 1 and list(sentinels) == sorted(set(sentinels))
+        assert 0 < sentinels[0] and sentinels[-1] <= T, (sentinels, T)
+        if strategies is None:
+            strategies = [self.strategy] * S
+        assert len(strategies) == S
+        if capacities is None:
+            capacities = [bucket_capacity(Q * D, Q * D)] * S
+        elif isinstance(capacities, int):
+            capacities = [capacities] * S
+        capacities = [min(int(c), Q * D) for c in capacities]
+        assert len(capacities) == S
+
+        has_tail = sentinels[-1] < T
+        boundaries = sentinels + ((T,) if has_tail else ())
+        pf = padded_forest(self.ensemble, boundaries=boundaries, block_t=block_t)
+        flat = X.reshape(Q * D, F)
+
+        # One launch over the head trees: prefix score of every document at
+        # every sentinel. A single segment needs no segmented accumulator —
+        # it degenerates to the plain kernel (same launch count, less work).
+        if S == 1:
+            prefix = forest_score_range(pf, flat, 0, 1).reshape(Q, D, 1)
+        else:
+            seg_sums = forest_score_segments(pf, flat, n_segments=S)
+            prefix = (jnp.cumsum(seg_sums, axis=1) + pf.base_score).reshape(Q, D, S)
+
+        # Stage decisions: pure vector work, nested exit masks.
+        alive = mask
+        stage_masks = []
+        scores = prefix[..., 0]
+        for k in range(S):
+            cont = strategies[k](prefix[..., k], alive, **strategy_kwargs)
+            alive = alive & cont
+            stage_masks.append(alive)
+            if k + 1 < S:
+                scores = jnp.where(alive, prefix[..., k + 1], scores)
+
+        # One tail launch on the compacted survivors of the last stage.
+        # Only this compaction can drop tail scores, so only it counts as
+        # overflow (earlier capacities are jit-bucketing hints for future
+        # per-stage tail execution; the fused head needs no block there).
+        overflow = jnp.int32(0)
+        if has_tail:
+            capacity = capacities[-1]
+            sel, n_cont = compact_indices_cumsum(alive.reshape(Q * D), capacity)
+            x_sel = jnp.take(flat, sel, axis=0)
+            tail_sel = forest_score_range(pf, x_sel, seg_lo=S)
+            scores = _scatter_tail(scores, sel, tail_sel, n_cont)
+            overflow = n_cont - capacity
+
+        if classifier_trees is None:
+            classifier_trees = self.classifier_trees
+        sp = speedup_progressive(
+            mask, stage_masks, sentinels, T, classifier_trees
+        )
+        return CascadeResult(
+            scores=scores,
+            continue_mask=alive,
+            speedup=sp,
+            overflow=jnp.maximum(overflow, 0),  # lazy: no device sync
+            stage_masks=stage_masks,
+            partials=prefix,
+        )
+
+
+def _compacted_tail(X, partial, cont, tail: TreeEnsemble, capacity: int,
+                    compaction: str = "cumsum"):
+    """Gather survivors → dense block of ``capacity`` → tail kernel → scatter.
+
+    Kept at the Python level (jitted pieces around one counted kernel call)
+    so launch accounting stays truthful.
+    """
     Q, D, F = X.shape
-    flat_cont = cont.reshape(Q * D)
-    n_cont = flat_cont.sum()
-    # Stable partition: surviving indices first, padding (any index) after.
-    order = jnp.argsort(~flat_cont, stable=True)
-    sel = order[:capacity]                                     # [C]
-    x_sel = X.reshape(Q * D, F)[sel]                           # [C, F]
+    sel, n_cont = COMPACTORS[compaction](cont.reshape(Q * D), capacity)
+    x_sel = jnp.take(X.reshape(Q * D, F), sel, axis=0)         # [C, F]
     tail_sel = forest_score(tail, x_sel)                       # [C]
-    valid = jnp.arange(capacity) < n_cont
+    return _scatter_tail(partial, sel, tail_sel, n_cont), n_cont
+
+
+@jax.jit
+def _scatter_tail(scores, sel, tail_sel, n_cont):
+    """Scatter valid compacted tail scores back onto the [Q, D] grid."""
+    Q, D = scores.shape
+    valid = jnp.arange(sel.shape[0]) < n_cont
     deltas = jnp.zeros((Q * D,), jnp.float32).at[sel].add(
         jnp.where(valid, tail_sel, 0.0)
     )
-    scores = partial + deltas.reshape(Q, D)
-    return scores, n_cont
+    return scores + deltas.reshape(Q, D)

@@ -1,0 +1,55 @@
+"""Survivor compaction: gather continuing documents into a dense prefix.
+
+Both implementations compute the same stable partition — the indices of the
+``True`` entries of a flat continue mask, in ascending index order, written
+into a fixed-size ``[capacity]`` selection buffer (jit-stable shape):
+
+- :func:`compact_indices_cumsum` — production path. ``cumsum(cont) - 1``
+  gives each survivor its output slot directly; one scatter (``mode="drop"``
+  discards slots ≥ capacity) finishes the job. O(n) work, O(log n) depth.
+- :func:`compact_indices_argsort` — the original stable-argsort partition,
+  O(n log n). Kept as the test oracle for the cumsum path.
+
+Selection slots beyond ``min(n_cont, capacity)`` are unspecified padding
+(the cumsum path leaves index 0, the argsort path leaves exited indices);
+callers MUST mask per-slot results with ``slot < n_cont`` before scattering
+back. ``n_cont`` is returned as a lazy device scalar — no host sync.
+"""
+
+from __future__ import annotations
+
+from functools import partial as _partial
+
+import jax
+import jax.numpy as jnp
+
+
+@_partial(jax.jit, static_argnames=("capacity",))
+def compact_indices_cumsum(cont: jax.Array, capacity: int):
+    """O(n) stable partition. ``cont: [n] bool`` → ``(sel [capacity] i32,
+    n_cont [] i32)``."""
+    cont = cont.reshape(-1)
+    n = cont.shape[0]
+    pos = jnp.cumsum(cont.astype(jnp.int32)) - 1   # survivor → output slot
+    n_cont = pos[-1] + 1 if n else jnp.int32(0)
+    slot = jnp.where(cont, pos, capacity)          # exited / overflow → dropped
+    sel = (
+        jnp.zeros((capacity,), jnp.int32)
+        .at[slot]
+        .set(jnp.arange(n, dtype=jnp.int32), mode="drop")
+    )
+    return sel, n_cont
+
+
+@_partial(jax.jit, static_argnames=("capacity",))
+def compact_indices_argsort(cont: jax.Array, capacity: int):
+    """O(n log n) reference: stable argsort puts survivors first."""
+    cont = cont.reshape(-1)
+    order = jnp.argsort(~cont, stable=True)
+    return order[:capacity].astype(jnp.int32), cont.sum(dtype=jnp.int32)
+
+
+COMPACTORS = {
+    "cumsum": compact_indices_cumsum,
+    "argsort": compact_indices_argsort,
+}

@@ -30,6 +30,7 @@ import numpy as np
 from repro.forest.ensemble import TreeEnsemble
 from repro.forest.gbdt import GBDTParams, train_gbdt
 from repro.forest.scoring import score_bitvector
+from repro.kernels.ops import forest_score
 from repro.metrics.ranking import rank_from_scores
 
 N_AUG = 4  # sentinel-time features appended to the q-d vector
@@ -96,15 +97,27 @@ class LearClassifier:
     def n_trees(self) -> int:
         return self.forest.n_trees
 
-    def prob_continue(self, X_aug: jax.Array) -> jax.Array:
-        """P(Continue) for augmented features [Q, D, F+4] → [Q, D]."""
+    def prob_continue(self, X_aug: jax.Array, use_kernel: bool = False) -> jax.Array:
+        """P(Continue) for augmented features [Q, D, F+4] → [Q, D].
+
+        ``use_kernel=True`` scores the classifier forest through the same
+        Pallas path as the ranker (``kernels.ops.forest_score``), so the
+        serving cascade runs all its forests through one kernel; the default
+        pure-XLA bitvector path is kept for training/eval loops.
+        """
         Q, D, F = X_aug.shape
-        logits = score_bitvector(self.forest, X_aug.reshape(Q * D, F))
+        flat = X_aug.reshape(Q * D, F)
+        if use_kernel:
+            logits = forest_score(self.forest, flat)
+        else:
+            logits = score_bitvector(self.forest, flat)
         return jax.nn.sigmoid(logits).reshape(Q, D)
 
-    def continue_mask(self, X_aug, mask, threshold: float) -> jax.Array:
+    def continue_mask(
+        self, X_aug, mask, threshold: float, use_kernel: bool = False
+    ) -> jax.Array:
         """Continue ⇔ P(Continue) ≥ threshold. Higher = more aggressive EE."""
-        return mask & (self.prob_continue(X_aug) >= threshold)
+        return mask & (self.prob_continue(X_aug, use_kernel=use_kernel) >= threshold)
 
 
 def train_lear(

@@ -35,7 +35,16 @@ ALL_ONES = np.uint32(0xFFFFFFFF)
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
 class TreeEnsemble:
-    """Dense, padded additive ensemble of binary regression trees."""
+    """Dense, padded additive ensemble of binary regression trees.
+
+    Instances additionally carry a lazily-attached ``_padded_cache`` dict
+    (written via ``object.__setattr__`` by
+    :func:`repro.kernels.ops.padded_forest`) holding kernel-aligned buffer
+    sets keyed by segment boundaries × tree-block size — pad once, score
+    many. The cache is NOT a pytree field: it does not survive jit
+    boundaries or :func:`dataclasses.replace`, which is fine because it is
+    only ever a cache.
+    """
 
     feature: jax.Array    # [T, N] int32 — split feature per internal node
     threshold: jax.Array  # [T, N] float32 — split threshold (x <= thr → left)

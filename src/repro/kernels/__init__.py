@@ -1,3 +1,23 @@
 # OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
 # for compute hot-spots the paper itself optimizes with a custom
 # kernel. Leave this package empty if the paper has none.
+
+from repro.kernels.ops import (
+    PaddedForest,
+    forest_score,
+    forest_score_range,
+    forest_score_segments,
+    launch_counts,
+    padded_forest,
+    reset_launch_counts,
+)
+
+__all__ = [
+    "PaddedForest",
+    "forest_score",
+    "forest_score_range",
+    "forest_score_segments",
+    "launch_counts",
+    "padded_forest",
+    "reset_launch_counts",
+]

@@ -2,7 +2,7 @@
 
 Tiling
 ------
-Grid ``(B / BB, T / BT)``; docs are the parallel axis, tree-blocks the
+Grid ``(B / BB, T_run / BT)``; docs are the parallel axis, tree-blocks the
 sequential (minor) accumulation axis. Per grid step, VMEM holds:
 
 - one doc block      ``x        [BB, F]``   (f32)
@@ -27,10 +27,36 @@ Algorithm (per doc block × tree block)
 5. Tree-block partial scores accumulate into the output block; the first
    tree step zero-initializes.
 
+Tree ranges (head/tail from one buffer)
+---------------------------------------
+``tree_block_offset`` / ``n_tree_blocks`` restrict a launch to the padded
+tree-block range ``[offset, offset + n)`` of a single device-resident buffer
+set: the grid's minor axis shrinks to ``n`` and the tree-side index maps add
+the static offset. Head and tail of a cascade therefore score from the SAME
+padded arrays — no per-call re-slice / re-pad, no extra HBM copies.
+
+Sentinel-segmented output mode
+------------------------------
+:func:`forest_score_segments_pallas` replaces the scalar accumulator with a
+``[B, S]`` per-segment accumulator, where the S static segment boundaries
+(``seg_block_starts``, in tree-block units) partition the launched tree
+range. Each grid step derives its segment id from ``program_id(1)`` (a
+static unrolled sum of ``j >= start`` predicates — scalar work) and
+accumulates its partial into that segment's column via a tiny ``[BB, S]``
+one-hot multiply-add (order-free, no dynamic stores). One launch therefore
+yields the partial score of every document at EVERY sentinel; prefix scores
+are a ``[B, S]`` cumsum outside the kernel. This is what lets an S-stage
+cascade issue one head launch instead of S ``pallas_call``s with one HBM
+round-trip each.
+
 VMEM budget (defaults ``BB=256, BT=16, N=63→64, L=64, F≤256``):
 x 256·256·4 = 256 KiB; node tables 16·64·(4+4+4+4+4) ≈ 20 KiB;
 onehot intermediate 256·1024·4 = 1 MiB; masks 256·16·64·4·2 = 2 MiB →
-well under the ~16 MiB/core VMEM envelope with double buffering.
+well under the ~16 MiB/core VMEM envelope with double buffering. The
+segmented mode adds only the ``[BB, S]`` accumulator (S ≤ ~8 sentinels:
+256·8·4 = 8 KiB) and an ``[BB, S]`` one-hot temp — VMEM-negligible, and the
+extra VPU cost per grid step is O(BB·S) against the O(BB·BT·N) scoring work
+(< 0.1% at the defaults).
 """
 
 from __future__ import annotations
@@ -52,15 +78,8 @@ def _ctz64(hi: jax.Array, lo: jax.Array) -> jax.Array:
     return jnp.where(lo_nz, ctz32, ctz32 + jnp.uint32(32)).astype(jnp.int32)
 
 
-def _forest_score_kernel(
-    x_ref,        # [BB, F] f32
-    feat_ref,     # [BT, N] i32
-    thr_ref,      # [BT, N] f32
-    mlo_ref,      # [BT, N] u32
-    mhi_ref,      # [BT, N] u32
-    leaf_ref,     # [BT, L] f32
-    out_ref,      # [BB] f32 (accumulated over tree-block grid axis)
-):
+def _score_block(x_ref, feat_ref, thr_ref, mlo_ref, mhi_ref, leaf_ref) -> jax.Array:
+    """One doc-block × tree-block partial score [BB] (steps 1-4 above)."""
     x = x_ref[...]
     feat = feat_ref[...]
     BB, F = x.shape
@@ -97,7 +116,19 @@ def _forest_score_kernel(
         leaf[:, :, None] == jax.lax.iota(jnp.int32, L)[None, None, :]
     ).astype(jnp.float32)
     per_tree = jnp.sum(leaf_onehot * leaf_ref[...][None, :, :], axis=2)  # [BB, BT]
-    partial = per_tree.sum(axis=1)                                  # [BB]
+    return per_tree.sum(axis=1)                                     # [BB]
+
+
+def _forest_score_kernel(
+    x_ref,        # [BB, F] f32
+    feat_ref,     # [BT, N] i32
+    thr_ref,      # [BT, N] f32
+    mlo_ref,      # [BT, N] u32
+    mhi_ref,      # [BT, N] u32
+    leaf_ref,     # [BT, L] f32
+    out_ref,      # [BB] f32 (accumulated over tree-block grid axis)
+):
+    partial = _score_block(x_ref, feat_ref, thr_ref, mlo_ref, mhi_ref, leaf_ref)
 
     # (5) Accumulate across the sequential tree-block axis.
     @pl.when(pl.program_id(1) == 0)
@@ -107,8 +138,41 @@ def _forest_score_kernel(
     out_ref[...] += partial
 
 
+def _forest_score_segments_kernel(
+    x_ref, feat_ref, thr_ref, mlo_ref, mhi_ref, leaf_ref,
+    out_ref,      # [BB, S] f32 — per-segment partials, accumulated over j
+    *,
+    seg_block_starts: tuple[int, ...],
+):
+    partial = _score_block(x_ref, feat_ref, thr_ref, mlo_ref, mhi_ref, leaf_ref)
+
+    # Segment id of this tree block: static unrolled predicate sum (scalar).
+    j = pl.program_id(1)
+    seg = jnp.int32(0)
+    for start in seg_block_starts[1:]:
+        seg = seg + (j >= start).astype(jnp.int32)
+
+    n_seg = len(seg_block_starts)
+    seg_onehot = (jax.lax.iota(jnp.int32, n_seg) == seg).astype(jnp.float32)
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    # Order-free accumulate into the segment's column; no dynamic store.
+    out_ref[...] += partial[:, None] * seg_onehot[None, :]
+
+
+def _tree_specs(block_t: int, n: int, leaves: int, offset: int):
+    spec = lambda width: pl.BlockSpec((block_t, width), lambda i, j: (j + offset, 0))
+    return [spec(n), spec(n), spec(n), spec(n), spec(leaves)]
+
+
 @functools.partial(
-    jax.jit, static_argnames=("block_b", "block_t", "interpret")
+    jax.jit,
+    static_argnames=(
+        "block_b", "block_t", "tree_block_offset", "n_tree_blocks", "interpret"
+    ),
 )
 def forest_score_pallas(
     x: jax.Array,          # [B, F] f32 (B % block_b == 0, F lane-padded)
@@ -120,6 +184,8 @@ def forest_score_pallas(
     *,
     block_b: int = 256,
     block_t: int = 16,
+    tree_block_offset: int = 0,
+    n_tree_blocks: int | None = None,
     interpret: bool = True,
 ) -> jax.Array:
     B, F = x.shape
@@ -127,21 +193,76 @@ def forest_score_pallas(
     L = leaf_value.shape[1]
     assert B % block_b == 0 and T % block_t == 0, (B, block_b, T, block_t)
     assert N & (N - 1) == 0, f"node axis must be a power of two, got {N}"
+    total_blocks = T // block_t
+    if n_tree_blocks is None:
+        n_tree_blocks = total_blocks - tree_block_offset
+    assert 0 < n_tree_blocks <= total_blocks - tree_block_offset, (
+        n_tree_blocks, tree_block_offset, total_blocks
+    )
 
-    grid = (B // block_b, T // block_t)
-    tree_spec = lambda n: pl.BlockSpec((block_t, n), lambda i, j: (j, 0))
+    grid = (B // block_b, n_tree_blocks)
     return pl.pallas_call(
         _forest_score_kernel,
         grid=grid,
         in_specs=[
             pl.BlockSpec((block_b, F), lambda i, j: (i, 0)),
-            tree_spec(N),
-            tree_spec(N),
-            tree_spec(N),
-            tree_spec(N),
-            tree_spec(L),
+            *_tree_specs(block_t, N, L, tree_block_offset),
         ],
         out_specs=pl.BlockSpec((block_b,), lambda i, j: (i,)),
         out_shape=jax.ShapeDtypeStruct((B,), jnp.float32),
+        interpret=interpret,
+    )(x, feature, threshold, mask_lo, mask_hi, leaf_value)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "seg_block_starts", "n_tree_blocks", "block_b", "block_t", "interpret"
+    ),
+)
+def forest_score_segments_pallas(
+    x: jax.Array,          # [B, F] f32 (B % block_b == 0, F lane-padded)
+    feature: jax.Array,    # [T, N] i32 (T % block_t == 0, N power of two)
+    threshold: jax.Array,  # [T, N] f32
+    mask_lo: jax.Array,    # [T, N] u32
+    mask_hi: jax.Array,    # [T, N] u32
+    leaf_value: jax.Array,  # [T, L] f32
+    *,
+    seg_block_starts: tuple[int, ...],  # ascending, seg_block_starts[0] == 0
+    n_tree_blocks: int,                 # launch covers blocks [0, n)
+    block_b: int = 256,
+    block_t: int = 16,
+    interpret: bool = True,
+) -> jax.Array:
+    """Single launch → per-segment partial scores ``[B, S]``.
+
+    Segment ``k`` covers tree blocks ``[seg_block_starts[k],
+    seg_block_starts[k+1])`` (the last runs to ``n_tree_blocks``). Prefix
+    scores at sentinel ``k`` are ``cumsum(out, axis=1)[:, k]``.
+    """
+    B, F = x.shape
+    T, N = feature.shape
+    L = leaf_value.shape[1]
+    assert B % block_b == 0 and T % block_t == 0, (B, block_b, T, block_t)
+    assert N & (N - 1) == 0, f"node axis must be a power of two, got {N}"
+    assert seg_block_starts[0] == 0
+    assert list(seg_block_starts) == sorted(set(seg_block_starts))
+    assert 0 < n_tree_blocks <= T // block_t
+    assert seg_block_starts[-1] < n_tree_blocks
+    n_seg = len(seg_block_starts)
+
+    grid = (B // block_b, n_tree_blocks)
+    kernel = functools.partial(
+        _forest_score_segments_kernel, seg_block_starts=seg_block_starts
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, F), lambda i, j: (i, 0)),
+            *_tree_specs(block_t, N, L, 0),
+        ],
+        out_specs=pl.BlockSpec((block_b, n_seg), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, n_seg), jnp.float32),
         interpret=interpret,
     )(x, feature, threshold, mask_lo, mask_hi, leaf_value)

@@ -1,21 +1,59 @@
-"""Jit'd public wrapper around the Pallas forest-scoring kernel.
+"""Jit'd public wrappers around the Pallas forest-scoring kernels.
 
 Handles padding to kernel alignment (doc blocks, tree blocks, power-of-two
 node axis, lane-padded feature axis) and unpadding of the result. On CPU
 (this container) the kernel runs in interpret mode; on TPU it compiles to
 Mosaic.
+
+Padded-buffer caching
+---------------------
+:func:`padded_forest` builds the kernel-aligned device buffers for an
+ensemble ONCE and caches them on the :class:`TreeEnsemble` instance (keyed
+by segment boundaries × tree-block size), so repeated scoring — the serving
+hot path — never re-pads. Segment boundaries (cascade sentinels) need NOT be
+tree-block aligned: each segment is padded independently with no-op trees
+(threshold ``+inf`` ⇒ always-true ⇒ all-ones mask; leaf values 0), which
+makes every segment start block-aligned by construction. Head and tail of a
+cascade then score from the same buffer set via ``tree_block_offset`` /
+``n_tree_blocks`` — :func:`repro.forest.ensemble.slice_trees` re-padding is
+gone from the hot path.
+
+Launch accounting
+-----------------
+Every wrapper below increments a module-level launch counter
+(:func:`launch_counts` / :func:`reset_launch_counts`), split by kind
+(``plain`` vs ``segmented``). The cascade engine keeps its orchestration at
+the Python level, so these counters equal real device launches — tests use
+them to assert the progressive engine's 1-head-launch contract.
 """
 
 from __future__ import annotations
+
+import dataclasses
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.forest.ensemble import TreeEnsemble
-from repro.kernels.forest_score import forest_score_pallas
+from repro.kernels.forest_score import (
+    forest_score_pallas,
+    forest_score_segments_pallas,
+)
 
 LANE = 128
+ALL_ONES = np.uint32(0xFFFFFFFF)
+
+_LAUNCH_COUNTS = {"plain": 0, "segmented": 0}
+
+
+def reset_launch_counts() -> None:
+    _LAUNCH_COUNTS["plain"] = 0
+    _LAUNCH_COUNTS["segmented"] = 0
+
+
+def launch_counts() -> dict[str, int]:
+    return dict(_LAUNCH_COUNTS)
 
 
 def _pad_to(x: jax.Array, axis: int, multiple: int, value=0):
@@ -32,6 +70,175 @@ def _next_pow2(n: int) -> int:
     return 1 << (n - 1).bit_length()
 
 
+@dataclasses.dataclass(frozen=True)
+class PaddedForest:
+    """Kernel-aligned device buffers for one ensemble + segment layout.
+
+    Segment ``k`` occupies padded tree blocks
+    ``[seg_block_starts[k], seg_block_starts[k] + seg_blocks[k])``; segments
+    are contiguous, so any segment range is one contiguous block range.
+    """
+
+    feature: jax.Array     # [T_pad, N_pad] i32
+    threshold: jax.Array   # [T_pad, N_pad] f32
+    mask_lo: jax.Array     # [T_pad, N_pad] u32
+    mask_hi: jax.Array     # [T_pad, N_pad] u32
+    leaf_value: jax.Array  # [T_pad, L] f32
+    base_score: jax.Array  # [] f32
+    boundaries: tuple[int, ...]       # cumulative tree-unit segment ends
+    seg_block_starts: tuple[int, ...]  # per-segment start, in blocks
+    seg_blocks: tuple[int, ...]        # per-segment length, in blocks
+    block_t: int
+
+    @property
+    def n_segments(self) -> int:
+        return len(self.boundaries)
+
+    @property
+    def n_trees(self) -> int:
+        return self.boundaries[-1]
+
+
+def padded_forest(
+    ens: TreeEnsemble,
+    boundaries: tuple[int, ...] | None = None,
+    block_t: int = 16,
+) -> PaddedForest:
+    """Pad once, score many: cached kernel-aligned buffers for ``ens``.
+
+    ``boundaries`` are cumulative segment ends in tree units (ascending,
+    last == ``ens.n_trees``); ``None`` means one segment. The result is
+    cached on the ensemble instance keyed by ``(boundaries, block_t)``.
+    """
+    T, N = ens.feature.shape
+    boundaries = tuple(boundaries) if boundaries is not None else (T,)
+    assert boundaries[-1] == T, (boundaries, T)
+    assert all(b > 0 for b in boundaries)
+    assert list(boundaries) == sorted(set(boundaries)), boundaries
+    block_t = min(block_t, _next_pow2(max(T, 1)))
+
+    cache = getattr(ens, "_padded_cache", None)
+    if cache is None:
+        cache = {}
+        object.__setattr__(ens, "_padded_cache", cache)
+    key = (boundaries, block_t)
+    if key in cache:
+        return cache[key]
+
+    n_pad = _next_pow2(max(N, 2))
+    # Padded nodes: threshold +inf ⇒ predicate always true ⇒ all-ones mask.
+    feat = _pad_to(ens.feature, 1, n_pad)
+    thr = _pad_to(ens.threshold.astype(jnp.float32), 1, n_pad, np.inf)
+    mlo = _pad_to(ens.mask_lo, 1, n_pad, ALL_ONES)
+    mhi = _pad_to(ens.mask_hi, 1, n_pad, ALL_ONES)
+    leaf = ens.leaf_value.astype(jnp.float32)
+
+    # Per-segment tree padding: no-op trees (always-true nodes, zero leaves).
+    parts = {name: [] for name in ("feat", "thr", "mlo", "mhi", "leaf")}
+    seg_block_starts, seg_blocks = [], []
+    start = offset = 0
+    for end in boundaries:
+        parts["feat"].append(_pad_to(feat[start:end], 0, block_t))
+        parts["thr"].append(_pad_to(thr[start:end], 0, block_t, np.inf))
+        parts["mlo"].append(_pad_to(mlo[start:end], 0, block_t, ALL_ONES))
+        parts["mhi"].append(_pad_to(mhi[start:end], 0, block_t, ALL_ONES))
+        parts["leaf"].append(_pad_to(leaf[start:end], 0, block_t))
+        nb = parts["feat"][-1].shape[0] // block_t
+        seg_block_starts.append(offset)
+        seg_blocks.append(nb)
+        offset += nb
+        start = end
+
+    pf = PaddedForest(
+        feature=jnp.concatenate(parts["feat"]),
+        threshold=jnp.concatenate(parts["thr"]),
+        mask_lo=jnp.concatenate(parts["mlo"]),
+        mask_hi=jnp.concatenate(parts["mhi"]),
+        leaf_value=jnp.concatenate(parts["leaf"]),
+        base_score=ens.base_score,
+        boundaries=boundaries,
+        seg_block_starts=tuple(seg_block_starts),
+        seg_blocks=tuple(seg_blocks),
+        block_t=block_t,
+    )
+    cache[key] = pf
+    return pf
+
+
+def _prep_x(X: jax.Array, block_b: int):
+    B = X.shape[0]
+    block_b = min(block_b, _next_pow2(max(B, 8)))
+    x = _pad_to(X.astype(jnp.float32), 0, block_b)
+    x = _pad_to(x, 1, LANE)
+    return x, block_b
+
+
+def forest_score_range(
+    pf: PaddedForest,
+    X: jax.Array,
+    seg_lo: int = 0,
+    seg_hi: int | None = None,
+    *,
+    block_b: int = 256,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Score ``X: [B, F]`` through segments ``[seg_lo, seg_hi)`` — 1 launch.
+
+    ``base_score`` is added only when the range starts at segment 0
+    (mirroring :func:`repro.forest.ensemble.slice_trees` semantics).
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    seg_hi = pf.n_segments if seg_hi is None else seg_hi
+    assert 0 <= seg_lo < seg_hi <= pf.n_segments, (seg_lo, seg_hi)
+    B = X.shape[0]
+    x, block_b = _prep_x(X, block_b)
+
+    _LAUNCH_COUNTS["plain"] += 1
+    scores = forest_score_pallas(
+        x, pf.feature, pf.threshold, pf.mask_lo, pf.mask_hi, pf.leaf_value,
+        block_b=block_b,
+        block_t=pf.block_t,
+        tree_block_offset=pf.seg_block_starts[seg_lo],
+        n_tree_blocks=sum(pf.seg_blocks[seg_lo:seg_hi]),
+        interpret=interpret,
+    )
+    base = pf.base_score if seg_lo == 0 else jnp.zeros_like(pf.base_score)
+    return scores[:B] + base
+
+
+def forest_score_segments(
+    pf: PaddedForest,
+    X: jax.Array,
+    n_segments: int | None = None,
+    *,
+    block_b: int = 256,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Per-segment partial scores ``[B, S]`` for segments ``[0, S)`` — 1 launch.
+
+    ``cumsum(result, axis=1) + base_score`` gives the prefix score of every
+    document at every segment boundary (i.e. at every cascade sentinel).
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    S = pf.n_segments if n_segments is None else n_segments
+    assert 0 < S <= pf.n_segments, (S, pf.n_segments)
+    B = X.shape[0]
+    x, block_b = _prep_x(X, block_b)
+
+    _LAUNCH_COUNTS["segmented"] += 1
+    seg_scores = forest_score_segments_pallas(
+        x, pf.feature, pf.threshold, pf.mask_lo, pf.mask_hi, pf.leaf_value,
+        seg_block_starts=pf.seg_block_starts[:S],
+        n_tree_blocks=pf.seg_block_starts[S - 1] + pf.seg_blocks[S - 1],
+        block_b=block_b,
+        block_t=pf.block_t,
+        interpret=interpret,
+    )
+    return seg_scores[:B]
+
+
 def forest_score(
     ens: TreeEnsemble,
     X: jax.Array,
@@ -41,29 +248,5 @@ def forest_score(
     interpret: bool | None = None,
 ) -> jax.Array:
     """Score ``X: [B, F]`` through the ensemble with the Pallas kernel."""
-    if interpret is None:
-        interpret = jax.default_backend() != "tpu"
-    B, F = X.shape
-    T, N = ens.feature.shape
-
-    block_b = min(block_b, _next_pow2(max(B, 8)))
-    block_t = min(block_t, _next_pow2(max(T, 1)))
-
-    x = _pad_to(X.astype(jnp.float32), 0, block_b)
-    x = _pad_to(x, 1, LANE)
-    n_pad = _next_pow2(max(N, 2))
-    # Padded nodes: threshold +inf ⇒ predicate always true ⇒ all-ones mask.
-    feat = _pad_to(_pad_to(ens.feature, 1, n_pad), 0, block_t)
-    thr = _pad_to(_pad_to(ens.threshold.astype(jnp.float32), 1, n_pad, np.inf),
-                  0, block_t, np.inf)
-    ones = np.uint32(0xFFFFFFFF)
-    mlo = _pad_to(_pad_to(ens.mask_lo, 1, n_pad, ones), 0, block_t, ones)
-    mhi = _pad_to(_pad_to(ens.mask_hi, 1, n_pad, ones), 0, block_t, ones)
-    # Padded trees: leaf values 0 ⇒ contribute nothing.
-    leaf = _pad_to(ens.leaf_value.astype(jnp.float32), 0, block_t)
-
-    scores = forest_score_pallas(
-        x, feat, thr, mlo, mhi, leaf,
-        block_b=block_b, block_t=block_t, interpret=interpret,
-    )
-    return scores[:B] + ens.base_score
+    pf = padded_forest(ens, block_t=block_t)
+    return forest_score_range(pf, X, block_b=block_b, interpret=interpret)

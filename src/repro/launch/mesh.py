@@ -17,17 +17,21 @@ from __future__ import annotations
 import jax
 
 
+def _make_mesh(shape, axes) -> jax.sharding.Mesh:
+    # jax.sharding.AxisType landed after 0.4.x; older runtimes use the
+    # default (Auto) axis semantics implicitly.
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return jax.make_mesh(shape, axes)
+    return jax.make_mesh(shape, axes, axis_types=(axis_type.Auto,) * len(axes))
+
+
 def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return _make_mesh(shape, axes)
 
 
 def make_local_mesh() -> jax.sharding.Mesh:
     """1×1 mesh over the single local device — CPU tests of the mesh path."""
-    return jax.make_mesh(
-        (1, 1), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2,
-    )
+    return _make_mesh((1, 1), ("data", "model"))

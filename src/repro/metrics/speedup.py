@@ -35,3 +35,47 @@ def speedup_vs_full(
     full = mask.sum() * n_trees
     ee = trees_traversed(continue_mask, mask, sentinel, n_trees, classifier_trees)
     return float(full / ee)
+
+
+def trees_traversed_progressive(
+    mask,
+    stage_masks,
+    sentinels,
+    n_trees: int,
+    classifier_trees=0,
+) -> jnp.ndarray:
+    """Multi-sentinel generalization of :func:`trees_traversed`.
+
+    ``stage_masks[k]`` is the (nested) continue mask AFTER stage ``k``'s
+    decision at ``sentinels[k]``; ``mask`` is the request mask. A document
+    exiting at stage ``k`` costs ``sentinels[k-1]`` trees plus one
+    classifier evaluation per stage it reached; survivors of the last stage
+    cost the full ``n_trees``. ``classifier_trees`` is an int (same cost at
+    every stage) or a per-stage sequence for heterogeneous classifiers.
+    With one sentinel this reduces exactly to :func:`trees_traversed`.
+    """
+    S = len(sentinels)
+    if isinstance(classifier_trees, int):
+        classifier_trees = [classifier_trees] * S
+    assert len(classifier_trees) == S
+    alive = mask
+    prev_s = 0
+    total = jnp.float32(0.0)
+    for s, cont, ct in zip(sentinels, stage_masks, classifier_trees):
+        n_alive = alive.sum()
+        total += n_alive * (s - prev_s) + n_alive * ct
+        alive = cont & alive
+        prev_s = s
+    total += alive.sum() * (n_trees - prev_s)
+    return total.astype(jnp.float32)
+
+
+def speedup_progressive(
+    mask, stage_masks, sentinels, n_trees: int, classifier_trees=0
+) -> jnp.ndarray:
+    """Lazy device scalar (no host sync) — ``float()`` it in a stats path."""
+    full = mask.sum() * n_trees
+    ee = trees_traversed_progressive(
+        mask, stage_masks, sentinels, n_trees, classifier_trees
+    )
+    return full / ee

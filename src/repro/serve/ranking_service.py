@@ -6,10 +6,17 @@ documents (already feature-extracted); the service scores them through the
 
 Production concerns handled here:
 - request batching into fixed-size padded blocks (jit-stable shapes);
+- the multi-sentinel progressive engine
+  (:meth:`repro.core.cascade.CascadeRanker.rank_progressive`): ONE
+  sentinel-segmented Pallas launch scores the head, stage decisions are
+  vector work, one tail launch runs on the cumsum-compacted survivors —
+  all three forests in the path (ranker head, LEAR classifier, ranker
+  tail) go through the same Pallas kernel;
 - compaction capacity chosen from observed continue rates (p99 headroom),
-  re-jitting only when the capacity bucket changes;
+  bucketed to powers of two so re-jits stay bounded;
 - cost accounting per batch (trees traversed, the paper's own metric) and
-  service-level stats;
+  service-level stats — overflow is surfaced from a lazy device scalar so
+  the ranking hot path never blocks on it;
 - graceful degradation: if survivors exceed capacity, the overflow
   documents keep their sentinel scores (bounded quality loss, never a
   crash) and the stats record it.
@@ -22,15 +29,16 @@ the ``sentinel_fn`` / ``full_fn`` hooks — see examples/cascade_retrieval.py.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable
+from typing import Callable, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.cascade import CascadeRanker
+from repro.core.cascade import CascadeRanker, bucket_capacity
 from repro.core.lear import LearClassifier, augment_features
 from repro.forest.ensemble import TreeEnsemble
+from repro.metrics.speedup import trees_traversed_progressive
 
 
 @dataclasses.dataclass
@@ -53,7 +61,14 @@ class ServiceStats:
 
 
 class RankingService:
-    """LEAR-cascade ranking over padded [Q, D, F] request blocks."""
+    """LEAR-cascade ranking over padded [Q, D, F] request blocks.
+
+    ``extra_classifiers`` turn the service into a multi-sentinel cascade:
+    stages are ordered by sentinel and each stage's classifier gates the
+    survivors of the previous one (nested exit masks). With none, the
+    service is the paper's single-sentinel cascade served through the same
+    progressive engine (a sentinel list of length 1).
+    """
 
     def __init__(
         self,
@@ -62,63 +77,99 @@ class RankingService:
         threshold: float = 0.5,
         capacity_headroom: float = 1.25,
         top_k: int = 10,
+        extra_classifiers: Sequence[LearClassifier] = (),
+        use_kernel_classifier: bool = True,
     ):
         self.ensemble = ensemble
         self.classifier = classifier
         self.threshold = threshold
         self.headroom = capacity_headroom
         self.top_k = top_k
+        self.use_kernel_classifier = use_kernel_classifier
         self.stats = ServiceStats()
-        self._capacity_bucket: int | None = None
+        self._stage_buckets: list[int] | None = None  # per-stage survivor est.
 
-        def strategy(partial, mask, features=None):
-            aug = augment_features(features, partial, mask)
-            return self.classifier.continue_mask(aug, mask, self.threshold)
+        stages = sorted([classifier, *extra_classifiers], key=lambda c: c.sentinel)
+        self.stage_classifiers = stages
+        self.sentinels = tuple(c.sentinel for c in stages)
+        assert len(set(self.sentinels)) == len(stages), (
+            "stage sentinels must be distinct", self.sentinels
+        )
+        self.stage_strategies = [self._make_strategy(c) for c in stages]
 
         self.cascade = CascadeRanker(
             ensemble=ensemble,
-            sentinel=classifier.sentinel,
-            strategy=strategy,
-            classifier_trees=classifier.n_trees,
+            sentinel=stages[0].sentinel,
+            strategy=self.stage_strategies[0],
+            classifier_trees=stages[0].n_trees,
         )
 
-    def _pick_capacity(self, n_docs: int) -> int:
-        if self._capacity_bucket is None:
-            # Cold start: assume 40% continue rate.
-            want = int(0.4 * n_docs * self.headroom)
+    def _make_strategy(self, clf: LearClassifier) -> Callable[..., jax.Array]:
+        def strategy(partial, mask, features=None):
+            aug = augment_features(features, partial, mask)
+            return clf.continue_mask(
+                aug, mask, self.threshold, use_kernel=self.use_kernel_classifier
+            )
+
+        return strategy
+
+    def _pick_capacities(self, n_docs: int) -> list[int]:
+        """Per-stage compaction capacities from observed survivor counts.
+
+        Each stage gets its own bucket (survivor sets shrink stage over
+        stage; sizing every stage off the last one would report phantom
+        overflow at the early stages). Buckets are powers of two to bound
+        re-jits.
+        """
+        if self._stage_buckets is None:
+            # Cold start: assume a 40% survivor rate at EVERY stage
+            # (conservative — survivors only shrink; undersizing a later
+            # stage on batch 1 would cause real overflow).
+            want = [int(0.4 * n_docs * self.headroom)] * len(self.sentinels)
         else:
-            want = self._capacity_bucket
-        # Bucket to powers of two to bound re-jits.
-        cap = 1 << max(6, int(np.ceil(np.log2(max(want, 64)))))
-        return min(cap, n_docs)
+            want = self._stage_buckets
+        return [bucket_capacity(w, n_docs) for w in want]
 
     def rank_batch(self, X: jax.Array, mask: jax.Array):
         """X: [Q, D, F]; returns (top-k doc indices [Q, k], scores [Q, D])."""
         Q, D, _ = X.shape
         n_docs = Q * D
-        capacity = self._pick_capacity(n_docs)
-        result = self.cascade.rank_compacted(
-            X, mask, capacity=capacity, features=X
+        capacities = self._pick_capacities(n_docs)
+        result = self.cascade.rank_progressive(
+            X, mask,
+            sentinels=self.sentinels,
+            capacities=capacities,
+            strategies=self.stage_strategies,
+            classifier_trees=[c.n_trees for c in self.stage_classifiers],
+            features=X,
         )
-        n_cont = int(result.continue_mask.sum())
-        # Adapt the capacity bucket to the observed continue rate.
-        self._capacity_bucket = int(n_cont * self.headroom)
+        # Top-k is the response; everything below is the stats path.
+        masked = jnp.where(mask, result.scores, -jnp.inf)
+        top_idx = jax.lax.top_k(masked, self.top_k)[1]
+
+        # Stats path: one fused device read for the per-stage survivor
+        # counts, the cost metric, and the overflow scalar.
+        T = self.ensemble.n_trees
+        clf_trees = [c.n_trees for c in self.stage_classifiers]
+        survivors, traversed, overflow = jax.device_get((
+            jnp.stack([m.sum() for m in result.stage_masks]),
+            trees_traversed_progressive(
+                mask, result.stage_masks, self.sentinels, T, clf_trees
+            ),
+            result.overflow,
+        ))
+        # Adapt each stage's capacity bucket to its observed survivor count.
+        self._stage_buckets = [int(n * self.headroom) for n in survivors]
 
         s = self.stats
         s.batches += 1
         s.queries += Q
         s.docs += int(mask.sum())
-        s.docs_continued += n_cont
-        s.overflow_docs += result.overflow
-        sentinel, T = self.classifier.sentinel, self.ensemble.n_trees
-        s.trees_traversed += (
-            int(mask.sum()) * (sentinel + self.classifier.n_trees)
-            + n_cont * (T - sentinel)
-        )
+        s.docs_continued += int(survivors[-1])
+        s.overflow_docs += int(overflow)
+        s.trees_traversed += float(traversed)
         s.trees_full_equiv += int(mask.sum()) * T
 
-        masked = jnp.where(mask, result.scores, -jnp.inf)
-        top_idx = jax.lax.top_k(masked, self.top_k)[1]
         return np.asarray(top_idx), np.asarray(result.scores)
 
 

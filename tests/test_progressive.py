@@ -1,0 +1,269 @@
+"""Multi-sentinel progressive cascade engine: kernel, compaction, semantics.
+
+Covers the engine's contracts:
+- segmented-prefix kernel vs the ``partial_scores`` oracle at every sentinel
+  (including tree-block-unaligned sentinels);
+- cumsum compaction ≡ argsort compaction (overflow / all-exit / all-continue);
+- ``rank_progressive`` with one sentinel is bit-exact vs ``rank_compacted``;
+- an S=3 cascade issues exactly 1 segmented head launch and ≤ S tail
+  launches (launch counters in :mod:`repro.kernels.ops`);
+- nested exit masks: a document that exits at stage k keeps its stage-k
+  prefix even if a later stage's strategy would have kept it;
+- padded-buffer caching on the ensemble;
+- overflow stays a lazy device scalar (no hidden host sync in the hot path).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.cascade import CascadeRanker, bucket_capacity
+from repro.core.compaction import compact_indices_argsort, compact_indices_cumsum
+from repro.core.strategies import ert_continue
+from repro.forest.ensemble import random_ensemble
+from repro.forest.scoring import partial_scores
+from repro.kernels import ops
+
+
+def _cascade(ens, k_s=8, sentinel=10):
+    return CascadeRanker(
+        ensemble=ens, sentinel=sentinel,
+        strategy=lambda p, m: ert_continue(p, m, k_s=k_s),
+    )
+
+
+@pytest.mark.parametrize("sentinels", [(16,), (16, 32), (5, 19, 33)])
+def test_segmented_prefixes_match_partial_scores(sentinels):
+    """Every sentinel prefix from ONE launch matches the pure-jnp oracle —
+    including sentinels that are not tree-block multiples."""
+    rng = np.random.default_rng(3)
+    ens = random_ensemble(3, n_trees=37, depth=4, n_features=21)
+    X = jnp.asarray(rng.normal(size=(50, 21)).astype(np.float32))
+    pf = ops.padded_forest(ens, boundaries=(*sentinels, ens.n_trees))
+    seg = ops.forest_score_segments(pf, X, n_segments=len(sentinels))
+    prefix = np.asarray(jnp.cumsum(seg, axis=1) + pf.base_score)
+    for k, s in enumerate(sentinels):
+        head, _ = partial_scores(ens, X, s)
+        np.testing.assert_allclose(
+            prefix[:, k], np.asarray(head), rtol=1e-5, atol=1e-5
+        )
+
+
+def test_forest_score_range_matches_tail_oracle():
+    rng = np.random.default_rng(4)
+    ens = random_ensemble(4, n_trees=37, depth=4, n_features=21)
+    X = jnp.asarray(rng.normal(size=(40, 21)).astype(np.float32))
+    pf = ops.padded_forest(ens, boundaries=(5, 19, 33, ens.n_trees))
+    _, tail_ref = partial_scores(ens, X, 33)
+    tail_got = ops.forest_score_range(pf, X, seg_lo=3)
+    np.testing.assert_allclose(
+        np.asarray(tail_got), np.asarray(tail_ref), rtol=1e-5, atol=1e-5
+    )
+    # Range starting at 0 over all segments = full scoring incl. base score.
+    full_ref, _ = partial_scores(ens, X, ens.n_trees)
+    full_got = ops.forest_score_range(pf, X)
+    np.testing.assert_allclose(
+        np.asarray(full_got), np.asarray(full_ref), rtol=1e-5, atol=1e-5
+    )
+
+
+@pytest.mark.parametrize(
+    "cont_rate,capacity",
+    [
+        (0.3, 64),     # ample capacity
+        (0.9, 32),     # overflow
+        (0.0, 16),     # all-exit
+        (1.0, 128),    # all-continue (capacity == n)
+    ],
+)
+def test_cumsum_compaction_equals_argsort(cont_rate, capacity):
+    rng = np.random.default_rng(int(cont_rate * 10) + capacity)
+    n = 128
+    if cont_rate == 0.0:
+        cont = np.zeros(n, bool)
+    elif cont_rate == 1.0:
+        cont = np.ones(n, bool)
+    else:
+        cont = rng.random(n) < cont_rate
+    cj = jnp.asarray(cont)
+    sel_c, n_c = compact_indices_cumsum(cj, capacity)
+    sel_a, n_a = compact_indices_argsort(cj, capacity)
+    assert int(n_c) == int(n_a) == int(cont.sum())
+    valid = min(int(n_c), capacity)
+    # Valid slots agree exactly (stable: ascending survivor indices).
+    np.testing.assert_array_equal(
+        np.asarray(sel_c)[:valid], np.asarray(sel_a)[:valid]
+    )
+    np.testing.assert_array_equal(
+        np.asarray(sel_c)[:valid], np.flatnonzero(cont)[:valid]
+    )
+
+
+def test_progressive_single_sentinel_bitexact_vs_compacted():
+    rng = np.random.default_rng(5)
+    ens = random_ensemble(5, n_trees=60, depth=4, n_features=16)
+    Q, D, F = 6, 24, 16
+    X = jnp.asarray(rng.normal(size=(Q, D, F)).astype(np.float32))
+    mask = jnp.asarray(rng.random((Q, D)) < 0.9)
+    cascade = _cascade(ens)
+    ref = cascade.rank_compacted(X, mask, capacity=64)
+    got = cascade.rank_progressive(X, mask, sentinels=[10], capacities=[64])
+    np.testing.assert_array_equal(np.asarray(ref.scores), np.asarray(got.scores))
+    np.testing.assert_array_equal(
+        np.asarray(ref.continue_mask), np.asarray(got.continue_mask)
+    )
+    assert ref.speedup == float(got.speedup)  # progressive speedup is lazy
+    assert int(ref.overflow) == int(got.overflow) == 0
+
+
+def test_progressive_single_sentinel_bitexact_under_overflow():
+    rng = np.random.default_rng(6)
+    ens = random_ensemble(6, n_trees=40, depth=3, n_features=8)
+    Q, D, F = 4, 32, 8
+    X = jnp.asarray(rng.normal(size=(Q, D, F)).astype(np.float32))
+    mask = jnp.ones((Q, D), bool)
+    cascade = _cascade(ens, k_s=16)  # 64 survivors
+    ref = cascade.rank_compacted(X, mask, capacity=16)  # overflow 48
+    got = cascade.rank_progressive(X, mask, sentinels=[10], capacities=[16])
+    np.testing.assert_array_equal(np.asarray(ref.scores), np.asarray(got.scores))
+    assert int(ref.overflow) == int(got.overflow) == 48
+
+
+def test_progressive_s3_launch_budget():
+    """The acceptance contract: exactly 1 segmented head launch, ≤ S plain
+    (tail) launches for an S=3 cascade."""
+    rng = np.random.default_rng(7)
+    ens = random_ensemble(7, n_trees=60, depth=4, n_features=16)
+    Q, D, F = 6, 24, 16
+    X = jnp.asarray(rng.normal(size=(Q, D, F)).astype(np.float32))
+    mask = jnp.ones((Q, D), bool)
+    cascade = _cascade(ens)
+    strategies = [
+        (lambda p, m, k=k: ert_continue(p, m, k_s=k)) for k in (16, 10, 6)
+    ]
+    ops.reset_launch_counts()
+    result = cascade.rank_progressive(
+        X, mask, sentinels=[10, 20, 35], capacities=128, strategies=strategies
+    )
+    jax.block_until_ready(result.scores)
+    counts = ops.launch_counts()
+    assert counts["segmented"] == 1, counts
+    # Exactly ONE tail launch — a regression to per-stage tails (the S-launch
+    # pattern this engine replaces) must fail here, not sneak under a <= S.
+    assert counts["plain"] == 1, counts
+
+
+def test_progressive_nested_exit_semantics():
+    """A doc that exits at stage 1 keeps its stage-1 prefix even when the
+    stage-2 strategy alone would have continued it."""
+    rng = np.random.default_rng(8)
+    ens = random_ensemble(8, n_trees=60, depth=4, n_features=16)
+    Q, D, F = 4, 16, 16
+    X = jnp.asarray(rng.normal(size=(Q, D, F)).astype(np.float32))
+    mask = jnp.ones((Q, D), bool)
+    cascade = _cascade(ens)
+    strategies = [
+        lambda p, m: ert_continue(p, m, k_s=4),    # aggressive stage 1
+        lambda p, m: m,                            # stage 2 would keep all
+    ]
+    result = cascade.rank_progressive(
+        X, mask, sentinels=[10, 30], capacities=64, strategies=strategies
+    )
+    alive1 = np.asarray(result.stage_masks[0])
+    alive2 = np.asarray(result.stage_masks[1])
+    np.testing.assert_array_equal(alive2, alive1)   # nested: no resurrection
+    prefix = np.asarray(result.partials)
+    exited = np.asarray(mask) & ~alive1
+    np.testing.assert_allclose(
+        np.asarray(result.scores)[exited], prefix[..., 0][exited],
+        rtol=0, atol=0,
+    )
+    # Survivors got strictly more trees than their stage-2 prefix.
+    full, _ = partial_scores(ens, X.reshape(Q * D, F), ens.n_trees)
+    np.testing.assert_allclose(
+        np.asarray(result.scores)[alive2],
+        np.asarray(full).reshape(Q, D)[alive2],
+        rtol=1e-5, atol=1e-5,
+    )
+
+
+def test_progressive_sentinel_at_ensemble_end():
+    """sS == n_trees: no tail trees remain, no tail launch is issued."""
+    rng = np.random.default_rng(9)
+    ens = random_ensemble(9, n_trees=32, depth=3, n_features=8)
+    Q, D, F = 3, 16, 8
+    X = jnp.asarray(rng.normal(size=(Q, D, F)).astype(np.float32))
+    mask = jnp.ones((Q, D), bool)
+    cascade = _cascade(ens)
+    ops.reset_launch_counts()
+    result = cascade.rank_progressive(X, mask, sentinels=[16, 32], capacities=64)
+    jax.block_until_ready(result.scores)
+    counts = ops.launch_counts()
+    assert counts == {"plain": 0, "segmented": 1}, counts
+    full, _ = partial_scores(ens, X.reshape(Q * D, F), ens.n_trees)
+    survivors = np.asarray(result.continue_mask)
+    np.testing.assert_allclose(
+        np.asarray(result.scores)[survivors],
+        np.asarray(full).reshape(Q, D)[survivors],
+        rtol=1e-5, atol=1e-5,
+    )
+
+
+def test_padded_forest_cached_on_ensemble():
+    ens = random_ensemble(10, n_trees=24, depth=3, n_features=8)
+    pf1 = ops.padded_forest(ens, boundaries=(10, 24))
+    pf2 = ops.padded_forest(ens, boundaries=(10, 24))
+    assert pf1 is pf2
+    assert ops.padded_forest(ens) is ops.padded_forest(ens)
+    assert ops.padded_forest(ens) is not pf1  # distinct layout, distinct entry
+
+
+def test_head_tail_slices_cached():
+    ens = random_ensemble(11, n_trees=24, depth=3, n_features=8)
+    cascade = _cascade(ens)
+    assert cascade._head_tail() is cascade._head_tail()
+
+
+def test_overflow_is_lazy_device_scalar():
+    rng = np.random.default_rng(12)
+    ens = random_ensemble(12, n_trees=40, depth=3, n_features=8)
+    Q, D, F = 4, 16, 8
+    X = jnp.asarray(rng.normal(size=(Q, D, F)).astype(np.float32))
+    mask = jnp.ones((Q, D), bool)
+    cascade = _cascade(ens)
+    for result in (
+        cascade.rank_compacted(X, mask, capacity=16),
+        cascade.rank_progressive(X, mask, sentinels=[10], capacities=16),
+    ):
+        assert isinstance(result.overflow, jax.Array)  # not a host int
+        assert int(result.overflow) >= 0               # stats-path read works
+    # Progressive speedup is also lazy (the reference paths return floats).
+    prog = cascade.rank_progressive(X, mask, sentinels=[10], capacities=16)
+    assert isinstance(prog.speedup, jax.Array)
+    assert float(prog.speedup) > 1.0
+
+
+def test_lear_classifier_kernel_path_matches_bitvector():
+    """prob_continue(use_kernel=True) routes through the Pallas kernel and
+    agrees with the pure-XLA bitvector path."""
+    from repro.core.lear import LearClassifier
+
+    rng = np.random.default_rng(13)
+    clf = LearClassifier(
+        forest=random_ensemble(13, n_trees=10, depth=4, n_features=12),
+        sentinel=10,
+    )
+    X_aug = jnp.asarray(rng.normal(size=(3, 20, 12)).astype(np.float32))
+    p_xla = clf.prob_continue(X_aug, use_kernel=False)
+    p_pallas = clf.prob_continue(X_aug, use_kernel=True)
+    np.testing.assert_allclose(
+        np.asarray(p_pallas), np.asarray(p_xla), rtol=1e-5, atol=1e-6
+    )
+
+
+def test_bucket_capacity_policy():
+    assert bucket_capacity(1, 10_000) == 64        # floor
+    assert bucket_capacity(100, 10_000) == 128     # next power of two
+    assert bucket_capacity(128, 10_000) == 128     # exact power stays
+    assert bucket_capacity(5_000, 4_096) == 4_096  # clipped to limit

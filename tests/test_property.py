@@ -12,7 +12,10 @@ Invariants:
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.strategies import ept_continue, ert_continue
 from repro.forest.ensemble import random_ensemble
