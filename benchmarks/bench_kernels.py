@@ -6,7 +6,10 @@ hardware-independent part. ``cascade_compacted`` vs ``cascade_full``
 demonstrates the batch-compaction speedup mechanism end to end; the
 ``multi_sentinel`` section measures the progressive engine against the
 seed's per-stage execution (1 segmented launch vs S launches, cumsum vs
-argsort compaction, cached vs per-call re-padded buffers).
+argsort compaction, cached vs per-call re-padded buffers); the
+``fused_vs_staged`` section sweeps the jit-fused progressive engine's two
+execution modes across continue rates and records the crossover the
+serving cost model should sit near.
 
 Besides the CSV on stdout, results are written machine-readable to
 ``BENCH_kernels.json`` at the repo root so the perf trajectory is tracked
@@ -23,7 +26,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.cascade import CascadeRanker
+from repro.core.cascade import CascadeRanker, bucket_capacity
 from repro.core.compaction import compact_indices_argsort, compact_indices_cumsum
 from repro.core.strategies import ert_continue
 from repro.forest.ensemble import random_ensemble, slice_trees
@@ -202,11 +205,75 @@ def _bench_multi_sentinel(rows):
                  f"vs_cumsum={t_arg / max(t_cum, 1e-9):.2f}x"))
 
 
+def _bench_fused_vs_staged(rows, extra):
+    """Jit-fused progressive engine: fused head vs per-stage tails, across
+    continue rates. Staged scores segment k only on stage-(k-1) compacted
+    survivors — it wins when survivors shrink fast (head work saved dwarfs
+    the extra launches); fused wins when survivors stay large. The recorded
+    crossover is what RankingService's cost model should reproduce."""
+    rng = np.random.default_rng(3)
+    ens = random_ensemble(3, n_trees=192, depth=6, n_features=64)
+    Q, D, F = 16, 64, 64
+    X = jnp.asarray(rng.normal(size=(Q, D, F)).astype(np.float32))
+    mask = jnp.ones((Q, D), bool)
+    sentinels = [32, 64, 96]
+    cascade = CascadeRanker(
+        ensemble=ens, sentinel=sentinels[0],
+        strategy=lambda p, m: ert_continue(p, m, k_s=8),
+    )
+    sweep = []
+    for rate in (0.05, 0.15, 0.3, 0.5, 0.8):
+        k_s = max(1, int(rate * D))
+        strategies = [
+            (lambda p, m, k=k_s: ert_continue(p, m, k_s=k)) for _ in sentinels
+        ]
+        cap = bucket_capacity(int(Q * k_s * 1.25), Q * D)
+        t_fused, t_staged = _time_group(
+            [
+                lambda x, m=mode: cascade.rank_progressive(
+                    x, mask, sentinels=sentinels, capacities=cap,
+                    strategies=strategies, mode=m,
+                ).scores
+                for mode in ("fused", "staged")
+            ],
+            X, iters=8,
+        )
+        sweep.append(
+            {
+                "continue_rate": rate,
+                "fused_us": round(t_fused, 1),
+                "staged_us": round(t_staged, 1),
+                "staged_vs_fused": round(t_fused / max(t_staged, 1e-9), 2),
+            }
+        )
+        rows.append((f"cascade_s3_fused_r{rate:.2f}", t_fused,
+                     f"trees=192,docs={Q * D},capacity={cap}"))
+        rows.append((f"cascade_s3_staged_r{rate:.2f}", t_staged,
+                     f"vs_fused={t_fused / max(t_staged, 1e-9):.2f}x"))
+
+    # Crossover: the first swept rate at which fused stops losing.
+    crossover = next(
+        (p["continue_rate"] for p in sweep if p["staged_vs_fused"] <= 1.0),
+        None,
+    )
+    extra["fused_vs_staged"] = {
+        "sentinels": sentinels,
+        "n_trees": 192,
+        "docs": Q * D,
+        "sweep": sweep,
+        "crossover_continue_rate": crossover,
+        "note": ("staged faster below the crossover rate, fused at/above; "
+                 "null crossover = staged won the whole sweep"),
+    }
+
+
 def main(csv: bool = True):
     rows = []
+    extra = {}
     _bench_scoring(rows)
     _bench_cascade(rows)
     _bench_multi_sentinel(rows)
+    _bench_fused_vs_staged(rows, extra)
 
     if csv:
         for name, us, derived in rows:
@@ -219,6 +286,7 @@ def main(csv: bool = True):
             {"name": name, "us_per_call": round(us, 1), "derived": derived}
             for name, us, derived in rows
         ],
+        **extra,
     }
     with open(JSON_PATH, "w") as f:
         json.dump(payload, f, indent=2)

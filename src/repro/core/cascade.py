@@ -11,26 +11,47 @@ Three execution paths with identical ranking semantics:
   into a dense prefix (O(n) cumsum stable partition) and ONLY that
   compacted block runs the tail trees through the Pallas kernel.
 - :meth:`CascadeRanker.rank_progressive` — the *multi-sentinel engine* and
-  the serving hot path. One sentinel-segmented Pallas launch over the head
-  trees yields the prefix score of every document at EVERY sentinel
-  (``[Q, D, S]``); stage decisions are then pure vector work (no kernel,
-  no HBM round-trip between stages), exit masks are nested
-  (``alive_k = alive_{k-1} ∧ continue_k`` — a document that exits never
-  re-enters), and exactly ONE tail launch runs the remaining trees on the
-  cumsum-compacted survivors of the last stage. Head and tail score from
-  the same cached padded buffer set (:func:`repro.kernels.ops.padded_forest`
-  — pad once, score many), so an S-stage cascade costs 1 segmented head
-  launch + 1 tail launch instead of S+1 launches with full re-slice/re-pad
-  and an HBM round-trip each.
+  the serving hot path. The WHOLE step — head scoring, stage decisions,
+  cumsum compaction, tail, scatter — is built once per configuration and
+  compiled into ONE end-to-end ``jax.jit`` computation (XLA is free to fuse
+  compact → gather → tail → scatter); launch accounting moved to trace
+  time (:func:`repro.kernels.ops._counted_pallas`), so the launch contract
+  stays testable. Two execution modes share identical ranking semantics:
 
-  Design note: for LEAR-scale ensembles the final sentinel sits at a few
-  percent of the ensemble (s_S ≪ T), so scoring every document through the
-  whole head region — rather than per-stage tails on shrinking survivor
-  sets — trades a small amount of redundant VPU work on early-exited
-  documents for the elimination of S−1 kernel launches, S−1 HBM partial
-  round-trips, and all intermediate gather/scatter traffic. The speedup
-  metric stays in the paper's currency (trees *logically* traversed under
-  early-exit semantics), matching :func:`metrics.speedup.trees_traversed`.
+  * ``mode="fused"`` (default): one sentinel-segmented Pallas launch over
+    the head trees yields the prefix score of every document at EVERY
+    sentinel (``[Q, D, S]``); stage decisions are pure vector work (no
+    kernel, no HBM round-trip between stages), exit masks are nested
+    (``alive_k = alive_{k-1} ∧ continue_k`` — a document that exits never
+    re-enters), and exactly ONE tail launch runs the remaining trees on
+    the cumsum-compacted survivors of the last stage: 1 segmented head
+    launch + ≤1 tail launch total.
+  * ``mode="staged"`` (per-stage tails): segment ``k`` is scored ONLY on
+    the stage-(k−1) compacted survivors — each stage's ``capacities[k]``
+    entry is a REAL kernel block bound (survivors beyond it retire with
+    their stage-k prefix and are charged to ``overflow``), so kernel work
+    shrinks with the survivor set at the cost of one launch plus one
+    gather/scatter per stage: ≤S+1 plain launches, no segmented launch.
+    With S == 1 the two modes are the same computation.
+
+  Mode trade-off: fused scores every document through the whole head
+  region, trading redundant VPU work on early-exited documents for the
+  elimination of S−1 launches and all intermediate gather/scatter traffic
+  — it wins when survivor sets stay large (high continue rates, nothing to
+  skip) or when s_S ≪ T (LEAR-scale sentinels, the redundancy is small).
+  Staged wins when survivors shrink fast and the head region is deep:
+  the skipped tree work dwarfs the per-stage launch overhead.
+  :meth:`repro.serve.ranking_service.RankingService` picks per batch from
+  its observed continue rates via
+  :func:`repro.metrics.speedup.progressive_cost_model`;
+  ``benchmarks/bench_kernels.py`` records the measured crossover. The
+  speedup metric stays in the paper's currency (trees *logically*
+  traversed under early-exit semantics), matching
+  :func:`metrics.speedup.trees_traversed`.
+
+  Strategies must be *mask-invariant* (read ``partial`` only where the
+  alive mask is set): in staged mode, exited documents hold stale
+  prefixes, and all stock strategies already mask them out.
 
 A static ``capacity`` bounds each compacted block so the step stays
 jit-compatible; :func:`bucket_capacity` buckets requested capacities to
@@ -49,13 +70,18 @@ mask`` so LEAR / ERT / EPT / EE_ideal all run through the same engine.
 from __future__ import annotations
 
 import dataclasses
+from collections import OrderedDict
 from typing import Callable, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.compaction import COMPACTORS, compact_indices_cumsum
+from repro.core.compaction import (
+    COMPACTORS,
+    compact_indices_cumsum,
+    compact_indices_cumsum_masked,
+)
 from repro.forest.ensemble import TreeEnsemble, slice_trees
 from repro.forest.scoring import score_bitvector
 from repro.kernels.ops import (
@@ -81,8 +107,12 @@ class CascadeResult:
     #                             on the progressive path; host float on the
     #                             reference paths)
     overflow: jax.Array | int = 0  # lazy device scalar; docs beyond capacity
+    #   (fused: final-stage compaction only; staged: summed over all stages)
     stage_masks: list | None = None   # progressive: nested alive mask per stage
-    partials: jax.Array | None = None  # progressive: [Q, D, S] sentinel prefixes
+    partials: jax.Array | None = None  # progressive: [Q, D, S] — the prefix
+    #   grid each stage's strategy saw (fused: exact sentinel prefixes for
+    #   every doc; staged: docs already exited hold their exit-stage prefix)
+    mode: str | None = None            # progressive: "fused" | "staged"
 
 
 @dataclasses.dataclass
@@ -93,6 +123,12 @@ class CascadeRanker:
     classifier_trees: int = 0   # extra per-doc cost charged for the strategy
     _ht_cache: tuple | None = dataclasses.field(
         default=None, init=False, repr=False, compare=False
+    )
+    # End-to-end jitted progressive steps, keyed by the full static config
+    # (buffers, sentinels, capacities, strategies, mode, …). LRU-bounded so
+    # sweeping configurations cannot pin unbounded compiled computations.
+    _step_cache: "OrderedDict" = dataclasses.field(
+        default_factory=OrderedDict, init=False, repr=False, compare=False
     )
 
     def _head_tail(self):
@@ -151,88 +187,217 @@ class CascadeRanker:
         *,
         classifier_trees: Sequence[int] | int | None = None,
         block_t: int = 16,
+        mode: str = "fused",
         **strategy_kwargs,
     ) -> CascadeResult:
-        """Multi-sentinel engine: 1 segmented head launch + ≤1 tail launch.
+        """Multi-sentinel engine, end-to-end jitted (one XLA computation).
 
         ``sentinels`` need not be tree-block aligned (segments are padded
         independently in the cached buffers). ``capacities`` bounds the
-        compacted survivor block per stage (only the last stage launches a
-        kernel; earlier entries bound the bookkeeping/overflow accounting);
-        ``None`` derives them from :func:`bucket_capacity`. ``strategies``
-        defaults to ``self.strategy`` at every stage; ``classifier_trees``
-        (int or per-stage sequence) defaults to ``self.classifier_trees``
-        at every stage for the cost accounting. With a single sentinel this
-        path is bit-exact with :meth:`rank_compacted`, and ``speedup`` /
-        ``overflow`` stay lazy device scalars — the hot path never syncs.
+        compacted survivor block per stage: in ``mode="fused"`` only the
+        final entry bounds a kernel block (1 segmented head + ≤1 tail
+        launch); in ``mode="staged"`` every entry is a real kernel bound —
+        segment ``k`` is scored only on the stage-(k−1) compacted survivors
+        (≤S+1 plain launches), and survivors beyond a stage's capacity
+        retire with their stage prefix and are charged to ``overflow``.
+        ``None`` derives capacities from :func:`bucket_capacity`.
+        ``strategies`` defaults to ``self.strategy`` at every stage;
+        ``classifier_trees`` (int or per-stage sequence) defaults to
+        ``self.classifier_trees`` at every stage for the cost accounting.
+
+        The step for each static configuration (sentinels × capacities ×
+        strategies × mode × …) is built once, jitted, and cached on the
+        ranker; keyword arguments for the strategies are split into traced
+        array operands vs static (hashable) configuration. With a single
+        sentinel both modes are the same computation and bit-exact with
+        :meth:`rank_compacted`; ``speedup`` / ``overflow`` stay lazy device
+        scalars — the hot path never syncs.
         """
         Q, D, F = X.shape
         sentinels = tuple(int(s) for s in sentinels)
         S = len(sentinels)
         T = self.ensemble.n_trees
+        assert mode in ("fused", "staged"), mode
         assert S >= 1 and list(sentinels) == sorted(set(sentinels))
         assert 0 < sentinels[0] and sentinels[-1] <= T, (sentinels, T)
-        if strategies is None:
-            strategies = [self.strategy] * S
+        strategies = (
+            tuple(strategies) if strategies is not None else (self.strategy,) * S
+        )
         assert len(strategies) == S
         if capacities is None:
             capacities = [bucket_capacity(Q * D, Q * D)] * S
         elif isinstance(capacities, int):
             capacities = [capacities] * S
-        capacities = [min(int(c), Q * D) for c in capacities]
+        capacities = tuple(min(int(c), Q * D) for c in capacities)
         assert len(capacities) == S
+        if classifier_trees is None:
+            classifier_trees = self.classifier_trees
+        if isinstance(classifier_trees, int):
+            classifier_trees = (classifier_trees,) * S
+        classifier_trees = tuple(int(c) for c in classifier_trees)
 
         has_tail = sentinels[-1] < T
         boundaries = sentinels + ((T,) if has_tail else ())
         pf = padded_forest(self.ensemble, boundaries=boundaries, block_t=block_t)
-        flat = X.reshape(Q * D, F)
 
-        # One launch over the head trees: prefix score of every document at
-        # every sentinel. A single segment needs no segmented accumulator —
-        # it degenerates to the plain kernel (same launch count, less work).
-        if S == 1:
-            prefix = forest_score_range(pf, flat, 0, 1).reshape(Q, D, 1)
+        # Array-valued strategy kwargs become traced operands of the jitted
+        # step; everything else (ints, floats, flags) is static config and
+        # part of the cache key.
+        names = tuple(sorted(strategy_kwargs))
+        traced_names = tuple(
+            n for n in names
+            if isinstance(strategy_kwargs[n], (jax.Array, np.ndarray))
+        )
+        static_items = tuple(
+            (n, strategy_kwargs[n]) for n in names if n not in traced_names
+        )
+
+        # Fused mode only ever reads capacities[-1] (the tail block); keying
+        # on the full tuple would re-trace identical computations whenever
+        # the service ratchets an early-stage bucket.
+        key_capacities = capacities if mode == "staged" else capacities[-1:]
+        key = (
+            id(pf), sentinels, key_capacities, strategies, classifier_trees,
+            mode, traced_names, static_items,
+        )
+        step = self._step_cache.get(key)
+        if step is None:
+            step = _build_progressive_step(
+                pf, sentinels, capacities, strategies, classifier_trees,
+                mode, traced_names, dict(static_items), T,
+            )
+            self._step_cache[key] = step
+            while len(self._step_cache) > _STEP_CACHE_MAX:
+                self._step_cache.popitem(last=False)
         else:
-            seg_sums = forest_score_segments(pf, flat, n_segments=S)
-            prefix = (jnp.cumsum(seg_sums, axis=1) + pf.base_score).reshape(Q, D, S)
+            self._step_cache.move_to_end(key)
 
-        # Stage decisions: pure vector work, nested exit masks.
-        alive = mask
-        stage_masks = []
-        scores = prefix[..., 0]
-        for k in range(S):
-            cont = strategies[k](prefix[..., k], alive, **strategy_kwargs)
-            alive = alive & cont
-            stage_masks.append(alive)
-            if k + 1 < S:
-                scores = jnp.where(alive, prefix[..., k + 1], scores)
-
-        # One tail launch on the compacted survivors of the last stage.
-        # Only this compaction can drop tail scores, so only it counts as
-        # overflow (earlier capacities are jit-bucketing hints for future
-        # per-stage tail execution; the fused head needs no block there).
-        overflow = jnp.int32(0)
-        if has_tail:
-            capacity = capacities[-1]
-            sel, n_cont = compact_indices_cumsum(alive.reshape(Q * D), capacity)
-            x_sel = jnp.take(flat, sel, axis=0)
-            tail_sel = forest_score_range(pf, x_sel, seg_lo=S)
-            scores = _scatter_tail(scores, sel, tail_sel, n_cont)
-            overflow = n_cont - capacity
-
-        if classifier_trees is None:
-            classifier_trees = self.classifier_trees
-        sp = speedup_progressive(
-            mask, stage_masks, sentinels, T, classifier_trees
+        traced_vals = tuple(strategy_kwargs[n] for n in traced_names)
+        scores, alive, stage_masks, partials, overflow, sp = step(
+            X, mask, traced_vals
         )
         return CascadeResult(
             scores=scores,
             continue_mask=alive,
             speedup=sp,
-            overflow=jnp.maximum(overflow, 0),  # lazy: no device sync
-            stage_masks=stage_masks,
-            partials=prefix,
+            overflow=overflow,   # lazy: no device sync
+            stage_masks=list(stage_masks),
+            partials=partials,
+            mode=mode,
         )
+
+
+_STEP_CACHE_MAX = 16  # compiled progressive steps kept per ranker (LRU)
+
+
+def _build_progressive_step(
+    pf,
+    sentinels: tuple[int, ...],
+    capacities: tuple[int, ...],
+    strategies: tuple,
+    classifier_trees: tuple[int, ...],
+    mode: str,
+    traced_names: tuple[str, ...],
+    static_kwargs: dict,
+    n_trees: int,
+):
+    """Build the end-to-end jitted progressive step for one configuration.
+
+    Everything static (buffers, sentinels, capacities, strategies, mode) is
+    closed over; the returned callable takes ``(X, mask, traced_vals)`` and
+    compiles head → decisions → compaction → tail → scatter into one XLA
+    computation. Launch counters fire while THIS function's body traces
+    (see :func:`repro.kernels.ops._counted_pallas`), so a compiled step
+    re-executing from cache stages no new launches and moves no counters.
+
+    Both modes accumulate prefixes with the same left-to-right association
+    (``(((base + seg_0) + seg_1) + …)``), and the per-block kernel sums are
+    identical, so staged scores match fused scores bit-for-bit on batches
+    where no stage overflows its capacity.
+    """
+    S = len(sentinels)
+    has_tail = sentinels[-1] < n_trees
+
+    @jax.jit
+    def step(X, mask, traced_vals):
+        Q, D, F = X.shape
+        flat = X.reshape(Q * D, F)
+        skw = {**dict(zip(traced_names, traced_vals)), **static_kwargs}
+
+        overflow = jnp.int32(0)
+        alive = mask
+        stage_masks = []
+
+        if mode == "fused":
+            # One launch over the head trees: prefix score of every document
+            # at every sentinel. A single segment needs no segmented
+            # accumulator — it degenerates to the plain kernel (same launch
+            # count, less work).
+            if S == 1:
+                prefixes = [forest_score_range(pf, flat, 0, 1).reshape(Q, D)]
+            else:
+                seg = forest_score_segments(pf, flat, n_segments=S)
+                seg = seg.reshape(Q, D, S)
+                acc = seg[..., 0] + pf.base_score
+                prefixes = [acc]
+                for k in range(1, S):
+                    acc = acc + seg[..., k]
+                    prefixes.append(acc)
+
+            # Stage decisions: pure vector work, nested exit masks.
+            scores = prefixes[0]
+            for k in range(S):
+                cont = strategies[k](prefixes[k], alive, **skw)
+                alive = alive & cont
+                stage_masks.append(alive)
+                if k + 1 < S:
+                    scores = jnp.where(alive, prefixes[k + 1], scores)
+        else:
+            # Per-stage tails: segment k runs only on the compacted
+            # survivors of stage k-1; every capacity is a real kernel
+            # bound with real overflow accounting.
+            prefix = forest_score_range(pf, flat, 0, 1).reshape(Q, D)
+            prefixes = [prefix]
+            for k in range(S):
+                cont = strategies[k](prefix, alive, **skw)
+                alive = alive & cont
+                if k + 1 < S:
+                    cap = capacities[k]
+                    sel, n_cont, within = compact_indices_cumsum_masked(
+                        alive.reshape(Q * D), cap
+                    )
+                    overflow = overflow + jnp.maximum(n_cont - cap, 0)
+                    alive = alive & within.reshape(Q, D)
+                    x_sel = jnp.take(flat, sel, axis=0)
+                    seg_sel = forest_score_range(pf, x_sel, k + 1, k + 2)
+                    prefix = jnp.where(
+                        alive,
+                        _scatter_tail(prefix, sel, seg_sel, n_cont),
+                        prefix,
+                    )
+                    prefixes.append(prefix)
+                stage_masks.append(alive)
+            scores = prefix
+
+        # Tail launch on the compacted survivors of the last stage. In
+        # fused mode only this compaction can drop tail scores, so only it
+        # counts as overflow; staged mode accumulated per-stage overflow
+        # above.
+        if has_tail:
+            cap = capacities[-1]
+            sel, n_cont = compact_indices_cumsum(alive.reshape(Q * D), cap)
+            x_sel = jnp.take(flat, sel, axis=0)
+            tail_sel = forest_score_range(pf, x_sel, seg_lo=S)
+            scores = _scatter_tail(scores, sel, tail_sel, n_cont)
+            overflow = overflow + jnp.maximum(n_cont - cap, 0)
+
+        partials = jnp.stack(prefixes, axis=-1)
+        sp = speedup_progressive(
+            mask, stage_masks, sentinels, n_trees, list(classifier_trees)
+        )
+        return scores, alive, tuple(stage_masks), partials, overflow, sp
+
+    return step
 
 
 def _compacted_tail(X, partial, cont, tail: TreeEnsemble, capacity: int,

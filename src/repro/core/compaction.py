@@ -24,10 +24,9 @@ import jax
 import jax.numpy as jnp
 
 
-@_partial(jax.jit, static_argnames=("capacity",))
-def compact_indices_cumsum(cont: jax.Array, capacity: int):
-    """O(n) stable partition. ``cont: [n] bool`` → ``(sel [capacity] i32,
-    n_cont [] i32)``."""
+def _cumsum_partition(cont: jax.Array, capacity: int):
+    """Shared body: ``(sel, n_cont, within)``; ``within`` is dead-code
+    eliminated by XLA for the caller that drops it."""
     cont = cont.reshape(-1)
     n = cont.shape[0]
     pos = jnp.cumsum(cont.astype(jnp.int32)) - 1   # survivor → output slot
@@ -38,7 +37,26 @@ def compact_indices_cumsum(cont: jax.Array, capacity: int):
         .at[slot]
         .set(jnp.arange(n, dtype=jnp.int32), mode="drop")
     )
+    within = cont & (pos < capacity)
+    return sel, n_cont, within
+
+
+@_partial(jax.jit, static_argnames=("capacity",))
+def compact_indices_cumsum(cont: jax.Array, capacity: int):
+    """O(n) stable partition. ``cont: [n] bool`` → ``(sel [capacity] i32,
+    n_cont [] i32)``."""
+    sel, n_cont, _ = _cumsum_partition(cont, capacity)
     return sel, n_cont
+
+
+@_partial(jax.jit, static_argnames=("capacity",))
+def compact_indices_cumsum_masked(cont: jax.Array, capacity: int):
+    """:func:`compact_indices_cumsum` plus the per-input *within-capacity*
+    mask: ``within[i]`` ⇔ ``cont[i]`` and survivor ``i`` was assigned a
+    selection slot ``< capacity``. The per-stage-tail cascade mode uses it
+    to retire survivors that overflowed a stage's capacity bound (they keep
+    their stage prefix; later stages never see them)."""
+    return _cumsum_partition(cont, capacity)
 
 
 @_partial(jax.jit, static_argnames=("capacity",))

@@ -16,7 +16,11 @@ NEG = -1e30
 
 
 def ert_continue(partial: jax.Array, mask: jax.Array, k_s: int) -> jax.Array:
-    """EE Using Rank Thresholds: keep the top-``k_s`` by partial score."""
+    """EE Using Rank Thresholds: keep the top-``k_s`` by partial score.
+
+    ``k_s`` may exceed the padded candidate count ``D`` (small-query edge):
+    ranks are always ``< D``, so every masked document then continues.
+    """
     ranks = rank_from_scores(partial, mask)
     return mask & (ranks < k_s)
 
@@ -25,10 +29,13 @@ def ept_continue(partial: jax.Array, mask: jax.Array, k_s: int, p: float) -> jax
     """EE Using Proximity Thresholds: keep docs with score ≥ σ_{k_s} − p.
 
     σ_{k_s} is the k_s-th best partial score of the query; larger ``p``
-    keeps more documents (more conservative).
+    keeps more documents (more conservative). ``k_s`` is clamped to the
+    padded candidate count ``D`` (``jax.lax.top_k`` rejects k > axis size;
+    a query block smaller than ``k_s`` must not crash the serving path).
     """
     masked = jnp.where(mask, partial, NEG)
-    kth = jax.lax.top_k(masked, k_s)[0][..., -1]            # [Q]
+    k = min(int(k_s), partial.shape[-1])
+    kth = jax.lax.top_k(masked, k)[0][..., -1]              # [Q]
     return mask & (partial >= (kth - p)[..., None])
 
 

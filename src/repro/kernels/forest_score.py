@@ -27,6 +27,12 @@ Algorithm (per doc block × tree block)
 5. Tree-block partial scores accumulate into the output block; the first
    tree step zero-initializes.
 
+Both entry points are dispatched through the counting wrapper in
+:mod:`repro.kernels.ops` (``_counted_pallas``): launches are recorded at
+staging time (per eager call, per trace under an enclosing ``jit``), so the
+cascade engine's end-to-end jitted step keeps a testable launch contract
+while XLA fuses the surrounding compact/gather/scatter work.
+
 Tree ranges (head/tail from one buffer)
 ---------------------------------------
 ``tree_block_offset`` / ``n_tree_blocks`` restrict a launch to the padded

@@ -20,16 +20,22 @@ gone from the hot path.
 
 Launch accounting
 -----------------
-Every wrapper below increments a module-level launch counter
-(:func:`launch_counts` / :func:`reset_launch_counts`), split by kind
-(``plain`` vs ``segmented``). The cascade engine keeps its orchestration at
-the Python level, so these counters equal real device launches — tests use
-them to assert the progressive engine's 1-head-launch contract.
+Every kernel dispatch below goes through :func:`_counted_pallas`, a counting
+``pallas_call`` wrapper that records the launch **when the call is staged**:
+eagerly that is once per call, and under an enclosing ``jax.jit`` it is once
+per *trace* — a cached re-execution of the compiled computation adds zero,
+because no new launch is staged into it. This is what lets the whole
+progressive cascade step (segmented head → stage decisions → compaction →
+tail → scatter) compile into ONE XLA computation while the 1-head-launch
+contract stays testable: tests trace a fresh step, read
+:func:`launch_counts` (split ``plain`` vs ``segmented``), and assert the
+counts do not move on cached re-executions.
 """
 
 from __future__ import annotations
 
 import dataclasses
+from collections import OrderedDict
 
 import jax
 import jax.numpy as jnp
@@ -44,6 +50,11 @@ from repro.kernels.forest_score import (
 LANE = 128
 ALL_ONES = np.uint32(0xFFFFFFFF)
 
+# Bound on cached (boundaries, block_t) buffer layouts per ensemble: a
+# long-running service sweeping sentinel configs must not leak device
+# memory. Eviction is LRU; a re-requested layout is simply re-padded.
+PADDED_CACHE_MAX = 8
+
 _LAUNCH_COUNTS = {"plain": 0, "segmented": 0}
 
 
@@ -54,6 +65,18 @@ def reset_launch_counts() -> None:
 
 def launch_counts() -> dict[str, int]:
     return dict(_LAUNCH_COUNTS)
+
+
+def _counted_pallas(kind: str, call, *args, **kwargs):
+    """Counting ``pallas_call`` wrapper: record the launch at staging time.
+
+    ``call`` is one of the (jitted) Pallas entry points. The counter bumps
+    when this wrapper's Python body runs — per call in eager execution, per
+    trace under an enclosing ``jit`` — so counts reflect launches staged
+    into each computation, and stay stable across cached re-executions.
+    """
+    _LAUNCH_COUNTS[kind] += 1
+    return call(*args, **kwargs)
 
 
 def _pad_to(x: jax.Array, axis: int, multiple: int, value=0):
@@ -108,7 +131,9 @@ def padded_forest(
 
     ``boundaries`` are cumulative segment ends in tree units (ascending,
     last == ``ens.n_trees``); ``None`` means one segment. The result is
-    cached on the ensemble instance keyed by ``(boundaries, block_t)``.
+    cached on the ensemble instance keyed by ``(boundaries, block_t)``,
+    bounded to the :data:`PADDED_CACHE_MAX` most recently used layouts
+    (LRU eviction — sweeping sentinel configs must not leak device memory).
     """
     T, N = ens.feature.shape
     boundaries = tuple(boundaries) if boundaries is not None else (T,)
@@ -119,12 +144,24 @@ def padded_forest(
 
     cache = getattr(ens, "_padded_cache", None)
     if cache is None:
-        cache = {}
+        cache = OrderedDict()
         object.__setattr__(ens, "_padded_cache", cache)
     key = (boundaries, block_t)
     if key in cache:
+        cache.move_to_end(key)
         return cache[key]
 
+    # The builder may run while an enclosing cascade step is TRACING (the
+    # classifier's kernel path calls in from inside the jitted step); the
+    # buffers must still be concrete — they are cached on the ensemble and
+    # outlive the trace. ensure_compile_time_eval escapes the trace: all
+    # padding ops below execute eagerly on the concrete ensemble arrays.
+    with jax.ensure_compile_time_eval():
+        return _build_padded_forest(ens, cache, key, boundaries, block_t)
+
+
+def _build_padded_forest(ens, cache, key, boundaries, block_t):
+    N = ens.feature.shape[1]
     n_pad = _next_pow2(max(N, 2))
     # Padded nodes: threshold +inf ⇒ predicate always true ⇒ all-ones mask.
     feat = _pad_to(ens.feature, 1, n_pad)
@@ -162,6 +199,8 @@ def padded_forest(
         block_t=block_t,
     )
     cache[key] = pf
+    while len(cache) > PADDED_CACHE_MAX:
+        cache.popitem(last=False)
     return pf
 
 
@@ -194,8 +233,8 @@ def forest_score_range(
     B = X.shape[0]
     x, block_b = _prep_x(X, block_b)
 
-    _LAUNCH_COUNTS["plain"] += 1
-    scores = forest_score_pallas(
+    scores = _counted_pallas(
+        "plain", forest_score_pallas,
         x, pf.feature, pf.threshold, pf.mask_lo, pf.mask_hi, pf.leaf_value,
         block_b=block_b,
         block_t=pf.block_t,
@@ -227,8 +266,8 @@ def forest_score_segments(
     B = X.shape[0]
     x, block_b = _prep_x(X, block_b)
 
-    _LAUNCH_COUNTS["segmented"] += 1
-    seg_scores = forest_score_segments_pallas(
+    seg_scores = _counted_pallas(
+        "segmented", forest_score_segments_pallas,
         x, pf.feature, pf.threshold, pf.mask_lo, pf.mask_hi, pf.leaf_value,
         seg_block_starts=pf.seg_block_starts[:S],
         n_tree_blocks=pf.seg_block_starts[S - 1] + pf.seg_blocks[S - 1],

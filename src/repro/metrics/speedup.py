@@ -70,6 +70,54 @@ def trees_traversed_progressive(
     return total.astype(jnp.float32)
 
 
+def progressive_cost_model(
+    n_docs: float,
+    stage_survivors,
+    sentinels,
+    n_trees: int,
+    mode: str,
+    launch_overhead_trees: float = 0.0,
+    stage_capacities=None,
+) -> float:
+    """Estimated device cost of one progressive batch, in tree-traversal
+    equivalents, for picking fused vs per-stage-tail execution.
+
+    ``stage_survivors[k]`` is the (expected) survivor count after stage
+    ``k``'s decision. The fused head scores every document through all
+    ``sentinels[-1]`` head trees in one segmented launch; the staged head
+    scores segment ``k`` only on the stage-(k−1) survivors but pays one
+    extra launch (dispatch + gather/scatter HBM round trip) per stage,
+    priced at ``launch_overhead_trees`` tree-traversal equivalents each.
+    A staged stage kernel actually scores its full ``capacity``-sized
+    compacted block, not just the live survivors, so when
+    ``stage_capacities`` is given the staged stage work is priced at the
+    block size — otherwise a capacity floor well above the survivor count
+    would make the model systematically underestimate staged cost. Both
+    modes run the same compacted tail. Host-side arithmetic only — never
+    traced, never syncs.
+    """
+    S = len(sentinels)
+    assert mode in ("fused", "staged"), mode
+    assert len(stage_survivors) == S
+    surv = [min(float(s), float(n_docs)) for s in stage_survivors]
+    has_tail = sentinels[-1] < n_trees
+    tail = surv[-1] * (n_trees - sentinels[-1])
+    if mode == "fused":
+        head = n_docs * sentinels[-1]
+        launches = 1 + (1 if has_tail else 0)
+    else:
+        if stage_capacities is not None:
+            assert len(stage_capacities) == S
+            surv = [
+                min(float(c), float(n_docs)) for c in stage_capacities
+            ]
+        head = n_docs * sentinels[0] + sum(
+            surv[k] * (sentinels[k + 1] - sentinels[k]) for k in range(S - 1)
+        )
+        launches = S + (1 if has_tail else 0)
+    return float(head + tail + launch_overhead_trees * launches)
+
+
 def speedup_progressive(
     mask, stage_masks, sentinels, n_trees: int, classifier_trees=0
 ) -> jnp.ndarray:

@@ -7,16 +7,21 @@ documents (already feature-extracted); the service scores them through the
 Production concerns handled here:
 - request batching into fixed-size padded blocks (jit-stable shapes);
 - the multi-sentinel progressive engine
-  (:meth:`repro.core.cascade.CascadeRanker.rank_progressive`): ONE
-  sentinel-segmented Pallas launch scores the head, stage decisions are
-  vector work, one tail launch runs on the cumsum-compacted survivors —
-  all three forests in the path (ranker head, LEAR classifier, ranker
-  tail) go through the same Pallas kernel;
-- compaction capacity chosen from observed continue rates (p99 headroom),
-  bucketed to powers of two so re-jits stay bounded;
+  (:meth:`repro.core.cascade.CascadeRanker.rank_progressive`), end-to-end
+  jitted — all three forests in the path (ranker head, LEAR classifier,
+  ranker tail) go through the same Pallas kernel inside ONE XLA
+  computation per batch;
+- adaptive execution mode: each batch runs the fused segmented head or
+  per-stage tails, whichever the cost model
+  (:func:`repro.metrics.speedup.progressive_cost_model`) predicts cheaper
+  from the observed per-stage continue rates;
+- compaction capacity from a running per-stage survivor peak with
+  headroom, never below the cold-start estimate, bucketed to powers of
+  two so re-jits stay bounded;
 - cost accounting per batch (trees traversed, the paper's own metric) and
-  service-level stats — overflow is surfaced from a lazy device scalar so
-  the ranking hot path never blocks on it;
+  service-level stats — the whole stats read (per-stage survivors, cost,
+  overflow, batch doc count) is ONE fused device transfer, so the ranking
+  hot path never blocks on intermediate scalars;
 - graceful degradation: if survivors exceed capacity, the overflow
   documents keep their sentinel scores (bounded quality loss, never a
   crash) and the stats record it.
@@ -38,7 +43,10 @@ import numpy as np
 from repro.core.cascade import CascadeRanker, bucket_capacity
 from repro.core.lear import LearClassifier, augment_features
 from repro.forest.ensemble import TreeEnsemble
-from repro.metrics.speedup import trees_traversed_progressive
+from repro.metrics.speedup import (
+    progressive_cost_model,
+    trees_traversed_progressive,
+)
 
 
 @dataclasses.dataclass
@@ -50,6 +58,8 @@ class ServiceStats:
     overflow_docs: int = 0
     trees_traversed: float = 0.0
     trees_full_equiv: float = 0.0
+    batches_fused: int = 0
+    batches_staged: int = 0
 
     @property
     def speedup(self) -> float:
@@ -79,15 +89,31 @@ class RankingService:
         top_k: int = 10,
         extra_classifiers: Sequence[LearClassifier] = (),
         use_kernel_classifier: bool = True,
+        execution_mode: str = "auto",
+        launch_overhead_trees: float = 4096.0,
+        survivor_ema: float = 0.3,
     ):
+        assert execution_mode in ("auto", "fused", "staged"), execution_mode
+        # The capacity ratchet needs strictly-positive headroom: in staged
+        # mode observed survivor peaks are clipped AT the current bucket (a
+        # power of two), so only peak × headroom > bucket can round up to
+        # the next bucket — with headroom <= 1 capacity would never grow
+        # and an undersized stage would silently overflow forever.
+        assert capacity_headroom > 1.0, capacity_headroom
         self.ensemble = ensemble
         self.classifier = classifier
         self.threshold = threshold
         self.headroom = capacity_headroom
         self.top_k = top_k
         self.use_kernel_classifier = use_kernel_classifier
+        self.execution_mode = execution_mode
+        # Price of one extra kernel launch + gather/scatter HBM round trip,
+        # in tree-traversal equivalents — the cost model's only tunable.
+        self.launch_overhead_trees = launch_overhead_trees
+        self.survivor_ema = survivor_ema
         self.stats = ServiceStats()
-        self._stage_buckets: list[int] | None = None  # per-stage survivor est.
+        self._stage_peaks: list[int] | None = None  # running max survivors
+        self._stage_ema: list[float] | None = None  # smoothed survivors
 
         stages = sorted([classifier, *extra_classifiers], key=lambda c: c.sentinel)
         self.stage_classifiers = stages
@@ -105,6 +131,9 @@ class RankingService:
         )
 
     def _make_strategy(self, clf: LearClassifier) -> Callable[..., jax.Array]:
+        # NOTE: the strategy is traced into the cached jitted cascade step,
+        # so ``self.threshold`` is baked in at trace time — construct a new
+        # service (or clear the cascade's step cache) to change it.
         def strategy(partial, mask, features=None):
             aug = augment_features(features, partial, mask)
             return clf.continue_mask(
@@ -113,62 +142,120 @@ class RankingService:
 
         return strategy
 
-    def _pick_capacities(self, n_docs: int) -> list[int]:
-        """Per-stage compaction capacities from observed survivor counts.
+    def _cold_start_estimate(self, n_docs: int) -> int:
+        # Cold start: assume a 40% survivor rate at EVERY stage
+        # (conservative — survivors only shrink; undersizing a later
+        # stage on batch 1 would cause real overflow).
+        return int(0.4 * n_docs * self.headroom)
 
-        Each stage gets its own bucket (survivor sets shrink stage over
-        stage; sizing every stage off the last one would report phantom
-        overflow at the early stages). Buckets are powers of two to bound
-        re-jits.
+    def _pick_capacities(self, n_docs: int) -> list[int]:
+        """Per-stage compaction capacities with p99-style headroom.
+
+        Each stage gets its own bucket sized from the RUNNING MAX of its
+        observed survivor counts times ``headroom``, and never below the
+        cold-start estimate — one sparse batch must not shrink the bucket
+        under the traffic the service has already seen (that would silently
+        overflow the next normal batch). Each stage gets its own bucket
+        (survivor sets shrink stage over stage; sizing every stage off the
+        last one would report phantom overflow at the early stages), and
+        buckets are powers of two to bound re-jits. When a stage still
+        overflows (survivors were clipped at the old bucket), the observed
+        peak equals the old capacity, so ``peak × headroom`` rounds up to
+        the next bucket — capacity ratchets up until overflow stops.
         """
-        if self._stage_buckets is None:
-            # Cold start: assume a 40% survivor rate at EVERY stage
-            # (conservative — survivors only shrink; undersizing a later
-            # stage on batch 1 would cause real overflow).
-            want = [int(0.4 * n_docs * self.headroom)] * len(self.sentinels)
+        cold = self._cold_start_estimate(n_docs)
+        if self._stage_peaks is None:
+            want = [cold] * len(self.sentinels)
         else:
-            want = self._stage_buckets
+            want = [
+                max(cold, int(peak * self.headroom))
+                for peak in self._stage_peaks
+            ]
         return [bucket_capacity(w, n_docs) for w in want]
+
+    def _pick_mode(self, n_docs: int, capacities=None) -> str:
+        """Fused head vs per-stage tails, from observed continue rates.
+
+        Until the first batch lands there are no observed rates — default
+        fused (1 segmented + ≤1 tail launch is the safe floor). After
+        that, price both modes with the cost model on the smoothed
+        survivor counts — staged stage work at the actual capacity blocks
+        the stages would score (``capacities``) — and take the cheaper.
+        """
+        if self.execution_mode != "auto":
+            return self.execution_mode
+        if self._stage_ema is None or len(self.sentinels) == 1:
+            return "fused"
+        if capacities is None:
+            capacities = self._pick_capacities(n_docs)
+        T = self.ensemble.n_trees
+        cost = {
+            m: progressive_cost_model(
+                n_docs, self._stage_ema, self.sentinels, T, m,
+                launch_overhead_trees=self.launch_overhead_trees,
+                stage_capacities=capacities,
+            )
+            for m in ("fused", "staged")
+        }
+        return "staged" if cost["staged"] < cost["fused"] else "fused"
 
     def rank_batch(self, X: jax.Array, mask: jax.Array):
         """X: [Q, D, F]; returns (top-k doc indices [Q, k], scores [Q, D])."""
         Q, D, _ = X.shape
         n_docs = Q * D
         capacities = self._pick_capacities(n_docs)
+        mode = self._pick_mode(n_docs, capacities)
         result = self.cascade.rank_progressive(
             X, mask,
             sentinels=self.sentinels,
             capacities=capacities,
             strategies=self.stage_strategies,
             classifier_trees=[c.n_trees for c in self.stage_classifiers],
+            mode=mode,
             features=X,
         )
-        # Top-k is the response; everything below is the stats path.
+        # Top-k is the response (clamped to the candidate count — a small
+        # query block must not crash top_k); everything below is stats.
         masked = jnp.where(mask, result.scores, -jnp.inf)
-        top_idx = jax.lax.top_k(masked, self.top_k)[1]
+        top_idx = jax.lax.top_k(masked, min(self.top_k, D))[1]
 
-        # Stats path: one fused device read for the per-stage survivor
-        # counts, the cost metric, and the overflow scalar.
+        # Stats path: ONE fused device read for the per-stage survivor
+        # counts, the cost metric, the overflow scalar, and the batch doc
+        # count — no other host sync on this path.
         T = self.ensemble.n_trees
         clf_trees = [c.n_trees for c in self.stage_classifiers]
-        survivors, traversed, overflow = jax.device_get((
+        survivors, traversed, overflow, batch_docs = jax.device_get((
             jnp.stack([m.sum() for m in result.stage_masks]),
             trees_traversed_progressive(
                 mask, result.stage_masks, self.sentinels, T, clf_trees
             ),
             result.overflow,
+            mask.sum(),
         ))
-        # Adapt each stage's capacity bucket to its observed survivor count.
-        self._stage_buckets = [int(n * self.headroom) for n in survivors]
+        # Adapt: running max sizes the buckets, the EMA feeds the cost model.
+        a = self.survivor_ema
+        if self._stage_peaks is None:
+            self._stage_peaks = [int(n) for n in survivors]
+            self._stage_ema = [float(n) for n in survivors]
+        else:
+            self._stage_peaks = [
+                max(p, int(n)) for p, n in zip(self._stage_peaks, survivors)
+            ]
+            self._stage_ema = [
+                (1 - a) * e + a * float(n)
+                for e, n in zip(self._stage_ema, survivors)
+            ]
 
         s = self.stats
         s.batches += 1
+        s.batches_fused += mode == "fused"
+        s.batches_staged += mode == "staged"
         s.queries += Q
-        s.docs += int(mask.sum())
+        s.docs += int(batch_docs)
         s.docs_continued += int(survivors[-1])
         s.overflow_docs += int(overflow)
         s.trees_traversed += float(traversed)
-        s.trees_full_equiv += int(mask.sum()) * T
+        s.trees_full_equiv += int(batch_docs) * T
 
         return np.asarray(top_idx), np.asarray(result.scores)
 

@@ -50,6 +50,7 @@ def _run_train(cell):
     return float(metrics["loss"])
 
 
+@pytest.mark.slow  # 5-12s per arch on CPU; prefill/decode covers the fwd path
 @pytest.mark.parametrize("arch", LM_ARCHS)
 def test_lm_train_step(arch):
     cfg = get_smoke_config(arch)
@@ -78,6 +79,7 @@ def test_lm_prefill_and_decode(arch):
     assert k_old.shape == k_new.shape
 
 
+@pytest.mark.slow  # heaviest single smoke (~14s); featured-graph stays tier-1
 def test_nequip_molecule_train():
     cfg = get_smoke_config("nequip")
     shape = ShapeSpec(name="smoke_mol", kind="train", n_nodes=40, n_edges=120,

@@ -3,13 +3,21 @@
 Covers the engine's contracts:
 - segmented-prefix kernel vs the ``partial_scores`` oracle at every sentinel
   (including tree-block-unaligned sentinels);
-- cumsum compaction ≡ argsort compaction (overflow / all-exit / all-continue);
-- ``rank_progressive`` with one sentinel is bit-exact vs ``rank_compacted``;
-- an S=3 cascade issues exactly 1 segmented head launch and ≤ S tail
-  launches (launch counters in :mod:`repro.kernels.ops`);
+- cumsum compaction ≡ argsort compaction (overflow / all-exit / all-continue),
+  and the masked variant's within-capacity mask;
+- ``rank_progressive`` with one sentinel is bit-exact vs ``rank_compacted``
+  in BOTH execution modes;
+- per-stage-tail (staged) mode is bit-exact with fused mode on non-overflow
+  batches, and both agree with the ``rank()`` oracle;
+- the launch contract under the end-to-end jit: a fused S=3 cascade stages
+  exactly 1 segmented head + 1 tail launch, a staged one ≤ S+1 plain
+  launches, and the TRACE-TIME counters do not move on cached
+  re-executions of a compiled step;
+- staged capacities are real kernel bounds: per-stage overflow is counted
+  and clipped survivors retire with their stage prefix;
 - nested exit masks: a document that exits at stage k keeps its stage-k
   prefix even if a later stage's strategy would have kept it;
-- padded-buffer caching on the ensemble;
+- padded-buffer caching on the ensemble, LRU-bounded;
 - overflow stays a lazy device scalar (no hidden host sync in the hot path).
 """
 
@@ -19,7 +27,11 @@ import numpy as np
 import pytest
 
 from repro.core.cascade import CascadeRanker, bucket_capacity
-from repro.core.compaction import compact_indices_argsort, compact_indices_cumsum
+from repro.core.compaction import (
+    compact_indices_argsort,
+    compact_indices_cumsum,
+    compact_indices_cumsum_masked,
+)
 from repro.core.strategies import ert_continue
 from repro.forest.ensemble import random_ensemble
 from repro.forest.scoring import partial_scores
@@ -100,7 +112,8 @@ def test_cumsum_compaction_equals_argsort(cont_rate, capacity):
     )
 
 
-def test_progressive_single_sentinel_bitexact_vs_compacted():
+@pytest.mark.parametrize("mode", ["fused", "staged"])
+def test_progressive_single_sentinel_bitexact_vs_compacted(mode):
     rng = np.random.default_rng(5)
     ens = random_ensemble(5, n_trees=60, depth=4, n_features=16)
     Q, D, F = 6, 24, 16
@@ -108,7 +121,9 @@ def test_progressive_single_sentinel_bitexact_vs_compacted():
     mask = jnp.asarray(rng.random((Q, D)) < 0.9)
     cascade = _cascade(ens)
     ref = cascade.rank_compacted(X, mask, capacity=64)
-    got = cascade.rank_progressive(X, mask, sentinels=[10], capacities=[64])
+    got = cascade.rank_progressive(
+        X, mask, sentinels=[10], capacities=[64], mode=mode
+    )
     np.testing.assert_array_equal(np.asarray(ref.scores), np.asarray(got.scores))
     np.testing.assert_array_equal(
         np.asarray(ref.continue_mask), np.asarray(got.continue_mask)
@@ -131,8 +146,12 @@ def test_progressive_single_sentinel_bitexact_under_overflow():
 
 
 def test_progressive_s3_launch_budget():
-    """The acceptance contract: exactly 1 segmented head launch, ≤ S plain
-    (tail) launches for an S=3 cascade."""
+    """The acceptance contract, asserted via trace-time counters under the
+    end-to-end jit: a fused S=3 cascade stages exactly 1 segmented head
+    launch + 1 tail launch; a staged one stages S+1 = 4 plain launches and
+    no segmented launch; and cached re-executions of a compiled step move
+    NO counters (the launch plan is a property of the computation, not of
+    the call)."""
     rng = np.random.default_rng(7)
     ens = random_ensemble(7, n_trees=60, depth=4, n_features=16)
     Q, D, F = 6, 24, 16
@@ -142,16 +161,33 @@ def test_progressive_s3_launch_budget():
     strategies = [
         (lambda p, m, k=k: ert_continue(p, m, k_s=k)) for k in (16, 10, 6)
     ]
+
+    def run(mode):
+        result = cascade.rank_progressive(
+            X, mask, sentinels=[10, 20, 35], capacities=128,
+            strategies=strategies, mode=mode,
+        )
+        jax.block_until_ready(result.scores)
+        return result
+
     ops.reset_launch_counts()
-    result = cascade.rank_progressive(
-        X, mask, sentinels=[10, 20, 35], capacities=128, strategies=strategies
-    )
-    jax.block_until_ready(result.scores)
+    run("fused")
     counts = ops.launch_counts()
     assert counts["segmented"] == 1, counts
     # Exactly ONE tail launch — a regression to per-stage tails (the S-launch
-    # pattern this engine replaces) must fail here, not sneak under a <= S.
+    # pattern fused mode replaces) must fail here, not sneak under a <= S.
     assert counts["plain"] == 1, counts
+    # Cached re-execution: the compiled step stages no new launches.
+    run("fused")
+    assert ops.launch_counts() == counts, ops.launch_counts()
+
+    ops.reset_launch_counts()
+    run("staged")
+    staged_counts = ops.launch_counts()
+    # Stage-0 head + per-stage tails for stages 1..S-1 + final tail = S+1.
+    assert staged_counts == {"plain": 4, "segmented": 0}, staged_counts
+    run("staged")
+    assert ops.launch_counts() == staged_counts, ops.launch_counts()
 
 
 def test_progressive_nested_exit_semantics():
@@ -267,3 +303,126 @@ def test_bucket_capacity_policy():
     assert bucket_capacity(100, 10_000) == 128     # next power of two
     assert bucket_capacity(128, 10_000) == 128     # exact power stays
     assert bucket_capacity(5_000, 4_096) == 4_096  # clipped to limit
+
+
+def test_compaction_masked_within_capacity():
+    rng = np.random.default_rng(20)
+    cont = jnp.asarray(rng.random(96) < 0.5)
+    sel, n_cont, within = compact_indices_cumsum_masked(cont, 16)
+    sel_ref, n_ref = compact_indices_cumsum(cont, 16)
+    assert int(n_cont) == int(n_ref)
+    np.testing.assert_array_equal(np.asarray(sel), np.asarray(sel_ref))
+    # ``within`` is exactly the first ``capacity`` survivors, in index order.
+    idx = np.flatnonzero(np.asarray(cont))
+    expect = np.zeros(96, bool)
+    expect[idx[:16]] = True
+    np.testing.assert_array_equal(np.asarray(within), expect)
+
+
+def test_staged_matches_fused_and_oracle():
+    """Per-stage-tail mode vs fused mode vs the ``rank()`` oracle.
+
+    On a non-overflow batch the two modes are BIT-exact (same per-block
+    kernel sums, same left-to-right prefix association); the reference
+    ``rank()`` path scores through a different (pure-XLA) kernel, so it is
+    compared to numerical tolerance.
+    """
+    rng = np.random.default_rng(21)
+    ens = random_ensemble(21, n_trees=60, depth=4, n_features=16)
+    Q, D, F = 5, 24, 16
+    X = jnp.asarray(rng.normal(size=(Q, D, F)).astype(np.float32))
+    mask = jnp.asarray(rng.random((Q, D)) < 0.9)
+    cascade = _cascade(ens)
+    strategies = [
+        (lambda p, m, k=k: ert_continue(p, m, k_s=k)) for k in (16, 10, 6)
+    ]
+    kwargs = dict(
+        sentinels=[10, 20, 35], capacities=128, strategies=strategies
+    )
+    fused = cascade.rank_progressive(X, mask, mode="fused", **kwargs)
+    staged = cascade.rank_progressive(X, mask, mode="staged", **kwargs)
+    assert int(fused.overflow) == int(staged.overflow) == 0
+    np.testing.assert_array_equal(
+        np.asarray(fused.scores), np.asarray(staged.scores)
+    )
+    for mf, ms in zip(fused.stage_masks, staged.stage_masks):
+        np.testing.assert_array_equal(np.asarray(mf), np.asarray(ms))
+    assert float(fused.speedup) == float(staged.speedup)
+
+    # Single-sentinel oracle: both modes vs the full-compute rank() path.
+    for mode in ("fused", "staged"):
+        got = cascade.rank_progressive(
+            X, mask, sentinels=[10], capacities=[Q * D], mode=mode
+        )
+        ref = cascade.rank(X, mask)
+        np.testing.assert_array_equal(
+            np.asarray(ref.continue_mask), np.asarray(got.continue_mask)
+        )
+        np.testing.assert_allclose(
+            np.asarray(got.scores), np.asarray(ref.scores),
+            rtol=1e-5, atol=1e-5,
+        )
+
+
+def test_staged_capacity_is_real_bound_with_overflow():
+    """Staged capacities clip the survivor block: clipped docs retire with
+    their stage prefix, per-stage overflow is counted, and later stages
+    never see the clipped docs."""
+    rng = np.random.default_rng(22)
+    ens = random_ensemble(22, n_trees=40, depth=3, n_features=8)
+    Q, D, F = 4, 32, 8
+    X = jnp.asarray(rng.normal(size=(Q, D, F)).astype(np.float32))
+    mask = jnp.ones((Q, D), bool)
+    cascade = _cascade(ens, k_s=16)  # 64 stage-0 survivors
+    res = cascade.rank_progressive(
+        X, mask, sentinels=[10, 20], capacities=[16, 128], mode="staged"
+    )
+    assert int(res.overflow) == 48          # 64 survivors, stage-0 cap 16
+    alive0 = np.asarray(res.stage_masks[0])
+    assert alive0.sum() == 16               # clipped to capacity
+    # Clipped docs keep their stage-0 prefix (the compacted survivors are
+    # the first 16 in index order; later survivors retired).
+    prefix0 = np.asarray(res.partials[..., 0])
+    decided = np.asarray(
+        ert_continue(jnp.asarray(prefix0), mask, k_s=16)
+    )
+    clipped = decided & ~alive0
+    assert clipped.sum() == 48
+    np.testing.assert_array_equal(
+        np.asarray(res.scores)[clipped], prefix0[clipped]
+    )
+
+
+def test_padded_forest_cache_lru_eviction():
+    """The per-ensemble padded-buffer cache is LRU-bounded: sweeping
+    sentinel layouts cannot grow device memory without bound, and the
+    most-recently-used layout survives eviction pressure."""
+    ens = random_ensemble(23, n_trees=24, depth=3, n_features=8)
+    pf0 = ops.padded_forest(ens, boundaries=(10, 24))
+    for i in range(ops.PADDED_CACHE_MAX - 1):
+        ops.padded_forest(ens, boundaries=(i + 1, 24))
+    # Cache is now full; pf0 is the LRU entry. Touch it, then insert one
+    # more layout: the touched entry must survive, the oldest untouched go.
+    assert ops.padded_forest(ens, boundaries=(10, 24)) is pf0
+    ops.padded_forest(ens, boundaries=(20, 24))
+    cache = ens._padded_cache
+    assert len(cache) == ops.PADDED_CACHE_MAX
+    assert ops.padded_forest(ens, boundaries=(10, 24)) is pf0  # still cached
+    # The evicted layout is rebuilt fresh on re-request — and re-cached.
+    rebuilt = ops.padded_forest(ens, boundaries=(1, 24))
+    assert ops.padded_forest(ens, boundaries=(1, 24)) is rebuilt
+
+
+def test_strategies_clamp_small_query_block():
+    """k_s larger than the padded candidate count must not crash (top_k
+    rejects k > axis size) — every masked doc continues instead."""
+    from repro.core.strategies import ept_continue
+
+    rng = np.random.default_rng(24)
+    partial = jnp.asarray(rng.normal(size=(3, 5)).astype(np.float32))
+    mask = jnp.asarray(rng.random((3, 5)) < 0.8)
+    for cont in (
+        ert_continue(partial, mask, k_s=50),
+        ept_continue(partial, mask, k_s=50, p=1e9),
+    ):
+        np.testing.assert_array_equal(np.asarray(cont), np.asarray(mask))

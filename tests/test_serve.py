@@ -1,0 +1,137 @@
+"""RankingService serving-path contracts: capacity policy, sync discipline,
+adaptive execution mode, and small-query edges.
+
+These tests drive the service with deterministic feature-keyed stage
+strategies (continue ⇔ ``features[..., 0] > 0``) so survivor counts are
+controlled exactly per batch without training a classifier.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.lear import LearClassifier
+from repro.forest.ensemble import random_ensemble
+from repro.serve.ranking_service import RankingService
+
+
+def _service(seed=0, n_trees=64, sentinels=(8, 28), **kwargs):
+    ens = random_ensemble(seed, n_trees=n_trees, depth=4, n_features=12)
+    clfs = [
+        LearClassifier(
+            forest=random_ensemble(100 + i, n_trees=10, depth=3, n_features=16),
+            sentinel=s,
+        )
+        for i, s in enumerate(sentinels)
+    ]
+    svc = RankingService(
+        ens, clfs[0], threshold=0.4, extra_classifiers=clfs[1:], **kwargs
+    )
+    # Deterministic stage gate: continue ⇔ feature 0 positive. Replacing the
+    # strategy list BEFORE the first batch keeps the jitted-step cache to
+    # one entry per mode.
+    gate = lambda p, m, features=None: m & (features[..., 0] > 0.0)
+    svc.stage_strategies = [gate] * len(svc.sentinels)
+    return svc
+
+
+def _batch(rng, Q, D, F, survive_frac):
+    """A [Q, D, F] batch whose gate-survivor count is survive_frac exactly."""
+    X = rng.normal(size=(Q, D, F)).astype(np.float32)
+    flags = np.zeros((Q, D), np.float32) - 1.0
+    n = int(round(survive_frac * D))
+    flags[:, :n] = 1.0
+    X[..., 0] = flags
+    return jnp.asarray(X), jnp.ones((Q, D), bool)
+
+
+def test_capacity_never_shrinks_below_observed_peak():
+    """Regression: one sparse batch must not shrink a stage's bucket under
+    already-observed traffic — oscillating survivor counts cause zero
+    overflow after the warmup batch."""
+    rng = np.random.default_rng(1)
+    svc = _service(execution_mode="fused")
+    Q, D, F = 2, 64, 12
+    dense = _batch(rng, Q, D, F, survive_frac=0.8)   # 102 survivors
+    sparse = _batch(rng, Q, D, F, survive_frac=0.05)  # 6 survivors
+    svc.rank_batch(*dense)                 # warmup: cold-start bucket (64)
+    warmup_overflow = svc.stats.overflow_docs
+    assert warmup_overflow > 0             # proves the scenario bites
+    for _ in range(3):                     # oscillate: sparse then dense
+        svc.rank_batch(*sparse)
+        svc.rank_batch(*dense)
+    assert svc.stats.overflow_docs == warmup_overflow  # zero after warmup
+    # The bucket ratcheted up and the cold-start floor still holds.
+    caps = svc._pick_capacities(Q * D)
+    assert all(c >= 128 for c in caps), caps
+
+
+def test_rank_batch_single_fused_device_read(monkeypatch):
+    """The whole stats path is ONE jax.device_get — folding mask.sum() into
+    the fused read removed the extra per-batch host syncs."""
+    rng = np.random.default_rng(2)
+    svc = _service(execution_mode="fused")
+    X, mask = _batch(rng, 2, 32, 12, survive_frac=0.3)
+    svc.rank_batch(X, mask)  # compile outside the counted window
+    calls = []
+    real = jax.device_get
+    monkeypatch.setattr(
+        jax, "device_get", lambda *a, **k: calls.append(1) or real(*a, **k)
+    )
+    svc.rank_batch(X, mask)
+    assert len(calls) == 1, len(calls)
+
+
+def test_top_k_clamped_to_candidate_count():
+    """A query block smaller than top_k returns all D candidates instead of
+    crashing jax.lax.top_k."""
+    rng = np.random.default_rng(3)
+    svc = _service(execution_mode="fused", top_k=10)
+    X, mask = _batch(rng, 2, 4, 12, survive_frac=0.5)
+    top_idx, scores = svc.rank_batch(X, mask)
+    assert top_idx.shape == (2, 4)
+    assert scores.shape == (2, 4)
+
+
+def test_adaptive_mode_tracks_continue_rate():
+    """The service picks per-stage tails when survivors shrink fast (big
+    head-work saving) and the fused head when survivors stay large, from
+    its OBSERVED continue rates; the first batch defaults to fused."""
+    rng = np.random.default_rng(4)
+    Q, D, F = 2, 64, 12
+    # survivor_ema=1.0: track the last batch exactly (keeps the arithmetic
+    # of the crossover deterministic in the test).
+    svc = _service(
+        execution_mode="auto", launch_overhead_trees=512.0, survivor_ema=1.0
+    )
+    lo = _batch(rng, Q, D, F, survive_frac=0.05)
+    hi = _batch(rng, Q, D, F, survive_frac=0.95)
+
+    svc.rank_batch(*lo)                      # cold start: no observed rates
+    assert svc.stats.batches_fused == 1
+    svc.rank_batch(*lo)                      # observed 5% continue → staged
+    assert svc.stats.batches_staged == 1
+    for _ in range(4):                       # EMA converges to 95% → fused
+        svc.rank_batch(*hi)
+    assert svc._pick_mode(Q * D) == "fused"
+    assert svc.stats.batches_fused > 1
+
+    # Forced modes bypass the cost model entirely.
+    forced = _service(execution_mode="staged", launch_overhead_trees=512.0)
+    forced.rank_batch(*hi)
+    assert forced.stats.batches_staged == 1
+
+
+def test_modes_serve_identical_scores():
+    """Fused and staged services return identical responses on a
+    non-overflow batch (the engine's bit-exactness surfaces end to end)."""
+    rng = np.random.default_rng(5)
+    X, mask = _batch(rng, 2, 32, 12, survive_frac=0.25)
+    out = {}
+    for mode in ("fused", "staged"):
+        svc = _service(execution_mode=mode)
+        out[mode] = svc.rank_batch(X, mask)
+        assert svc.stats.overflow_docs == 0
+    np.testing.assert_array_equal(out["fused"][0], out["staged"][0])
+    np.testing.assert_array_equal(out["fused"][1], out["staged"][1])

@@ -4,6 +4,11 @@ train λ-MART → train LEAR → serve through the cascade (compacted Pallas
 path) → verify the paper's qualitative claims hold on held-out queries:
 LEAR achieves ≥EPT's speedup at matched quality, classifier recall on
 Continue is high, and the compacted path is numerically exact.
+
+The shared module fixture trains λ-MART + LEAR (~1 min on CPU), so the
+whole module is marked ``slow`` — it runs in the full lane
+(``-m "slow or not slow"``), not tier-1; tests/test_serve.py keeps the
+serving path covered in tier-1 with untrained forests.
 """
 
 import jax
@@ -20,6 +25,8 @@ from repro.metrics.classification import precision_recall
 from repro.metrics.ranking import mean_ndcg
 from repro.metrics.speedup import speedup_vs_full
 from repro.serve.ranking_service import RankingService
+
+pytestmark = pytest.mark.slow  # trained-pipeline fixture; full lane only
 
 
 @pytest.fixture(scope="module")
