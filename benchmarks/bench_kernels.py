@@ -210,7 +210,20 @@ def _bench_fused_vs_staged(rows, extra):
     continue rates. Staged scores segment k only on stage-(k-1) compacted
     survivors — it wins when survivors shrink fast (head work saved dwarfs
     the extra launches); fused wins when survivors stay large. The recorded
-    crossover is what RankingService's cost model should reproduce."""
+    crossover is what RankingService's cost model should reproduce.
+
+    Also runs the combined mode="auto" program at every swept rate with the
+    rate injected as the survivor estimate, recording (a) the branch the
+    ON-DEVICE pick took, (b) the branch the host cost model picks at the
+    bench-calibrated launch overhead, and (c) that the combined program's
+    scores are bit-exact with the picked branch's dedicated run — the
+    acceptance contract, measured where the crossover is."""
+    from repro.metrics.speedup import progressive_cost_model
+    from repro.serve.calibration import (
+        calibrate_launch_overhead_trees,
+        last_calibration,
+    )
+
     rng = np.random.default_rng(3)
     ens = random_ensemble(3, n_trees=192, depth=6, n_features=64)
     Q, D, F = 16, 64, 64
@@ -221,6 +234,12 @@ def _bench_fused_vs_staged(rows, extra):
         ensemble=ens, sentinel=sentinels[0],
         strategy=lambda p, m: ert_continue(p, m, k_s=8),
     )
+    # The calibration report lands in the payload (main() rewrites the
+    # JSON wholesale, so merging into the file here would be clobbered).
+    loh = calibrate_launch_overhead_trees()
+    extra["launch_calibration"] = {
+        **(last_calibration() or {}), "launch_overhead_trees": round(loh, 1),
+    }
     sweep = []
     for rate in (0.05, 0.15, 0.3, 0.5, 0.8):
         k_s = max(1, int(rate * D))
@@ -238,12 +257,42 @@ def _bench_fused_vs_staged(rows, extra):
             ],
             X, iters=8,
         )
+        # Combined program at this rate: device pick vs host reference,
+        # and bit-exactness with the picked branch's dedicated run.
+        ema = [rate * Q * D] * len(sentinels)
+        auto = cascade.rank_progressive(
+            X, mask, sentinels=sentinels, capacities=cap,
+            strategies=strategies, mode="auto",
+            stage_ema=jnp.asarray(ema, jnp.float32),
+            launch_overhead_trees=loh,
+        )
+        device_pick = "staged" if bool(auto.picked_staged) else "fused"
+        cost = {
+            m: progressive_cost_model(
+                Q * D, ema, sentinels, ens.n_trees, m,
+                launch_overhead_trees=loh,
+                stage_capacities=[cap] * len(sentinels),
+            )
+            for m in ("fused", "staged")
+        }
+        host_pick = "staged" if cost["staged"] < cost["fused"] else "fused"
+        picked_ref = cascade.rank_progressive(
+            X, mask, sentinels=sentinels, capacities=cap,
+            strategies=strategies, mode=device_pick,
+        )
+        exact = bool(
+            (np.asarray(auto.scores) == np.asarray(picked_ref.scores)).all()
+        )
         sweep.append(
             {
                 "continue_rate": rate,
                 "fused_us": round(t_fused, 1),
                 "staged_us": round(t_staged, 1),
                 "staged_vs_fused": round(t_fused / max(t_staged, 1e-9), 2),
+                "device_pick": device_pick,
+                "host_model_pick": host_pick,
+                "pick_agrees": device_pick == host_pick,
+                "auto_bitexact_with_picked_branch": exact,
             }
         )
         rows.append((f"cascade_s3_fused_r{rate:.2f}", t_fused,
@@ -260,10 +309,13 @@ def _bench_fused_vs_staged(rows, extra):
         "sentinels": sentinels,
         "n_trees": 192,
         "docs": Q * D,
+        "launch_overhead_trees_calibrated": round(loh, 1),
         "sweep": sweep,
         "crossover_continue_rate": crossover,
         "note": ("staged faster below the crossover rate, fused at/above; "
-                 "null crossover = staged won the whole sweep"),
+                 "null crossover = staged won the whole sweep; device_pick "
+                 "is the in-program lax.cond choice at the calibrated "
+                 "launch overhead"),
     }
 
 

@@ -7,18 +7,23 @@ ensembles, plus the heuristic baselines it is evaluated against.
 - :mod:`repro.core.lear` — LEAR itself: sentinel feature augmentation,
   Continue/Exit label construction, cost-sensitive weighting
   ``w_d = 2^{r_d}/f_q(l_d)``, 10-tree logistic GBDT classifier.
+- :mod:`repro.core.features` — the device-resident augmented-feature
+  pipeline (sort-free per-query ranking, min/max segment reductions,
+  score normalization) shared by LEAR training and the compiled serving
+  step.
 - :mod:`repro.core.cascade` — the execution engine: sentinel-partitioned
   ensemble traversal with batch compaction (the TPU realization of
   document-level early exit), including the multi-sentinel progressive
-  engine (one segmented head launch + one compacted tail launch).
+  engine (fused segmented-head, per-stage-tail, and the combined
+  ``mode="auto"`` program with an on-device fused/staged pick).
 - :mod:`repro.core.compaction` — O(n) cumsum survivor compaction plus the
   O(n log n) argsort reference it replaced.
 """
 
 from repro.core.strategies import ert_continue, ept_continue, ideal_continue
+from repro.core.features import augment_features
 from repro.core.lear import (
     LearClassifier,
-    augment_features,
     build_continue_labels,
     instance_weights,
     train_lear,

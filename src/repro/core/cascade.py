@@ -41,13 +41,28 @@ Three execution paths with identical ranking semantics:
   skip) or when s_S ≪ T (LEAR-scale sentinels, the redundancy is small).
   Staged wins when survivors shrink fast and the head region is deep:
   the skipped tree work dwarfs the per-stage launch overhead.
-  :meth:`repro.serve.ranking_service.RankingService` picks per batch from
-  its observed continue rates via
-  :func:`repro.metrics.speedup.progressive_cost_model`;
-  ``benchmarks/bench_kernels.py`` records the measured crossover. The
-  speedup metric stays in the paper's currency (trees *logically*
-  traversed under early-exit semantics), matching
-  :func:`metrics.speedup.trees_traversed`.
+
+  * ``mode="auto"`` (the ON-DEVICE pick): ONE combined program contains
+    both branches under a ``jax.lax.cond`` and the branch predicate is
+    computed on device —
+    :func:`repro.metrics.speedup.progressive_cost_model_device` prices
+    both modes from a traced survivor estimate (``stage_ema``, typically
+    the service's smoothed per-stage survivor counts) and the cheaper
+    branch executes. No host round trip, no batch-boundary decision lag:
+    the estimate that drives the pick can be updated from the previous
+    batch's fused stats read and shipped back as a tiny operand at submit
+    time. Both branches are staged at trace time (launch counters account
+    each exactly once — see :mod:`repro.kernels.ops`); at run time exactly
+    one branch's launches execute.
+
+  :meth:`repro.serve.ranking_service.RankingService` serves ``auto`` by
+  default; the host-side pick via
+  :func:`repro.metrics.speedup.progressive_cost_model` remains the
+  reference model (the device pick must choose the same branch — tested on
+  the ``fused_vs_staged`` bench sweep). ``benchmarks/bench_kernels.py``
+  records the measured crossover. The speedup metric stays in the paper's
+  currency (trees *logically* traversed under early-exit semantics),
+  matching :func:`metrics.speedup.trees_traversed`.
 
   Strategies must be *mask-invariant* (read ``partial`` only where the
   alive mask is set): in staged mode, exited documents hold stale
@@ -90,7 +105,11 @@ from repro.kernels.ops import (
     forest_score_segments,
     padded_forest,
 )
-from repro.metrics.speedup import speedup_progressive, speedup_vs_full
+from repro.metrics.speedup import (
+    progressive_cost_model_device,
+    speedup_progressive,
+    speedup_vs_full,
+)
 
 
 def bucket_capacity(want: int, limit: int, minimum: int = 64) -> int:
@@ -112,7 +131,9 @@ class CascadeResult:
     partials: jax.Array | None = None  # progressive: [Q, D, S] — the prefix
     #   grid each stage's strategy saw (fused: exact sentinel prefixes for
     #   every doc; staged: docs already exited hold their exit-stage prefix)
-    mode: str | None = None            # progressive: "fused" | "staged"
+    mode: str | None = None            # progressive: "fused"|"staged"|"auto"
+    picked_staged: jax.Array | None = None  # mode="auto": lazy device bool —
+    #   which cond branch executed (True = staged); None for fixed modes
 
 
 @dataclasses.dataclass
@@ -188,6 +209,9 @@ class CascadeRanker:
         classifier_trees: Sequence[int] | int | None = None,
         block_t: int = 16,
         mode: str = "fused",
+        stage_ema: jax.Array | None = None,
+        have_ema: jax.Array | bool = True,
+        launch_overhead_trees: float = 0.0,
         **strategy_kwargs,
     ) -> CascadeResult:
         """Multi-sentinel engine, end-to-end jitted (one XLA computation).
@@ -205,6 +229,17 @@ class CascadeRanker:
         ``classifier_trees`` (int or per-stage sequence) defaults to
         ``self.classifier_trees`` at every stage for the cost accounting.
 
+        ``mode="auto"`` compiles BOTH modes into one program and picks the
+        branch on device with a ``lax.cond``: ``stage_ema`` (``[S]`` f32,
+        required) is the traced per-stage survivor estimate priced by
+        :func:`repro.metrics.speedup.progressive_cost_model_device` with
+        ``launch_overhead_trees`` (static) as the per-launch price;
+        ``have_ema`` (traced bool) gates the pick — ``False`` forces the
+        fused branch (the safe cold-start floor when no survivor estimate
+        exists yet). The executed branch is reported as the lazy
+        ``picked_staged`` device bool on the result. Requires ``S ≥ 2``
+        (with one sentinel the modes are the same computation).
+
         The step for each static configuration (sentinels × capacities ×
         strategies × mode × …) is built once, jitted, and cached on the
         ranker; keyword arguments for the strategies are split into traced
@@ -217,7 +252,7 @@ class CascadeRanker:
         sentinels = tuple(int(s) for s in sentinels)
         S = len(sentinels)
         T = self.ensemble.n_trees
-        assert mode in ("fused", "staged"), mode
+        assert mode in ("fused", "staged", "auto"), mode
         assert S >= 1 and list(sentinels) == sorted(set(sentinels))
         assert 0 < sentinels[0] and sentinels[-1] <= T, (sentinels, T)
         strategies = (
@@ -252,19 +287,31 @@ class CascadeRanker:
             (n, strategy_kwargs[n]) for n in names if n not in traced_names
         )
 
+        if mode == "auto":
+            assert S >= 2, "mode='auto' needs ≥2 sentinels (S=1: modes equal)"
+            assert stage_ema is not None, "mode='auto' requires stage_ema"
+            mode_ops = (
+                jnp.asarray(stage_ema, jnp.float32),
+                jnp.asarray(have_ema, bool),
+            )
+        else:
+            mode_ops = ()
+
         # Fused mode only ever reads capacities[-1] (the tail block); keying
         # on the full tuple would re-trace identical computations whenever
-        # the service ratchets an early-stage bucket.
-        key_capacities = capacities if mode == "staged" else capacities[-1:]
+        # the service ratchets an early-stage bucket. Staged and auto read
+        # every entry (auto also prices the staged branch with them).
+        key_capacities = capacities if mode != "fused" else capacities[-1:]
         key = (
             id(pf), sentinels, key_capacities, strategies, classifier_trees,
-            mode, traced_names, static_items,
+            mode, float(launch_overhead_trees), traced_names, static_items,
         )
         step = self._step_cache.get(key)
         if step is None:
             step = _build_progressive_step(
                 pf, sentinels, capacities, strategies, classifier_trees,
                 mode, traced_names, dict(static_items), T,
+                launch_overhead_trees=float(launch_overhead_trees),
             )
             self._step_cache[key] = step
             while len(self._step_cache) > _STEP_CACHE_MAX:
@@ -273,8 +320,8 @@ class CascadeRanker:
             self._step_cache.move_to_end(key)
 
         traced_vals = tuple(strategy_kwargs[n] for n in traced_names)
-        scores, alive, stage_masks, partials, overflow, sp = step(
-            X, mask, traced_vals
+        scores, alive, stage_masks, partials, overflow, sp, picked = step(
+            X, mask, traced_vals, mode_ops
         )
         return CascadeResult(
             scores=scores,
@@ -284,6 +331,7 @@ class CascadeRanker:
             stage_masks=list(stage_masks),
             partials=partials,
             mode=mode,
+            picked_staged=picked,  # lazy device bool (auto), else None
         )
 
 
@@ -300,102 +348,149 @@ def _build_progressive_step(
     traced_names: tuple[str, ...],
     static_kwargs: dict,
     n_trees: int,
+    launch_overhead_trees: float = 0.0,
 ):
     """Build the end-to-end jitted progressive step for one configuration.
 
     Everything static (buffers, sentinels, capacities, strategies, mode) is
-    closed over; the returned callable takes ``(X, mask, traced_vals)`` and
-    compiles head → decisions → compaction → tail → scatter into one XLA
-    computation. Launch counters fire while THIS function's body traces
-    (see :func:`repro.kernels.ops._counted_pallas`), so a compiled step
-    re-executing from cache stages no new launches and moves no counters.
+    closed over; the returned callable takes ``(X, mask, traced_vals,
+    mode_ops)`` — ``mode_ops`` is ``()`` for the fixed modes and
+    ``(stage_ema, have_ema)`` for ``mode="auto"`` — and compiles head →
+    decisions → compaction → tail → scatter into one XLA computation.
+    Launch counters fire while THIS function's body traces (see
+    :func:`repro.kernels.ops._counted_pallas`), so a compiled step
+    re-executing from cache stages no new launches and moves no counters;
+    under ``mode="auto"`` BOTH branch bodies trace into the one program,
+    so each branch's launches are accounted exactly once even though only
+    one branch executes per batch.
 
     Both modes accumulate prefixes with the same left-to-right association
     (``(((base + seg_0) + seg_1) + …)``), and the per-block kernel sums are
     identical, so staged scores match fused scores bit-for-bit on batches
-    where no stage overflows its capacity.
+    where no stage overflows its capacity — which is also what makes the
+    ``lax.cond`` branch structures compatible (same output shapes/dtypes,
+    same semantics off overflow).
     """
     S = len(sentinels)
     has_tail = sentinels[-1] < n_trees
 
+    def final_tail(flat, scores, alive, overflow):
+        # Tail launch on the compacted survivors of the last stage. In
+        # fused mode only this compaction can drop tail scores, so only it
+        # counts as overflow; staged mode accumulated per-stage overflow
+        # before reaching here.
+        if not has_tail:
+            return scores, overflow
+        cap = capacities[-1]
+        sel, n_cont = compact_indices_cumsum(alive.reshape(-1), cap)
+        x_sel = jnp.take(flat, sel, axis=0)
+        tail_sel = forest_score_range(pf, x_sel, seg_lo=S)
+        scores = _scatter_tail(scores, sel, tail_sel, n_cont)
+        overflow = overflow + jnp.maximum(n_cont - cap, 0)
+        return scores, overflow
+
+    def fused_body(flat, mask, skw):
+        # One launch over the head trees: prefix score of every document
+        # at every sentinel. A single segment needs no segmented
+        # accumulator — it degenerates to the plain kernel (same launch
+        # count, less work).
+        Q, D = mask.shape
+        alive = mask
+        stage_masks = []
+        if S == 1:
+            prefixes = [forest_score_range(pf, flat, 0, 1).reshape(Q, D)]
+        else:
+            seg = forest_score_segments(pf, flat, n_segments=S)
+            seg = seg.reshape(Q, D, S)
+            acc = seg[..., 0] + pf.base_score
+            prefixes = [acc]
+            for k in range(1, S):
+                acc = acc + seg[..., k]
+                prefixes.append(acc)
+
+        # Stage decisions: pure vector work, nested exit masks.
+        scores = prefixes[0]
+        for k in range(S):
+            cont = strategies[k](prefixes[k], alive, **skw)
+            alive = alive & cont
+            stage_masks.append(alive)
+            if k + 1 < S:
+                scores = jnp.where(alive, prefixes[k + 1], scores)
+        scores, overflow = final_tail(flat, scores, alive, jnp.int32(0))
+        return (
+            scores, alive, tuple(stage_masks),
+            jnp.stack(prefixes, axis=-1), overflow,
+        )
+
+    def staged_body(flat, mask, skw):
+        # Per-stage tails: segment k runs only on the compacted survivors
+        # of stage k-1; every capacity is a real kernel bound with real
+        # overflow accounting.
+        Q, D = mask.shape
+        alive = mask
+        stage_masks = []
+        overflow = jnp.int32(0)
+        prefix = forest_score_range(pf, flat, 0, 1).reshape(Q, D)
+        prefixes = [prefix]
+        for k in range(S):
+            cont = strategies[k](prefix, alive, **skw)
+            alive = alive & cont
+            if k + 1 < S:
+                cap = capacities[k]
+                sel, n_cont, within = compact_indices_cumsum_masked(
+                    alive.reshape(Q * D), cap
+                )
+                overflow = overflow + jnp.maximum(n_cont - cap, 0)
+                alive = alive & within.reshape(Q, D)
+                x_sel = jnp.take(flat, sel, axis=0)
+                seg_sel = forest_score_range(pf, x_sel, k + 1, k + 2)
+                prefix = jnp.where(
+                    alive,
+                    _scatter_tail(prefix, sel, seg_sel, n_cont),
+                    prefix,
+                )
+                prefixes.append(prefix)
+            stage_masks.append(alive)
+        scores, overflow = final_tail(flat, prefix, alive, overflow)
+        return (
+            scores, alive, tuple(stage_masks),
+            jnp.stack(prefixes, axis=-1), overflow,
+        )
+
     @jax.jit
-    def step(X, mask, traced_vals):
+    def step(X, mask, traced_vals, mode_ops):
         Q, D, F = X.shape
         flat = X.reshape(Q * D, F)
         skw = {**dict(zip(traced_names, traced_vals)), **static_kwargs}
 
-        overflow = jnp.int32(0)
-        alive = mask
-        stage_masks = []
-
         if mode == "fused":
-            # One launch over the head trees: prefix score of every document
-            # at every sentinel. A single segment needs no segmented
-            # accumulator — it degenerates to the plain kernel (same launch
-            # count, less work).
-            if S == 1:
-                prefixes = [forest_score_range(pf, flat, 0, 1).reshape(Q, D)]
-            else:
-                seg = forest_score_segments(pf, flat, n_segments=S)
-                seg = seg.reshape(Q, D, S)
-                acc = seg[..., 0] + pf.base_score
-                prefixes = [acc]
-                for k in range(1, S):
-                    acc = acc + seg[..., k]
-                    prefixes.append(acc)
-
-            # Stage decisions: pure vector work, nested exit masks.
-            scores = prefixes[0]
-            for k in range(S):
-                cont = strategies[k](prefixes[k], alive, **skw)
-                alive = alive & cont
-                stage_masks.append(alive)
-                if k + 1 < S:
-                    scores = jnp.where(alive, prefixes[k + 1], scores)
+            out = fused_body(flat, mask, skw)
+            picked = None
+        elif mode == "staged":
+            out = staged_body(flat, mask, skw)
+            picked = None
         else:
-            # Per-stage tails: segment k runs only on the compacted
-            # survivors of stage k-1; every capacity is a real kernel
-            # bound with real overflow accounting.
-            prefix = forest_score_range(pf, flat, 0, 1).reshape(Q, D)
-            prefixes = [prefix]
-            for k in range(S):
-                cont = strategies[k](prefix, alive, **skw)
-                alive = alive & cont
-                if k + 1 < S:
-                    cap = capacities[k]
-                    sel, n_cont, within = compact_indices_cumsum_masked(
-                        alive.reshape(Q * D), cap
-                    )
-                    overflow = overflow + jnp.maximum(n_cont - cap, 0)
-                    alive = alive & within.reshape(Q, D)
-                    x_sel = jnp.take(flat, sel, axis=0)
-                    seg_sel = forest_score_range(pf, x_sel, k + 1, k + 2)
-                    prefix = jnp.where(
-                        alive,
-                        _scatter_tail(prefix, sel, seg_sel, n_cont),
-                        prefix,
-                    )
-                    prefixes.append(prefix)
-                stage_masks.append(alive)
-            scores = prefix
-
-        # Tail launch on the compacted survivors of the last stage. In
-        # fused mode only this compaction can drop tail scores, so only it
-        # counts as overflow; staged mode accumulated per-stage overflow
-        # above.
-        if has_tail:
-            cap = capacities[-1]
-            sel, n_cont = compact_indices_cumsum(alive.reshape(Q * D), cap)
-            x_sel = jnp.take(flat, sel, axis=0)
-            tail_sel = forest_score_range(pf, x_sel, seg_lo=S)
-            scores = _scatter_tail(scores, sel, tail_sel, n_cont)
-            overflow = overflow + jnp.maximum(n_cont - cap, 0)
-
-        partials = jnp.stack(prefixes, axis=-1)
+            # On-device mode pick: price both modes from the traced
+            # survivor estimate and run the cheaper branch. Both bodies
+            # trace here (cond stages both); one executes per batch.
+            stage_ema, have_ema = mode_ops
+            fused_cost, staged_cost = progressive_cost_model_device(
+                Q * D, stage_ema, sentinels, n_trees,
+                launch_overhead_trees=launch_overhead_trees,
+                stage_capacities=capacities,
+            )
+            picked = jnp.logical_and(have_ema, staged_cost < fused_cost)
+            out = jax.lax.cond(
+                picked,
+                lambda: staged_body(flat, mask, skw),
+                lambda: fused_body(flat, mask, skw),
+            )
+        scores, alive, stage_masks, partials, overflow = out
         sp = speedup_progressive(
-            mask, stage_masks, sentinels, n_trees, list(classifier_trees)
+            mask, list(stage_masks), sentinels, n_trees,
+            list(classifier_trees),
         )
-        return scores, alive, tuple(stage_masks), partials, overflow, sp
+        return scores, alive, stage_masks, partials, overflow, sp, picked
 
     return step
 

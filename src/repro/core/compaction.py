@@ -14,6 +14,12 @@ Selection slots beyond ``min(n_cont, capacity)`` are unspecified padding
 (the cumsum path leaves index 0, the argsort path leaves exited indices);
 callers MUST mask per-slot results with ``slot < n_cont`` before scattering
 back. ``n_cont`` is returned as a lazy device scalar — no host sync.
+
+Accounting note: these are pure XLA ops (no Pallas dispatch), so they move
+no launch counters and are free to appear any number of times inside the
+compiled progressive step — including once per ``lax.cond`` branch of the
+``mode="auto"`` step. ``capacity`` is a static (trace-time) argument; the
+partition itself is run-time vector work.
 """
 
 from __future__ import annotations

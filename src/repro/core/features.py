@@ -1,0 +1,103 @@
+"""Device-resident LEAR feature pipeline: jittable sentinel-time features.
+
+LEAR's exit decision reads four *augmented* features per document — the
+partial score at the sentinel, its rank within the query, the per-query
+min–max-normalized partial, and the query's candidate count (paper §2;
+the query-level view of the same statistics drives the query-adaptive
+exits of Lucchese et al. 2020). The serving engine evaluates the LEAR
+strategy INSIDE the compiled progressive step
+(:func:`repro.core.cascade._build_progressive_step`), so everything here
+must trace cleanly and fuse with the segmented head launch — no host
+round trip between the head kernel and the classifier forest.
+
+Design notes:
+
+- :func:`query_ranks` is **sort-free**: rank(i) = the number of documents
+  that beat ``i`` (strictly higher score, or equal score at a lower index —
+  the same deterministic tie-break as the stable-argsort ranking in
+  :func:`repro.metrics.ranking.rank_from_scores`, with which it agrees
+  exactly). The pairwise compare is O(D²) per query but branch-free,
+  segment-local, and VPU-shaped — on an accelerator it fuses into the
+  surrounding step, whereas the double argsort lowers to two sorts that
+  XLA cannot fuse across. Serving blocks keep D in the tens-to-hundreds,
+  where the quadratic compare is cheap; the metrics stack keeps the
+  argsort path (NDCG needs the sort anyway).
+- :func:`query_minmax` / :func:`normalized_partial` are plain per-query
+  segment reductions (min/max over the document axis with the request
+  mask applied) and an elementwise normalization.
+- :func:`augment_features` is the full build; it is what
+  :func:`repro.core.lear.augment_features` (training and serving both)
+  delegates to, so train-time and serve-time features are computed by the
+  same traced code.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+N_AUG = 4   # sentinel-time features appended to the q-d vector
+NEG = -1e30  # masked-document fill; ranks padding after every real doc
+
+
+def query_ranks(partial: jax.Array, mask: jax.Array) -> jax.Array:
+    """Sort-free per-query rank (0 = best) of each document — ``[Q, D] i32``.
+
+    ``rank(i) = #{j : s_j > s_i  or  (s_j == s_i and j < i)}`` with masked
+    documents held at ``NEG`` so they rank after all real documents.
+    Identical output to the stable-argsort ranking
+    (:func:`repro.metrics.ranking.rank_from_scores`); exact, because only
+    integer counts of exact float comparisons are involved.
+    """
+    s = jnp.where(mask, partial, NEG)
+    D = s.shape[-1]
+    idx = jnp.arange(D, dtype=jnp.int32)
+    s_i = s[..., :, None]      # the ranked document
+    s_j = s[..., None, :]      # its competitors
+    beats = (s_j > s_i) | ((s_j == s_i) & (idx[None, :] < idx[:, None]))
+    return beats.sum(axis=-1, dtype=jnp.int32)
+
+
+def query_minmax(partial: jax.Array, mask: jax.Array):
+    """Per-query (segment) min/max of the partial score — ``([Q,1],[Q,1])``.
+
+    Masked documents are excluded via ±inf fill; an all-masked query yields
+    ``lo > hi`` which :func:`normalized_partial` maps to 0.
+    """
+    lo = jnp.where(mask, partial, jnp.inf).min(axis=-1, keepdims=True)
+    hi = jnp.where(mask, partial, -jnp.inf).max(axis=-1, keepdims=True)
+    return lo, hi
+
+
+def normalized_partial(partial: jax.Array, lo: jax.Array, hi: jax.Array) -> jax.Array:
+    """Min–max normalization of the partial score, clipped to [0, 1]."""
+    norm = (partial - lo) / jnp.maximum(hi - lo, 1e-9)
+    return jnp.clip(norm, 0.0, 1.0)
+
+
+def augment_features(
+    X: jax.Array,         # [Q, D, F]
+    partial: jax.Array,   # [Q, D]
+    mask: jax.Array,      # [Q, D]
+) -> jax.Array:
+    """Append the four sentinel-time features → ``[Q, D, F + 4]``.
+
+    Fully jittable: inside the compiled progressive step this is pure
+    vector work between the segmented head launch and the classifier
+    forest launch — the feature build never leaves the device.
+    """
+    ranks = query_ranks(partial, mask).astype(jnp.float32)
+    lo, hi = query_minmax(partial, mask)
+    norm = normalized_partial(partial, lo, hi)
+    n_cand = mask.sum(axis=-1, keepdims=True).astype(jnp.float32)
+    aug = jnp.stack(
+        [
+            partial,
+            ranks,
+            norm,
+            jnp.broadcast_to(n_cand, partial.shape),
+        ],
+        axis=-1,
+    )
+    aug = jnp.where(mask[..., None], aug, 0.0)
+    return jnp.concatenate([X, aug], axis=-1)

@@ -10,7 +10,9 @@ Pipeline (faithful to the paper):
 3. **Augmented representation** — the original query-document features plus
    four sentinel-time signals: partial score, rank at the sentinel,
    per-query min–max-normalized partial score, and the query's candidate
-   count.
+   count. Built by the device-resident ops in :mod:`repro.core.features`
+   (sort-free ranking, segment reductions) shared by training and the
+   compiled serving step.
 4. **Cost-sensitive weights** — ``w_d = 2^{r_d} / f_q(l_d)`` with ``f_q``
    the per-query frequency of the document's Continue/Exit label.
 5. **Classifier** — a small 10-tree GBDT minimizing weighted logistic loss
@@ -27,37 +29,28 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.features import N_AUG, augment_features
 from repro.forest.ensemble import TreeEnsemble
 from repro.forest.gbdt import GBDTParams, train_gbdt
 from repro.forest.scoring import score_bitvector
 from repro.kernels.ops import forest_score
 from repro.metrics.ranking import rank_from_scores
 
-N_AUG = 4  # sentinel-time features appended to the q-d vector
+__all__ = [
+    "N_AUG",
+    "augment_features",
+    "build_continue_labels",
+    "instance_weights",
+    "LearClassifier",
+    "train_lear",
+]
 
-
-def augment_features(
-    X: jax.Array,         # [Q, D, F]
-    partial: jax.Array,   # [Q, D]
-    mask: jax.Array,      # [Q, D]
-) -> jax.Array:
-    """Append the four sentinel-time features → [Q, D, F + 4]."""
-    ranks = rank_from_scores(partial, mask).astype(jnp.float32)
-    lo = jnp.where(mask, partial, jnp.inf).min(axis=-1, keepdims=True)
-    hi = jnp.where(mask, partial, -jnp.inf).max(axis=-1, keepdims=True)
-    norm = (partial - lo) / jnp.maximum(hi - lo, 1e-9)
-    n_cand = mask.sum(axis=-1, keepdims=True).astype(jnp.float32)
-    aug = jnp.stack(
-        [
-            partial,
-            ranks,
-            jnp.clip(norm, 0.0, 1.0),
-            jnp.broadcast_to(n_cand, partial.shape),
-        ],
-        axis=-1,
-    )
-    aug = jnp.where(mask[..., None], aug, 0.0)
-    return jnp.concatenate([X, aug], axis=-1)
+# The augmented-feature build (sort-free per-query rank, min/max segment
+# reductions, score normalization, candidate count) lives in
+# :mod:`repro.core.features` as jittable device ops — the serving cascade
+# traces it INTO the compiled progressive step, and training reuses the
+# exact same code so the classifier never sees a train/serve feature skew.
+# ``augment_features`` is re-exported here for back-compat.
 
 
 def build_continue_labels(

@@ -3,6 +3,12 @@
 All strategies act at a sentinel: given per-document *partial* scores after
 ``s`` trees, return the boolean ``continue`` mask over padded ``[Q, D]``
 blocks. Exited documents keep their partial score as final score.
+
+Strategies are traced INTO the compiled progressive step (and, under the
+``mode="auto"`` engine, into both ``lax.cond`` branches), so they must be
+pure jax functions of their operands — and *mask-invariant*: read
+``partial`` only where the alive mask is set, because in staged execution
+exited documents hold stale prefixes. All strategies below qualify.
 """
 
 from __future__ import annotations

@@ -30,6 +30,17 @@ tail → scatter) compile into ONE XLA computation while the 1-head-launch
 contract stays testable: tests trace a fresh step, read
 :func:`launch_counts` (split ``plain`` vs ``segmented``), and assert the
 counts do not move on cached re-executions.
+
+Trace-time vs run-time, under ``lax.cond``: the counters describe the
+launches *staged into* a computation, not the launches a particular batch
+*executed*. The distinction only matters for the combined
+``mode="auto"`` progressive step, where BOTH execution branches live under
+one ``lax.cond``: tracing it stages the fused branch's launches (1
+segmented + ≤1 plain) AND the staged branch's (≤S+1 plain) — each exactly
+once — while at run time only the branch the device pick selects actually
+dispatches. So the auto-step contract is ``segmented == 1`` and
+``plain == S+2`` (with a tail region; S ≥ 2) per trace, stable across
+re-executions regardless of which branch each batch takes.
 """
 
 from __future__ import annotations
@@ -59,11 +70,19 @@ _LAUNCH_COUNTS = {"plain": 0, "segmented": 0}
 
 
 def reset_launch_counts() -> None:
+    """Zero both counters (typically right before tracing a fresh step)."""
     _LAUNCH_COUNTS["plain"] = 0
     _LAUNCH_COUNTS["segmented"] = 0
 
 
 def launch_counts() -> dict[str, int]:
+    """Launches STAGED since the last reset, keyed ``plain``/``segmented``.
+
+    Trace-time accounting: a cached re-execution of a compiled step adds
+    zero; a ``lax.cond`` with kernel calls in both branches adds both
+    branches once (see the module docstring). Use with
+    :func:`reset_launch_counts` to assert launch contracts in tests.
+    """
     return dict(_LAUNCH_COUNTS)
 
 

@@ -6,10 +6,25 @@ where a document that exits at sentinel ``s`` costs ``s`` trees and a
 continuing document costs ``n_trees``; the EE classifier itself costs
 ``classifier_trees`` per scored document (LEAR's 10-tree forest), which we
 charge explicitly — the paper includes classifier latency in its timings.
+
+Units, everywhere in this module: one unit = one *document·tree traversal*.
+Launch overhead (:func:`progressive_cost_model`'s only tunable) is priced
+in the same currency — "how many doc·tree traversals does one extra kernel
+dispatch plus its gather/scatter HBM round trip cost" — so calibrating it
+(:func:`repro.serve.calibration.calibrate_launch_overhead_trees`) is a
+division of two measured wall times, and the model stays hardware-relative.
+
+Accounting time: the ``trees_traversed*`` / ``speedup*`` functions are
+*run-time* accounting — they trace into the compiled step and return lazy
+device scalars describing what the batch actually did. The
+``progressive_cost_model*`` pair is *decision-time* pricing — an estimate
+from smoothed survivor counts used to pick the execution mode before (host
+variant) or inside (device variant) the compiled step.
 """
 
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
 
@@ -87,14 +102,22 @@ def progressive_cost_model(
     ``sentinels[-1]`` head trees in one segmented launch; the staged head
     scores segment ``k`` only on the stage-(k−1) survivors but pays one
     extra launch (dispatch + gather/scatter HBM round trip) per stage,
-    priced at ``launch_overhead_trees`` tree-traversal equivalents each.
-    A staged stage kernel actually scores its full ``capacity``-sized
-    compacted block, not just the live survivors, so when
-    ``stage_capacities`` is given the staged stage work is priced at the
-    block size — otherwise a capacity floor well above the survivor count
-    would make the model systematically underestimate staged cost. Both
-    modes run the same compacted tail. Host-side arithmetic only — never
-    traced, never syncs.
+    priced at ``launch_overhead_trees`` doc·tree equivalents each. When
+    ``stage_capacities`` is given, staged stage work is priced at
+    ``min(capacity, survivors)`` per stage. This is a deliberate
+    decision-heuristic choice, not an exact work model: the staged kernel
+    really does score the full capacity-sized compacted block (padding
+    slots gather duplicate rows), so ``min`` undercounts the block slack —
+    but the serving buckets are oversized on purpose (headroom multiplier,
+    power-of-two rounding, a cold-start floor that never shrinks), and
+    pricing that safety slack as real work would lock the pick into fused
+    on exactly the sparse traffic where the measured bench shows staged
+    winning. The survivor estimate prices the useful work; the capacity
+    clip keeps dense traffic honest. (A finer model could price
+    block-rounded survivor counts — tracked in ROADMAP.) Both modes run
+    the same compacted tail. Host-side arithmetic only — never traced,
+    never syncs. :func:`progressive_cost_model_device` is the traced
+    mirror used by the in-program mode pick.
     """
     S = len(sentinels)
     assert mode in ("fused", "staged"), mode
@@ -109,13 +132,65 @@ def progressive_cost_model(
         if stage_capacities is not None:
             assert len(stage_capacities) == S
             surv = [
-                min(float(c), float(n_docs)) for c in stage_capacities
+                min(float(c), s) for c, s in zip(stage_capacities, surv)
             ]
         head = n_docs * sentinels[0] + sum(
             surv[k] * (sentinels[k + 1] - sentinels[k]) for k in range(S - 1)
         )
         launches = S + (1 if has_tail else 0)
     return float(head + tail + launch_overhead_trees * launches)
+
+
+def progressive_cost_model_device(
+    n_docs: int,
+    stage_survivors: jax.Array,   # [S] f32 — traced survivor estimates
+    sentinels,
+    n_trees: int,
+    launch_overhead_trees: float = 0.0,
+    stage_capacities=None,
+):
+    """Traced mirror of :func:`progressive_cost_model` for the IN-PROGRAM
+    mode pick: returns ``(fused_cost, staged_cost)`` as f32 device scalars.
+
+    Same arithmetic, same units (doc·tree traversals), same staged pricing
+    at ``min(capacity, survivors)`` — only the survivor estimates are a
+    traced operand (the service's smoothed continue rates live on device),
+    so ``staged_cost < fused_cost`` can feed a ``lax.cond`` without a host
+    round trip. ``n_docs``, ``sentinels``, ``stage_capacities`` and the
+    overhead are static configuration baked into the trace. Chooses the
+    same branch as the host model away from exact cost ties (the host
+    compares in float64, this in float32; all inputs are small exact
+    integers/EMAs, so ties are the only divergence point).
+    """
+    S = len(sentinels)
+    assert stage_survivors.shape == (S,), (stage_survivors.shape, S)
+    surv = jnp.minimum(stage_survivors.astype(jnp.float32), float(n_docs))
+    has_tail = sentinels[-1] < n_trees
+    tail = surv[-1] * float(n_trees - sentinels[-1])
+    fused = (
+        float(n_docs * sentinels[-1])
+        + tail
+        + launch_overhead_trees * (1 + (1 if has_tail else 0))
+    )
+    s_surv = surv
+    if stage_capacities is not None:
+        assert len(stage_capacities) == S
+        s_surv = jnp.minimum(
+            surv, jnp.asarray(stage_capacities, jnp.float32)
+        )
+    deltas = jnp.asarray(
+        [sentinels[k + 1] - sentinels[k] for k in range(S - 1)], jnp.float32
+    )
+    staged = (
+        float(n_docs * sentinels[0])
+        + (s_surv[: S - 1] * deltas).sum()
+        + tail
+        + launch_overhead_trees * (S + (1 if has_tail else 0))
+    )
+    return (
+        jnp.asarray(fused, jnp.float32),
+        jnp.asarray(staged, jnp.float32),
+    )
 
 
 def speedup_progressive(

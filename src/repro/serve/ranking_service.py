@@ -10,18 +10,31 @@ Production concerns handled here:
   (:meth:`repro.core.cascade.CascadeRanker.rank_progressive`), end-to-end
   jitted — all three forests in the path (ranker head, LEAR classifier,
   ranker tail) go through the same Pallas kernel inside ONE XLA
-  computation per batch;
-- adaptive execution mode: each batch runs the fused segmented head or
-  per-stage tails, whichever the cost model
-  (:func:`repro.metrics.speedup.progressive_cost_model`) predicts cheaper
-  from the observed per-stage continue rates;
+  computation per batch, and the LEAR augmented features (sort-free
+  per-query rank, min/max segment reductions — :mod:`repro.core.features`)
+  are built on device between the head launch and the classifier launch;
+- adaptive execution mode, picked ON DEVICE: the compiled step contains
+  both the fused segmented head and the per-stage-tail branch under a
+  ``lax.cond``, and
+  :func:`repro.metrics.speedup.progressive_cost_model_device` prices them
+  from the smoothed survivor counts (shipped as a tiny operand at submit
+  time) — no host round trip and no batch-boundary decision lag; the
+  host-side :func:`repro.metrics.speedup.progressive_cost_model` pick is
+  kept as the reference the device pick must agree with
+  (:meth:`RankingService._pick_mode`);
+- a calibrated cost model: ``launch_overhead_trees="auto"`` (the default)
+  measures dispatch latency at service startup
+  (:func:`repro.serve.calibration.calibrate_launch_overhead_trees`,
+  cached per process) instead of trusting a fixed constant;
 - compaction capacity from a running per-stage survivor peak with
   headroom, never below the cold-start estimate, bucketed to powers of
   two so re-jits stay bounded;
 - cost accounting per batch (trees traversed, the paper's own metric) and
-  service-level stats — the whole stats read (per-stage survivors, cost,
-  overflow, batch doc count) is ONE fused device transfer, so the ranking
-  hot path never blocks on intermediate scalars;
+  service-level stats — the ENTIRE host read (top-k response, scores,
+  per-stage survivors, cost, overflow, batch doc count, picked branch) is
+  ONE fused ``jax.device_get``: between batch submit and that read the
+  hot path performs zero device→host transfers (guarded by
+  :func:`repro.utils.count_host_transfers` in the tests);
 - graceful degradation: if survivors exceed capacity, the overflow
   documents keep their sentinel scores (bounded quality loss, never a
   crash) and the stats record it.
@@ -47,6 +60,7 @@ from repro.metrics.speedup import (
     progressive_cost_model,
     trees_traversed_progressive,
 )
+from repro.serve.calibration import calibrate_launch_overhead_trees
 
 
 @dataclasses.dataclass
@@ -90,7 +104,7 @@ class RankingService:
         extra_classifiers: Sequence[LearClassifier] = (),
         use_kernel_classifier: bool = True,
         execution_mode: str = "auto",
-        launch_overhead_trees: float = 4096.0,
+        launch_overhead_trees: float | str = "auto",
         survivor_ema: float = 0.3,
     ):
         assert execution_mode in ("auto", "fused", "staged"), execution_mode
@@ -108,8 +122,12 @@ class RankingService:
         self.use_kernel_classifier = use_kernel_classifier
         self.execution_mode = execution_mode
         # Price of one extra kernel launch + gather/scatter HBM round trip,
-        # in tree-traversal equivalents — the cost model's only tunable.
-        self.launch_overhead_trees = launch_overhead_trees
+        # in doc·tree equivalents — the cost model's only tunable. "auto"
+        # measures it at startup (short timing probe, cached per process)
+        # instead of trusting a machine-independent constant.
+        if launch_overhead_trees == "auto":
+            launch_overhead_trees = calibrate_launch_overhead_trees()
+        self.launch_overhead_trees = float(launch_overhead_trees)
         self.survivor_ema = survivor_ema
         self.stats = ServiceStats()
         self._stage_peaks: list[int] | None = None  # running max survivors
@@ -174,13 +192,20 @@ class RankingService:
         return [bucket_capacity(w, n_docs) for w in want]
 
     def _pick_mode(self, n_docs: int, capacities=None) -> str:
-        """Fused head vs per-stage tails, from observed continue rates.
+        """Host-side REFERENCE pick: fused head vs per-stage tails.
+
+        Serving no longer calls this per batch — with
+        ``execution_mode="auto"`` the same decision happens on device
+        inside the compiled step (``lax.cond`` on
+        :func:`repro.metrics.speedup.progressive_cost_model_device`). This
+        method remains the host mirror of that pick, used by tests to
+        assert the two agree and by operators for introspection.
 
         Until the first batch lands there are no observed rates — default
         fused (1 segmented + ≤1 tail launch is the safe floor). After
         that, price both modes with the cost model on the smoothed
-        survivor counts — staged stage work at the actual capacity blocks
-        the stages would score (``capacities``) — and take the cheaper.
+        survivor counts — staged stage work at ``min(capacity, survivors)``
+        per stage — and take the cheaper.
         """
         if self.execution_mode != "auto":
             return self.execution_mode
@@ -200,11 +225,33 @@ class RankingService:
         return "staged" if cost["staged"] < cost["fused"] else "fused"
 
     def rank_batch(self, X: jax.Array, mask: jax.Array):
-        """X: [Q, D, F]; returns (top-k doc indices [Q, k], scores [Q, D])."""
+        """X: [Q, D, F]; returns (top-k doc indices [Q, k], scores [Q, D]).
+
+        Device-resident end to end: the step is submitted with everything
+        it needs (with ``execution_mode="auto"``, also last batch's
+        survivor EMA as a tiny f32 operand for the in-program mode pick),
+        and the ONLY device→host transfer is the single fused
+        ``jax.device_get`` at the end — response and stats together.
+        """
         Q, D, _ = X.shape
         n_docs = Q * D
         capacities = self._pick_capacities(n_docs)
-        mode = self._pick_mode(n_docs, capacities)
+        mode = self.execution_mode
+        extra = {}
+        if mode == "auto":
+            if len(self.sentinels) == 1:
+                mode = "fused"  # S=1: both modes are the same computation
+            else:
+                # Ship the survivor estimate at submit; the pick happens
+                # inside the compiled step. Cold start (no observed rates
+                # yet): have_ema=False forces the fused branch.
+                S = len(self.sentinels)
+                ema = self._stage_ema or [float(n_docs)] * S
+                extra = dict(
+                    stage_ema=jnp.asarray(ema, jnp.float32),
+                    have_ema=self._stage_ema is not None,
+                    launch_overhead_trees=self.launch_overhead_trees,
+                )
         result = self.cascade.rank_progressive(
             X, mask,
             sentinels=self.sentinels,
@@ -213,24 +260,34 @@ class RankingService:
             classifier_trees=[c.n_trees for c in self.stage_classifiers],
             mode=mode,
             features=X,
+            **extra,
         )
         # Top-k is the response (clamped to the candidate count — a small
-        # query block must not crash top_k); everything below is stats.
+        # query block must not crash top_k).
         masked = jnp.where(mask, result.scores, -jnp.inf)
         top_idx = jax.lax.top_k(masked, min(self.top_k, D))[1]
 
-        # Stats path: ONE fused device read for the per-stage survivor
-        # counts, the cost metric, the overflow scalar, and the batch doc
-        # count — no other host sync on this path.
+        # ONE fused device read: the response (top-k + scores) AND the
+        # stats (per-stage survivors, cost metric, overflow, doc count,
+        # picked branch) — no other host sync anywhere on this path.
         T = self.ensemble.n_trees
         clf_trees = [c.n_trees for c in self.stage_classifiers]
-        survivors, traversed, overflow, batch_docs = jax.device_get((
+        picked_staged = (
+            result.picked_staged
+            if result.picked_staged is not None
+            else mode == "staged"
+        )
+        (top_idx, scores, survivors, traversed, overflow, batch_docs,
+         picked_staged) = jax.device_get((
+            top_idx,
+            result.scores,
             jnp.stack([m.sum() for m in result.stage_masks]),
             trees_traversed_progressive(
                 mask, result.stage_masks, self.sentinels, T, clf_trees
             ),
             result.overflow,
             mask.sum(),
+            picked_staged,
         ))
         # Adapt: running max sizes the buckets, the EMA feeds the cost model.
         a = self.survivor_ema
@@ -248,8 +305,8 @@ class RankingService:
 
         s = self.stats
         s.batches += 1
-        s.batches_fused += mode == "fused"
-        s.batches_staged += mode == "staged"
+        s.batches_staged += bool(picked_staged)
+        s.batches_fused += not bool(picked_staged)
         s.queries += Q
         s.docs += int(batch_docs)
         s.docs_continued += int(survivors[-1])
@@ -257,7 +314,7 @@ class RankingService:
         s.trees_traversed += float(traversed)
         s.trees_full_equiv += int(batch_docs) * T
 
-        return np.asarray(top_idx), np.asarray(result.scores)
+        return top_idx, scores
 
 
 @dataclasses.dataclass

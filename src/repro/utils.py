@@ -1,0 +1,75 @@
+"""Instrumentation helpers shared by tests and benchmarks.
+
+:func:`count_host_transfers` is the device-residency guard: it counts
+device→host materializations of jax arrays while a block runs, split into
+*explicit* reads (``jax.device_get`` — the sanctioned, fused stats read)
+and *implicit* syncs (``float()`` / ``int()`` / ``bool()`` / ``np.asarray``
+on a device array — the accidental kind that stalls the serving hot path).
+
+Why not ``jax.transfer_guard``? On the CPU backend (this container)
+device and host share memory, so jax's own guard never fires — it would
+make the zero-transfer contract vacuously true. Instead we hook
+``ArrayImpl._value``, the single Python chokepoint every host
+materialization funnels through (``__array__``, ``__float__``,
+``__int__``, ``__bool__``, ``device_get`` all read it), and attribute
+hits inside a ``jax.device_get`` call to the explicit bucket.
+
+Known blind spot: a raw buffer-protocol read (``memoryview``-style C
+access that numpy *can* take on CPU zero-copy arrays) bypasses
+``_value``. Serving code never does that; the guard is aimed at the
+Python-level sync vectors that actually appear in hot paths.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+
+import jax
+from jax._src import array as _jax_array
+
+
+@dataclasses.dataclass
+class TransferCounts:
+    """Mutable tally yielded by :func:`count_host_transfers`."""
+
+    explicit_gets: int = 0   # jax.device_get calls
+    implicit_syncs: int = 0  # host materializations outside device_get
+
+
+@contextlib.contextmanager
+def count_host_transfers():
+    """Count device→host transfers in the ``with`` block.
+
+    Yields a :class:`TransferCounts`; read it after the block. Not
+    re-entrant and patches process-global hooks — test-scope only, never
+    in serving code.
+    """
+    counts = TransferCounts()
+    local = threading.local()
+
+    real_get = jax.device_get
+    real_value = _jax_array.ArrayImpl._value
+
+    def counting_get(*args, **kwargs):
+        counts.explicit_gets += 1
+        local.in_get = True
+        try:
+            return real_get(*args, **kwargs)
+        finally:
+            local.in_get = False
+
+    class CountingValue:
+        def __get__(self, obj, objtype=None):
+            if obj is not None and not getattr(local, "in_get", False):
+                counts.implicit_syncs += 1
+            return real_value.__get__(obj, objtype)
+
+    jax.device_get = counting_get
+    _jax_array.ArrayImpl._value = CountingValue()
+    try:
+        yield counts
+    finally:
+        jax.device_get = real_get
+        _jax_array.ArrayImpl._value = real_value

@@ -1,0 +1,97 @@
+"""Docs lane: keep docs/ and examples/ from drifting off the code.
+
+Two guards, both cheap enough for tier-1:
+
+- every ``repro.*`` dotted reference in ``docs/*.md`` (prose inline code
+  AND fenced code blocks) must resolve to a real module/attribute, and
+  every import statement inside a fenced python block must execute;
+- ``examples/serve_progressive.py --smoke`` (the walkthrough
+  ``docs/serving.md`` is built around) must run to completion.
+"""
+
+import importlib
+import os
+import re
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DOCS = os.path.join(ROOT, "docs")
+
+# Dotted repro.* references; stop before trailing punctuation/parens.
+_REF = re.compile(r"\brepro(?:\.[A-Za-z_][A-Za-z0-9_]*)+")
+_FENCE = re.compile(r"```(\w*)\n(.*?)```", re.S)
+_IMPORT = re.compile(r"^(?:from\s+repro[.\w]*\s+import\s+.+|import\s+repro[.\w]*)$")
+
+
+def _doc_files():
+    assert os.path.isdir(DOCS), "docs/ directory missing"
+    files = sorted(
+        os.path.join(DOCS, f) for f in os.listdir(DOCS) if f.endswith(".md")
+    )
+    assert files, "docs lane found no docs/*.md"
+    return files
+
+
+def _resolve(ref: str):
+    """Import the longest module prefix of ``ref``, getattr the rest."""
+    parts = ref.split(".")
+    mod, idx = None, 0
+    for i in range(len(parts), 0, -1):
+        try:
+            mod = importlib.import_module(".".join(parts[:i]))
+            idx = i
+            break
+        except ImportError:
+            continue
+    if mod is None:
+        raise AssertionError(f"unresolvable module in reference {ref!r}")
+    obj = mod
+    for attr in parts[idx:]:
+        obj = getattr(obj, attr)  # AttributeError = drifted doc
+    return obj
+
+
+@pytest.mark.parametrize("path", _doc_files(), ids=os.path.basename)
+def test_doc_repro_references_resolve(path):
+    """Doc-drift guard: every repro.* symbol a doc names still exists."""
+    text = open(path).read()
+    refs = sorted(set(_REF.findall(text)))
+    assert refs, f"{path} references no repro.* symbols — wrong lane?"
+    for ref in refs:
+        try:
+            _resolve(ref)
+        except (AssertionError, AttributeError) as e:
+            raise AssertionError(f"{os.path.basename(path)}: {ref}: {e}")
+
+
+@pytest.mark.parametrize("path", _doc_files(), ids=os.path.basename)
+def test_doc_code_block_imports_execute(path):
+    """Import statements inside fenced python blocks must import cleanly."""
+    text = open(path).read()
+    for lang, body in _FENCE.findall(text):
+        if lang not in ("python", "py"):
+            continue
+        for line in body.splitlines():
+            line = line.strip()
+            if _IMPORT.match(line):
+                exec(line, {})  # noqa: S102 — doc-drift guard
+
+
+def test_serve_progressive_example_smoke():
+    """The serving walkthrough must run end to end (tiny sizes)."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = (
+        os.path.join(ROOT, "src")
+        + os.pathsep + env.get("PYTHONPATH", "")
+    )
+    proc = subprocess.run(
+        [sys.executable,
+         os.path.join(ROOT, "examples", "serve_progressive.py"), "--smoke"],
+        capture_output=True, text=True, timeout=600, env=env,
+    )
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    assert "calibrated launch_overhead_trees" in proc.stdout
+    assert "speedup (trees)" in proc.stdout

@@ -1,5 +1,6 @@
 """LEAR core tests: strategies, labels/weights, classifier, cascade engine."""
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -96,6 +97,37 @@ def test_labels_and_weights(small_ltr):
     w_np, c_np, m_np = np.asarray(w), np.asarray(cont), np.asarray(ds.mask)
     if c_np.any():
         assert w_np[c_np].mean() > w_np[m_np & ~c_np].mean()
+
+
+def test_query_ranks_sort_free_matches_argsort():
+    """The device feature pipeline's sort-free (pairwise-count) ranking is
+    exactly the stable-argsort ranking — including score ties (broken by
+    document index) and masked padding (ranked after every real doc)."""
+    from repro.core.features import query_ranks
+    from repro.metrics.ranking import rank_from_scores
+
+    rng = np.random.default_rng(0)
+    scores = rng.normal(size=(6, 40)).astype(np.float32)
+    scores[0, :10] = 1.5          # exact ties within a query
+    scores[1, :] = 0.0            # fully tied query
+    mask = rng.random((6, 40)) < 0.8
+    mask[2, :] = False            # fully masked query
+    s, m = jnp.asarray(scores), jnp.asarray(mask)
+    np.testing.assert_array_equal(
+        np.asarray(query_ranks(s, m)), np.asarray(rank_from_scores(s, m))
+    )
+
+
+def test_augment_features_jits_and_matches_eager(small_ltr):
+    """The augmented-feature build is device-resident: it traces cleanly
+    under jit and the jitted result equals the eager one."""
+    ds, ens = small_ltr
+    partial = jnp.asarray(_scores(ens, ds))
+    mask = jnp.asarray(ds.mask)
+    X = jnp.asarray(ds.X)
+    eager = augment_features(X, partial, mask)
+    jitted = jax.jit(augment_features)(X, partial, mask)
+    np.testing.assert_array_equal(np.asarray(eager), np.asarray(jitted))
 
 
 def test_augment_features_shape_and_range(small_ltr):

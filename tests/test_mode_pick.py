@@ -1,0 +1,125 @@
+"""Fused-vs-staged mode pick: host cost model vs the on-device mirror.
+
+The serving contract: with ``execution_mode="auto"`` the pick happens ON
+DEVICE (``lax.cond`` on ``progressive_cost_model_device``), and it must
+choose the same branch the host-side reference
+(``progressive_cost_model`` / ``RankingService._pick_mode``) would — the
+host model is the documented, introspectable source of truth, the device
+model is its traced mirror.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.metrics.speedup import (
+    progressive_cost_model,
+    progressive_cost_model_device,
+)
+
+SENTINELS = (32, 64, 96)
+N_TREES = 192
+N_DOCS = 1024
+
+
+def _host_pick(ema, caps, loh):
+    cost = {
+        m: progressive_cost_model(
+            N_DOCS, ema, SENTINELS, N_TREES, m,
+            launch_overhead_trees=loh, stage_capacities=caps,
+        )
+        for m in ("fused", "staged")
+    }
+    return "staged" if cost["staged"] < cost["fused"] else "fused"
+
+
+def _device_pick(ema, caps, loh):
+    fused, staged = progressive_cost_model_device(
+        N_DOCS, jnp.asarray(ema, jnp.float32), SENTINELS, N_TREES,
+        launch_overhead_trees=loh, stage_capacities=caps,
+    )
+    return "staged" if bool(staged < fused) else "fused"
+
+
+@pytest.mark.parametrize(
+    "continue_rate", [0.02, 0.05, 0.15, 0.3, 0.5, 0.65, 0.8, 0.95, 1.0]
+)
+@pytest.mark.parametrize("loh", [0.0, 512.0, 4096.0, 20000.0])
+def test_device_pick_matches_host_pick(continue_rate, loh):
+    """Across the bench's continue-rate sweep (and beyond) and a wide
+    launch-overhead range, the device pick chooses exactly the branch the
+    host model chooses."""
+    ema = [continue_rate * N_DOCS] * len(SENTINELS)
+    caps = [512, 512, 512]
+    assert _device_pick(ema, caps, loh) == _host_pick(ema, caps, loh)
+
+
+def test_device_pick_matches_host_pick_shrinking_survivors():
+    """Realistic nested-exit traffic: survivors shrink stage over stage,
+    capacities bucketed per stage."""
+    for rates in ([0.6, 0.3, 0.1], [0.9, 0.8, 0.7], [0.1, 0.05, 0.01]):
+        ema = [r * N_DOCS for r in rates]
+        caps = [1024, 512, 128]
+        for loh in (0.0, 2048.0, 8192.0):
+            assert _device_pick(ema, caps, loh) == _host_pick(ema, caps, loh)
+
+
+def test_cost_model_prices_staged_at_min_capacity_peak():
+    """Regression (sparse-traffic overestimate): staged stage work is
+    priced at min(capacity, survivors). A capacity floor far above the
+    observed survivor peak must not inflate staged cost — and survivors
+    above capacity are still clipped at the block size."""
+    ema = [10.0, 10.0, 10.0]          # sparse traffic
+    caps = [512, 512, 512]            # cold-start-sized buckets
+    sparse = progressive_cost_model(
+        N_DOCS, ema, SENTINELS, N_TREES, "staged", stage_capacities=caps
+    )
+    # Stage work beyond stage 0 is priced at the 10-doc survivor estimate,
+    # not the 512-doc block: head = n·s1 + 10·(s2−s1) + 10·(s3−s2).
+    expect = N_DOCS * 32 + 10 * 32 + 10 * 32 + 10 * (N_TREES - 96)
+    assert sparse == pytest.approx(expect)
+
+    # Dense traffic: survivors exceed capacity → clipped at the block.
+    dense = progressive_cost_model(
+        N_DOCS, [800.0] * 3, SENTINELS, N_TREES, "staged",
+        stage_capacities=caps,
+    )
+    expect_dense = N_DOCS * 32 + 512 * 32 + 512 * 32 + 800 * (N_TREES - 96)
+    assert dense == pytest.approx(expect_dense)
+
+    # The device mirror agrees on both regimes.
+    for e in (ema, [800.0] * 3):
+        fused_h = progressive_cost_model(
+            N_DOCS, e, SENTINELS, N_TREES, "fused", stage_capacities=caps
+        )
+        staged_h = progressive_cost_model(
+            N_DOCS, e, SENTINELS, N_TREES, "staged", stage_capacities=caps
+        )
+        fused_d, staged_d = progressive_cost_model_device(
+            N_DOCS, jnp.asarray(e, jnp.float32), SENTINELS, N_TREES,
+            stage_capacities=caps,
+        )
+        np.testing.assert_allclose(float(fused_d), fused_h, rtol=1e-6)
+        np.testing.assert_allclose(float(staged_d), staged_h, rtol=1e-6)
+
+
+def test_cost_model_no_tail_no_tail_launch_priced():
+    """Sentinel at the ensemble end: no tail work, and fused prices a
+    single launch (staged S launches)."""
+    sent = (64, N_TREES)
+    fused = progressive_cost_model(
+        N_DOCS, [100.0, 50.0], sent, N_TREES, "fused",
+        launch_overhead_trees=1000.0,
+    )
+    assert fused == pytest.approx(N_DOCS * N_TREES + 1000.0)
+    staged = progressive_cost_model(
+        N_DOCS, [100.0, 50.0], sent, N_TREES, "staged",
+        launch_overhead_trees=1000.0,
+    )
+    assert staged == pytest.approx(N_DOCS * 64 + 100.0 * (N_TREES - 64) + 2000.0)
+    fused_d, staged_d = progressive_cost_model_device(
+        N_DOCS, jnp.asarray([100.0, 50.0], jnp.float32), sent, N_TREES,
+        launch_overhead_trees=1000.0,
+    )
+    assert float(fused_d) == pytest.approx(fused)
+    assert float(staged_d) == pytest.approx(staged)

@@ -413,6 +413,87 @@ def test_padded_forest_cache_lru_eviction():
     assert ops.padded_forest(ens, boundaries=(1, 24)) is rebuilt
 
 
+def test_auto_mode_launch_counters_stable_under_cond():
+    """mode="auto" compiles BOTH branches under one lax.cond: tracing the
+    combined S=3 program stages 1 segmented launch (fused branch) plus
+    S+2=5 plain launches (fused tail + staged head/stage-tails/tail), each
+    accounted ONCE — and re-executions, including ones that flip the
+    executed branch, move no counters."""
+    rng = np.random.default_rng(30)
+    ens = random_ensemble(30, n_trees=60, depth=4, n_features=16)
+    Q, D, F = 6, 24, 16
+    X = jnp.asarray(rng.normal(size=(Q, D, F)).astype(np.float32))
+    mask = jnp.ones((Q, D), bool)
+    cascade = _cascade(ens)
+    strategies = [
+        (lambda p, m, k=k: ert_continue(p, m, k_s=k)) for k in (16, 10, 6)
+    ]
+    kwargs = dict(
+        sentinels=[10, 20, 35], capacities=128, strategies=strategies,
+        launch_overhead_trees=512.0,
+    )
+
+    ops.reset_launch_counts()
+    res = cascade.rank_progressive(
+        X, mask, mode="auto", stage_ema=jnp.asarray([4.0, 4.0, 4.0]),
+        **kwargs,
+    )
+    jax.block_until_ready(res.scores)
+    counts = ops.launch_counts()
+    assert counts == {"segmented": 1, "plain": 5}, counts
+    # Branch flip on the cached step: no re-trace, no counter movement.
+    res2 = cascade.rank_progressive(
+        X, mask, mode="auto",
+        stage_ema=jnp.asarray([144.0, 144.0, 144.0]), **kwargs,
+    )
+    jax.block_until_ready(res2.scores)
+    assert ops.launch_counts() == counts, ops.launch_counts()
+    assert bool(res.picked_staged) and not bool(res2.picked_staged)
+
+
+def test_auto_mode_bitexact_with_picked_branch():
+    """The combined program's output is bit-exact with running the picked
+    branch directly, for both pick outcomes; have_ema=False forces the
+    fused cold-start branch regardless of the estimate."""
+    rng = np.random.default_rng(31)
+    ens = random_ensemble(31, n_trees=60, depth=4, n_features=16)
+    Q, D, F = 6, 24, 16
+    X = jnp.asarray(rng.normal(size=(Q, D, F)).astype(np.float32))
+    mask = jnp.asarray(rng.random((Q, D)) < 0.9)
+    cascade = _cascade(ens)
+    strategies = [
+        (lambda p, m, k=k: ert_continue(p, m, k_s=k)) for k in (16, 10, 6)
+    ]
+    kwargs = dict(
+        sentinels=[10, 20, 35], capacities=128, strategies=strategies,
+    )
+    fixed = {
+        m: cascade.rank_progressive(X, mask, mode=m, **kwargs)
+        for m in ("fused", "staged")
+    }
+    for ema, expect in (([4.0] * 3, "staged"), ([144.0] * 3, "fused")):
+        got = cascade.rank_progressive(
+            X, mask, mode="auto", stage_ema=jnp.asarray(ema),
+            launch_overhead_trees=512.0, **kwargs,
+        )
+        assert ("staged" if bool(got.picked_staged) else "fused") == expect
+        np.testing.assert_array_equal(
+            np.asarray(got.scores), np.asarray(fixed[expect].scores)
+        )
+        np.testing.assert_array_equal(
+            np.asarray(got.continue_mask),
+            np.asarray(fixed[expect].continue_mask),
+        )
+    cold = cascade.rank_progressive(
+        X, mask, mode="auto", stage_ema=jnp.asarray([4.0] * 3),
+        have_ema=False, launch_overhead_trees=512.0, **kwargs,
+    )
+    assert not bool(cold.picked_staged)
+    np.testing.assert_array_equal(
+        np.asarray(cold.scores), np.asarray(fixed["fused"].scores)
+    )
+
+
 def test_strategies_clamp_small_query_block():
     """k_s larger than the padded candidate count must not crash (top_k
     rejects k > axis size) — every masked doc continues instead."""

@@ -123,6 +123,63 @@ def test_adaptive_mode_tracks_continue_rate():
     assert forced.stats.batches_staged == 1
 
 
+def test_rank_batch_zero_host_transfers_with_lear_classifier():
+    """The device-residency acceptance contract: with a REAL LEAR
+    classifier in the loop (kernel-scored, device-built augmented
+    features), a steady-state rank_batch performs ZERO implicit
+    device→host transfers — the single fused jax.device_get at the end is
+    the only read."""
+    from repro.utils import count_host_transfers
+
+    rng = np.random.default_rng(6)
+    ens = random_ensemble(60, n_trees=64, depth=4, n_features=12)
+    clfs = [
+        LearClassifier(
+            forest=random_ensemble(160 + i, n_trees=10, depth=3,
+                                   n_features=16),
+            sentinel=s,
+        )
+        for i, s in enumerate((8, 28))
+    ]
+    svc = RankingService(
+        ens, clfs[0], threshold=0.4, extra_classifiers=clfs[1:],
+        execution_mode="auto", launch_overhead_trees=512.0,
+    )
+    X = jnp.asarray(rng.normal(size=(2, 32, 12)).astype(np.float32))
+    mask = jnp.ones((2, 32), bool)
+    # Warm up both the cold-start trace and the steady-state trace (the
+    # capacity ratchet may re-bucket after batch 1).
+    svc.rank_batch(X, mask)
+    svc.rank_batch(X, mask)
+    with count_host_transfers() as counts:
+        svc.rank_batch(X, mask)
+    assert counts.explicit_gets == 1, counts
+    assert counts.implicit_syncs == 0, counts
+
+
+def test_service_device_pick_matches_host_reference():
+    """Acceptance: the in-program (lax.cond) pick chooses exactly the
+    branch the host-side reference `_pick_mode` predicts, across a
+    continue-rate sweep injected as the survivor EMA."""
+    rng = np.random.default_rng(7)
+    Q, D, F = 2, 64, 12
+    svc = _service(
+        execution_mode="auto", launch_overhead_trees=512.0, survivor_ema=1.0
+    )
+    X, mask = _batch(rng, Q, D, F, survive_frac=0.5)
+    svc.rank_batch(X, mask)  # warm up; establishes peaks/EMA
+    for rate in (0.02, 0.05, 0.15, 0.3, 0.5, 0.8, 0.95):
+        svc._stage_ema = [rate * Q * D] * len(svc.sentinels)
+        host_pick = svc._pick_mode(Q * D)
+        before = (svc.stats.batches_fused, svc.stats.batches_staged)
+        svc.rank_batch(X, mask)
+        df = svc.stats.batches_fused - before[0]
+        ds = svc.stats.batches_staged - before[1]
+        device_pick = "staged" if ds else "fused"
+        assert (df, ds) in ((1, 0), (0, 1))
+        assert device_pick == host_pick, (rate, device_pick, host_pick)
+
+
 def test_modes_serve_identical_scores():
     """Fused and staged services return identical responses on a
     non-overflow batch (the engine's bit-exactness surfaces end to end)."""
