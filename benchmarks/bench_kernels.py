@@ -9,11 +9,16 @@ seed's per-stage execution (1 segmented launch vs S launches, cumsum vs
 argsort compaction, cached vs per-call re-padded buffers); the
 ``fused_vs_staged`` section sweeps the jit-fused progressive engine's two
 execution modes across continue rates and records the crossover the
-serving cost model should sit near.
+serving cost model should sit near; the ``leaf_gather`` section sweeps the
+kernel's three leaf-value resolution paths (one-hot / select tree / MXU
+contraction) across leaf counts; the ``blocked_rank`` section sweeps the
+direct vs blocked sort-free per-query ranking across candidate counts.
 
 Besides the CSV on stdout, results are written machine-readable to
 ``BENCH_kernels.json`` at the repo root so the perf trajectory is tracked
-across PRs.
+across PRs. ``main(smoke=True, json_path=...)`` runs a minutes-scale tiny
+configuration of every section for CI (``benchmarks/check_bench.py``)
+without clobbering the tracked numbers.
 """
 
 from __future__ import annotations
@@ -28,15 +33,23 @@ import numpy as np
 
 from repro.core.cascade import CascadeRanker, bucket_capacity
 from repro.core.compaction import compact_indices_argsort, compact_indices_cumsum
+from repro.core.features import (
+    RANK_BLOCKED_MIN_D,
+    query_ranks_blocked,
+    query_ranks_direct,
+)
 from repro.core.strategies import ert_continue
 from repro.forest.ensemble import random_ensemble, slice_trees
 from repro.forest.scoring import score_bitvector, score_level
+from repro.kernels.forest_score import LEAF_GATHERS, resolve_leaf_gather
 from repro.kernels.ops import (
+    ENGINE_BLOCK_B,
     forest_score,
     forest_score_range,
     forest_score_segments,
     padded_forest,
 )
+from repro.metrics.ranking import rank_from_scores
 from repro.metrics.speedup import speedup_vs_full
 
 JSON_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_kernels.json")
@@ -92,9 +105,10 @@ def _seed_cascade_compacted(ens, sentinel, X, mask, capacity, k_s):
     return scores, overflow, sp
 
 
-def _bench_scoring(rows):
+def _bench_scoring(rows, smoke=False):
     rng = np.random.default_rng(0)
-    for n_docs, n_trees, n_feat in ((512, 256, 136), (2048, 512, 136)):
+    sizes = ((64, 32, 24),) if smoke else ((512, 256, 136), (2048, 512, 136))
+    for n_docs, n_trees, n_feat in sizes:
         ens = random_ensemble(0, n_trees=n_trees, depth=6, n_features=n_feat)
         X = jnp.asarray(rng.normal(size=(n_docs, n_feat)).astype(np.float32))
         t_bv = _time(jax.jit(lambda x: score_bitvector(ens, x)), X)
@@ -111,19 +125,24 @@ def _bench_scoring(rows):
                      "validates_kernel_path"))
 
 
-def _bench_cascade(rows):
+def _bench_cascade(rows, smoke=False):
     # Cascade at a ~10% continue rate: seed path vs the new engine, at a
     # throughput batch (kernel-bound: paths should tie — the engine's wins
     # are launches/HBM, invisible to CPU interpret) and a latency batch
     # (overhead-bound: re-pad + argsort + sync elimination shows directly).
     rng = np.random.default_rng(1)
-    ens = random_ensemble(1, n_trees=256, depth=6, n_features=64)
+    n_trees = 64 if smoke else 256
+    ens = random_ensemble(1, n_trees=n_trees, depth=6, n_features=64)
     sentinel, k_s = 25, 6                      # 6/64 ≈ 9.4% continue
     cascade = CascadeRanker(
         ensemble=ens, sentinel=sentinel,
         strategy=lambda p, m: ert_continue(p, m, k_s=k_s),
     )
-    for tag, Q, D, F in (("batch64x64", 64, 64, 64), ("batch8x64", 8, 64, 64)):
+    batches = (
+        (("batch8x64", 8, 64, 64),) if smoke
+        else (("batch64x64", 64, 64, 64), ("batch8x64", 8, 64, 64))
+    )
+    for tag, Q, D, F in batches:
         X = jnp.asarray(rng.normal(size=(Q, D, F)).astype(np.float32))
         mask = jnp.ones((Q, D), bool)
         ref = cascade.rank(X, mask)
@@ -142,7 +161,7 @@ def _bench_cascade(rows):
                     x, mask, sentinels=[sentinel], capacities=cap
                 ).scores,
             ],
-            X, iters=16,
+            X, iters=2 if smoke else 16,
         )
         rows.append((f"cascade_compacted_seed_equiv_{tag}", t_seed,
                      "argsort+reslice+sync,continue_rate=0.094"))
@@ -153,12 +172,12 @@ def _bench_cascade(rows):
                      f"vs_seed_speedup={t_seed / max(t_prog, 1e-9):.2f}x"))
 
 
-def _bench_multi_sentinel(rows):
+def _bench_multi_sentinel(rows, smoke=False):
     # S=3 head: one segmented launch vs S per-stage launches over the same
     # trees, plus the progressive engine end to end.
     rng = np.random.default_rng(2)
-    ens = random_ensemble(2, n_trees=256, depth=6, n_features=64)
-    Q, D, F = 32, 64, 64
+    ens = random_ensemble(2, n_trees=128 if smoke else 256, depth=6, n_features=64)
+    Q, D, F = (8, 64, 64) if smoke else (32, 64, 64)
     X = jnp.asarray(rng.normal(size=(Q, D, F)).astype(np.float32))
     flat = X.reshape(Q * D, F)
     mask = jnp.ones((Q, D), bool)
@@ -173,9 +192,10 @@ def _bench_multi_sentinel(rows):
                 for k in range(3)
             ][-1],
         ],
-        flat, iters=16,
+        flat, iters=2 if smoke else 16,
     )
-    rows.append(("head_segmented_1_launch", t_one, "S=3,trees=64,docs=2048"))
+    rows.append(("head_segmented_1_launch", t_one,
+                 f"S=3,trees=64,docs={Q * D}"))
     rows.append(("head_per_stage_3_launches", t_s,
                  f"vs_segmented={t_s / max(t_one, 1e-9):.2f}x"))
 
@@ -191,21 +211,22 @@ def _bench_multi_sentinel(rows):
             x, mask, sentinels=list(sentinels), capacities=512,
             strategies=strategies,
         ).scores,
-        X, iters=5,
+        X, iters=2 if smoke else 5,
     )
     rows.append(("cascade_progressive_s3", t_prog3,
                  "launches=1_segmented+1_tail,continue_rate=0.094"))
 
     # Compaction primitive: O(n) cumsum vs O(n log n) argsort.
+    it = 10 if smoke else 200
     cont = jnp.asarray(rng.random(Q * D) < 0.1)
-    t_cum = _time(lambda c: compact_indices_cumsum(c, 256)[0], cont, iters=200)
-    t_arg = _time(lambda c: compact_indices_argsort(c, 256)[0], cont, iters=200)
+    t_cum = _time(lambda c: compact_indices_cumsum(c, 256)[0], cont, iters=it)
+    t_arg = _time(lambda c: compact_indices_argsort(c, 256)[0], cont, iters=it)
     rows.append(("compaction_cumsum", t_cum, f"n={Q * D},capacity=256"))
     rows.append(("compaction_argsort", t_arg,
                  f"vs_cumsum={t_arg / max(t_cum, 1e-9):.2f}x"))
 
 
-def _bench_fused_vs_staged(rows, extra):
+def _bench_fused_vs_staged(rows, extra, smoke=False):
     """Jit-fused progressive engine: fused head vs per-stage tails, across
     continue rates. Staged scores segment k only on stage-(k-1) compacted
     survivors — it wins when survivors shrink fast (head work saved dwarfs
@@ -225,8 +246,9 @@ def _bench_fused_vs_staged(rows, extra):
     )
 
     rng = np.random.default_rng(3)
-    ens = random_ensemble(3, n_trees=192, depth=6, n_features=64)
-    Q, D, F = 16, 64, 64
+    n_trees = 128 if smoke else 192
+    ens = random_ensemble(3, n_trees=n_trees, depth=6, n_features=64)
+    Q, D, F = (4, 64, 64) if smoke else (16, 64, 64)
     X = jnp.asarray(rng.normal(size=(Q, D, F)).astype(np.float32))
     mask = jnp.ones((Q, D), bool)
     sentinels = [32, 64, 96]
@@ -241,7 +263,8 @@ def _bench_fused_vs_staged(rows, extra):
         **(last_calibration() or {}), "launch_overhead_trees": round(loh, 1),
     }
     sweep = []
-    for rate in (0.05, 0.15, 0.3, 0.5, 0.8):
+    rates = (0.05, 0.5) if smoke else (0.05, 0.15, 0.3, 0.5, 0.8)
+    for rate in rates:
         k_s = max(1, int(rate * D))
         strategies = [
             (lambda p, m, k=k_s: ert_continue(p, m, k_s=k)) for _ in sentinels
@@ -255,7 +278,7 @@ def _bench_fused_vs_staged(rows, extra):
                 ).scores
                 for mode in ("fused", "staged")
             ],
-            X, iters=8,
+            X, iters=2 if smoke else 8,
         )
         # Combined program at this rate: device pick vs host reference,
         # and bit-exactness with the picked branch's dedicated run.
@@ -267,11 +290,14 @@ def _bench_fused_vs_staged(rows, extra):
             launch_overhead_trees=loh,
         )
         device_pick = "staged" if bool(auto.picked_staged) else "fused"
+        # block_b must match what the in-program pick was traced with
+        # (ENGINE_BLOCK_B) or pick_agrees would compare different models.
         cost = {
             m: progressive_cost_model(
                 Q * D, ema, sentinels, ens.n_trees, m,
                 launch_overhead_trees=loh,
                 stage_capacities=[cap] * len(sentinels),
+                block_b=ENGINE_BLOCK_B,
             )
             for m in ("fused", "staged")
         }
@@ -296,7 +322,7 @@ def _bench_fused_vs_staged(rows, extra):
             }
         )
         rows.append((f"cascade_s3_fused_r{rate:.2f}", t_fused,
-                     f"trees=192,docs={Q * D},capacity={cap}"))
+                     f"trees={n_trees},docs={Q * D},capacity={cap}"))
         rows.append((f"cascade_s3_staged_r{rate:.2f}", t_staged,
                      f"vs_fused={t_fused / max(t_staged, 1e-9):.2f}x"))
 
@@ -307,7 +333,7 @@ def _bench_fused_vs_staged(rows, extra):
     )
     extra["fused_vs_staged"] = {
         "sentinels": sentinels,
-        "n_trees": 192,
+        "n_trees": n_trees,
         "docs": Q * D,
         "launch_overhead_trees_calibrated": round(loh, 1),
         "sweep": sweep,
@@ -319,13 +345,128 @@ def _bench_fused_vs_staged(rows, extra):
     }
 
 
-def main(csv: bool = True):
+def _bench_leaf_gather(rows, extra, smoke=False):
+    """Kernel leaf-value resolution: one-hot vs select tree vs MXU
+    contraction, across leaf counts. All three move the same f32 values
+    (asserted per point) — the sweep records which one is cheapest and
+    that the auto-resolved path is no slower than the one-hot baseline at
+    the serving-default L=64."""
+    rng = np.random.default_rng(4)
+    n_docs, n_trees, n_feat = (256, 32, 32) if smoke else (2048, 128, 64)
+    depths = (6,) if smoke else (3, 5, 6)   # L = 8, 32, 64
+    iters = 2 if smoke else 8
+    sweep = []
+    for depth in depths:
+        L = 1 << depth
+        ens = random_ensemble(40 + depth, n_trees=n_trees, depth=depth,
+                              n_features=n_feat)
+        X = jnp.asarray(rng.normal(size=(n_docs, n_feat)).astype(np.float32))
+        pfs = {
+            lg: padded_forest(ens, leaf_gather=lg) for lg in LEAF_GATHERS
+        }
+        times = dict(zip(LEAF_GATHERS, _time_group(
+            [
+                (lambda x, pf=pfs[lg]: forest_score_range(pf, x))
+                for lg in LEAF_GATHERS
+            ],
+            X, iters=iters,
+        )))
+        outs = {
+            lg: np.asarray(forest_score_range(pfs[lg], X))
+            for lg in LEAF_GATHERS
+        }
+        bitexact = all(
+            (outs[lg] == outs["onehot"]).all() for lg in LEAF_GATHERS
+        )
+        auto = resolve_leaf_gather(L)
+        point = {
+            "n_leaves": L,
+            "auto_pick": auto,
+            **{f"{lg}_us": round(times[lg], 1) for lg in LEAF_GATHERS},
+            "auto_vs_onehot": round(
+                times["onehot"] / max(times[auto], 1e-9), 2
+            ),
+            "bitexact": bool(bitexact),
+        }
+        sweep.append(point)
+        for lg in LEAF_GATHERS:
+            rows.append((f"leaf_gather_{lg}_L{L}", times[lg],
+                         f"docs={n_docs},trees={n_trees},"
+                         f"vs_onehot={times['onehot'] / max(times[lg], 1e-9):.2f}x"))
+    extra["leaf_gather"] = {
+        "docs": n_docs,
+        "n_trees": n_trees,
+        "sweep": sweep,
+        "note": ("auto_vs_onehot > 1 means the auto-resolved path beats the "
+                 "one-hot baseline; bitexact asserts all three paths "
+                 "returned identical f32 scores on the swept batch"),
+    }
+
+
+def _bench_blocked_rank(rows, extra, smoke=False):
+    """Sort-free per-query ranking: direct [Q, D, D] pairwise count vs the
+    [block_d, block_d]-tiled blocked count, across candidate counts. The
+    counts are bit-identical (asserted against the argsort oracle per
+    point); the sweep records where tiling starts paying."""
+    rng = np.random.default_rng(5)
+    Ds = (128, 512) if smoke else (128, 256, 512, 1024)
+    iters = 2 if smoke else 8
+    direct_j = jax.jit(query_ranks_direct)
+    blocked_j = jax.jit(query_ranks_blocked)
+    sweep = []
+    for D in Ds:
+        Q = 2 if smoke else 4
+        # Tie-heavy scores: small integer grid, the worst case for any
+        # ranking that cuts corners on tie semantics.
+        s = jnp.asarray(
+            rng.integers(0, 32, size=(Q, D)).astype(np.float32)
+        )
+        m = jnp.asarray(rng.random((Q, D)) < 0.9)
+        t_direct, t_blocked = _time_group(
+            [lambda a, b: direct_j(a, b), lambda a, b: blocked_j(a, b)],
+            s, m, iters=iters,
+        )
+        oracle = np.asarray(rank_from_scores(s, m))
+        matches = bool(
+            (np.asarray(direct_j(s, m)) == oracle).all()
+            and (np.asarray(blocked_j(s, m)) == oracle).all()
+        )
+        sweep.append(
+            {
+                "n_docs": D,
+                "auto_pick": "blocked" if D > RANK_BLOCKED_MIN_D else "direct",
+                "direct_us": round(t_direct, 1),
+                "blocked_us": round(t_blocked, 1),
+                "blocked_vs_direct": round(
+                    t_direct / max(t_blocked, 1e-9), 2
+                ),
+                "matches_argsort": matches,
+            }
+        )
+        rows.append((f"rank_direct_D{D}", t_direct, f"queries={Q}"))
+        rows.append((f"rank_blocked_D{D}", t_blocked,
+                     f"vs_direct={t_direct / max(t_blocked, 1e-9):.2f}x"))
+    crossover = next(
+        (p["n_docs"] for p in sweep if p["blocked_vs_direct"] >= 1.0), None
+    )
+    extra["blocked_rank"] = {
+        "cutoff_n_docs": RANK_BLOCKED_MIN_D,
+        "sweep": sweep,
+        "crossover_n_docs": crossover,
+        "note": ("blocked_vs_direct > 1 means tiling wins; auto uses "
+                 "blocked above cutoff_n_docs candidates"),
+    }
+
+
+def main(csv: bool = True, json_path: str = JSON_PATH, smoke: bool = False):
     rows = []
     extra = {}
-    _bench_scoring(rows)
-    _bench_cascade(rows)
-    _bench_multi_sentinel(rows)
-    _bench_fused_vs_staged(rows, extra)
+    _bench_scoring(rows, smoke)
+    _bench_cascade(rows, smoke)
+    _bench_multi_sentinel(rows, smoke)
+    _bench_fused_vs_staged(rows, extra, smoke)
+    _bench_leaf_gather(rows, extra, smoke)
+    _bench_blocked_rank(rows, extra, smoke)
 
     if csv:
         for name, us, derived in rows:
@@ -334,13 +475,14 @@ def main(csv: bool = True):
     payload = {
         "bench": "kernels",
         "backend": jax.default_backend(),
+        "smoke": smoke,
         "rows": [
             {"name": name, "us_per_call": round(us, 1), "derived": derived}
             for name, us, derived in rows
         ],
         **extra,
     }
-    with open(JSON_PATH, "w") as f:
+    with open(json_path, "w") as f:
         json.dump(payload, f, indent=2)
         f.write("\n")
     return rows

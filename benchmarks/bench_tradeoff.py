@@ -9,7 +9,6 @@ dominance check (LEAR ≥ EPT speedup at matched quality).
 from __future__ import annotations
 
 import jax.numpy as jnp
-import numpy as np
 
 from benchmarks.common import Experiment, get_experiment
 from repro.core.lear import augment_features

@@ -1,0 +1,121 @@
+"""CI bench smoke: run the kernel bench tiny, validate the JSON schema.
+
+Runs ``bench_kernels.main(smoke=True)`` against a temp file (NEVER the
+tracked ``BENCH_kernels.json`` — the repo copy records the full-size
+numbers) and then checks the contract the serving stack and the perf
+trajectory depend on:
+
+- every sweep section is present (``fused_vs_staged``, ``leaf_gather``,
+  ``blocked_rank``, ``launch_calibration``);
+- every timing is a positive finite number (a NaN/zero timing means the
+  bench measured nothing and the trajectory row is garbage);
+- the mode-pick contract holds (``pick_agrees`` and
+  ``auto_bitexact_with_picked_branch`` true at every swept rate);
+- the kernel paths' exactness flags hold (``bitexact`` per leaf-gather
+  point, ``matches_argsort`` per blocked-rank point).
+
+Exit code 0 on success, 1 with a findings list on violation — CI-friendly,
+no pytest dependency.
+"""
+
+from __future__ import annotations
+
+import json
+import math
+import os
+import sys
+import tempfile
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+
+REQUIRED_SECTIONS = (
+    "rows", "fused_vs_staged", "leaf_gather", "blocked_rank",
+    "launch_calibration",
+)
+
+
+def _positive_finite(x) -> bool:
+    return isinstance(x, (int, float)) and math.isfinite(x) and x > 0
+
+
+def validate(payload: dict) -> list[str]:
+    """Schema findings for a bench payload; empty list = valid."""
+    problems = []
+    for section in REQUIRED_SECTIONS:
+        if section not in payload:
+            problems.append(f"missing section: {section}")
+    if problems:
+        return problems
+
+    for row in payload["rows"]:
+        if not _positive_finite(row.get("us_per_call")):
+            problems.append(
+                f"row {row.get('name')!r}: bad timing {row.get('us_per_call')!r}"
+            )
+
+    fvs = payload["fused_vs_staged"]
+    if not fvs.get("sweep"):
+        problems.append("fused_vs_staged.sweep is empty")
+    for point in fvs.get("sweep", []):
+        rate = point.get("continue_rate")
+        if not point.get("pick_agrees"):
+            problems.append(f"fused_vs_staged r={rate}: device pick != host pick")
+        if not point.get("auto_bitexact_with_picked_branch"):
+            problems.append(f"fused_vs_staged r={rate}: auto not bit-exact")
+        for key in ("fused_us", "staged_us"):
+            if not _positive_finite(point.get(key)):
+                problems.append(f"fused_vs_staged r={rate}: bad {key}")
+
+    lg = payload["leaf_gather"]
+    if not lg.get("sweep"):
+        problems.append("leaf_gather.sweep is empty")
+    for point in lg.get("sweep", []):
+        L = point.get("n_leaves")
+        if not point.get("bitexact"):
+            problems.append(f"leaf_gather L={L}: paths not bit-exact")
+        for key in ("onehot_us", "select_us", "mxu_us"):
+            if not _positive_finite(point.get(key)):
+                problems.append(f"leaf_gather L={L}: bad {key}")
+
+    br = payload["blocked_rank"]
+    if not br.get("sweep"):
+        problems.append("blocked_rank.sweep is empty")
+    for point in br.get("sweep", []):
+        D = point.get("n_docs")
+        if not point.get("matches_argsort"):
+            problems.append(f"blocked_rank D={D}: ranks != argsort oracle")
+        for key in ("direct_us", "blocked_us"):
+            if not _positive_finite(point.get(key)):
+                problems.append(f"blocked_rank D={D}: bad {key}")
+
+    # 0.0 is a legitimate calibration (launch latency fully explained by
+    # tree work on a fast runner — the probe floors at 0); only NaN or a
+    # negative value means the probe is broken.
+    loh = payload["launch_calibration"].get("launch_overhead_trees")
+    if not (isinstance(loh, (int, float)) and math.isfinite(loh) and loh >= 0):
+        problems.append("launch_calibration: bad launch_overhead_trees")
+    return problems
+
+
+def main() -> int:
+    import bench_kernels
+
+    with tempfile.TemporaryDirectory() as tmp:
+        json_path = os.path.join(tmp, "BENCH_kernels.json")
+        bench_kernels.main(csv=False, json_path=json_path, smoke=True)
+        with open(json_path) as f:
+            payload = json.load(f)
+
+    problems = validate(payload)
+    if problems:
+        print("bench smoke FAILED:")
+        for p in problems:
+            print(f"  - {p}")
+        return 1
+    n_rows = len(payload["rows"])
+    print(f"bench smoke OK: {n_rows} rows, all sweep sections valid")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -16,7 +16,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_smoke_config
-from repro.configs.base import RecSysConfig, ShapeSpec
+from repro.configs.base import RecSysConfig
 from repro.models import recsys as rec
 from repro.serve.ranking_service import TwoStageCascade
 

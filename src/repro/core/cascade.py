@@ -100,6 +100,7 @@ from repro.core.compaction import (
 from repro.forest.ensemble import TreeEnsemble, slice_trees
 from repro.forest.scoring import score_bitvector
 from repro.kernels.ops import (
+    ENGINE_BLOCK_B,
     forest_score,
     forest_score_range,
     forest_score_segments,
@@ -208,6 +209,7 @@ class CascadeRanker:
         *,
         classifier_trees: Sequence[int] | int | None = None,
         block_t: int = 16,
+        leaf_gather: str = "auto",
         mode: str = "fused",
         stage_ema: jax.Array | None = None,
         have_ema: jax.Array | bool = True,
@@ -273,7 +275,14 @@ class CascadeRanker:
 
         has_tail = sentinels[-1] < T
         boundaries = sentinels + ((T,) if has_tail else ())
-        pf = padded_forest(self.ensemble, boundaries=boundaries, block_t=block_t)
+        # leaf_gather picks the kernel's leaf-value resolution path (select
+        # tree / MXU contraction / one-hot reference — all bit-exact); the
+        # buffer set carries the matching leaf layout, so a distinct path is
+        # simply a distinct cached PaddedForest (and thus a distinct step).
+        pf = padded_forest(
+            self.ensemble, boundaries=boundaries, block_t=block_t,
+            leaf_gather=leaf_gather,
+        )
 
         # Array-valued strategy kwargs become traced operands of the jitted
         # step; everything else (ints, floats, flags) is static config and
@@ -478,6 +487,7 @@ def _build_progressive_step(
                 Q * D, stage_ema, sentinels, n_trees,
                 launch_overhead_trees=launch_overhead_trees,
                 stage_capacities=capacities,
+                block_b=ENGINE_BLOCK_B,
             )
             picked = jnp.logical_and(have_ema, staged_cost < fused_cost)
             out = jax.lax.cond(

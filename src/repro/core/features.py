@@ -19,9 +19,18 @@ Design notes:
   exactly). The pairwise compare is O(D²) per query but branch-free,
   segment-local, and VPU-shaped — on an accelerator it fuses into the
   surrounding step, whereas the double argsort lowers to two sorts that
-  XLA cannot fuse across. Serving blocks keep D in the tens-to-hundreds,
-  where the quadratic compare is cheap; the metrics stack keeps the
-  argsort path (NDCG needs the sort anyway).
+  XLA cannot fuse across. The metrics stack keeps the argsort path (NDCG
+  needs the sort anyway).
+- Two executions of the same count exist: the **direct** compare
+  materializes the full ``[Q, D, D]`` predicate (cheap in the
+  tens-to-hundreds of candidates the serving blocks target), and the
+  **blocked** compare (:func:`query_ranks_blocked`) tiles the D×D grid
+  into ``[RANK_BLOCK_D, RANK_BLOCK_D]`` chunks under ``lax.fori_loop`` —
+  the working set stops growing quadratically, which is what lets the
+  device-resident feature build scale past a few hundred candidates per
+  query. The comparisons (and therefore the exact tie semantics) are
+  identical, so the two are bit-exact; :func:`query_ranks` auto-selects
+  blocked above ``RANK_BLOCKED_MIN_D``.
 - :func:`query_minmax` / :func:`normalized_partial` are plain per-query
   segment reductions (min/max over the document axis with the request
   mask applied) and an elementwise normalization.
@@ -39,8 +48,22 @@ import jax.numpy as jnp
 N_AUG = 4   # sentinel-time features appended to the q-d vector
 NEG = -1e30  # masked-document fill; ranks padding after every real doc
 
+RANK_BLOCK_D = 128       # tile edge of the blocked pairwise-count compare
+# Auto policy: direct up to this many candidates, blocked above. Set by
+# the MEMORY cliff (above ~2 tiles the [Q, D, D] predicate stops fitting
+# the working set the surrounding step fuses over), deliberately NOT by
+# the CPU bench's wall-time crossover — interpret-mode timings measure
+# XLA:CPU loop emission, not lowering on the target accelerator, and the
+# sweep is noisy at small D (BENCH_kernels.json → blocked_rank records a
+# crossover near D≈128 with non-monotonic ratios). Below the cutoff the
+# direct form stays a single fusable elementwise+reduce, which is worth
+# more inside the compiled progressive step than a small tiled win.
+RANK_BLOCKED_MIN_D = 256
 
-def query_ranks(partial: jax.Array, mask: jax.Array) -> jax.Array:
+
+def query_ranks(
+    partial: jax.Array, mask: jax.Array, *, method: str = "auto"
+) -> jax.Array:
     """Sort-free per-query rank (0 = best) of each document — ``[Q, D] i32``.
 
     ``rank(i) = #{j : s_j > s_i  or  (s_j == s_i and j < i)}`` with masked
@@ -48,7 +71,23 @@ def query_ranks(partial: jax.Array, mask: jax.Array) -> jax.Array:
     Identical output to the stable-argsort ranking
     (:func:`repro.metrics.ranking.rank_from_scores`); exact, because only
     integer counts of exact float comparisons are involved.
+
+    ``method``: ``"direct"`` materializes the full pairwise predicate,
+    ``"blocked"`` tiles it (:func:`query_ranks_blocked`), ``"auto"`` (the
+    default) picks blocked above :data:`RANK_BLOCKED_MIN_D` candidates.
+    The counted pairs are identical either way — the choice is a pure
+    memory/perf knob, never a semantics knob.
     """
+    if method == "auto":
+        method = "blocked" if partial.shape[-1] > RANK_BLOCKED_MIN_D else "direct"
+    if method == "blocked":
+        return query_ranks_blocked(partial, mask)
+    assert method == "direct", method
+    return query_ranks_direct(partial, mask)
+
+
+def query_ranks_direct(partial: jax.Array, mask: jax.Array) -> jax.Array:
+    """One-shot pairwise count: materializes the ``[Q, D, D]`` predicate."""
     s = jnp.where(mask, partial, NEG)
     D = s.shape[-1]
     idx = jnp.arange(D, dtype=jnp.int32)
@@ -56,6 +95,59 @@ def query_ranks(partial: jax.Array, mask: jax.Array) -> jax.Array:
     s_j = s[..., None, :]      # its competitors
     beats = (s_j > s_i) | ((s_j == s_i) & (idx[None, :] < idx[:, None]))
     return beats.sum(axis=-1, dtype=jnp.int32)
+
+
+def query_ranks_blocked(
+    partial: jax.Array, mask: jax.Array, block_d: int = RANK_BLOCK_D
+) -> jax.Array:
+    """Blocked pairwise count: same ranks as :func:`query_ranks_direct`,
+    D×D compare tiled into ``[block_d, block_d]`` chunks.
+
+    A ``lax.fori_loop`` over row tiles × a ``lax.fori_loop`` over column
+    tiles accumulates each row tile's beat count; the widest live tensor
+    is ``[Q, block_d, block_d]`` instead of ``[Q, D, D]``, capping the
+    quadratic memory term of the device-resident feature build. The score
+    axis is padded to a tile multiple with ``-inf``: a padding column
+    never beats a real row (strictly below every real score incl. the
+    ``NEG`` masked fill, and its tie-break index is above every real
+    index), and padding rows are sliced off. Comparisons are the exact
+    same float predicates as the direct path — bit-identical counts, tie
+    semantics included.
+    """
+    s = jnp.where(mask, partial, NEG)
+    D = s.shape[-1]
+    lead = s.shape[:-1]
+    s2 = s.reshape((-1, D))
+    Q = s2.shape[0]
+    n_blocks = -(-D // block_d)
+    D_pad = n_blocks * block_d
+    if D_pad != D:
+        s2 = jnp.pad(s2, ((0, 0), (0, D_pad - D)), constant_values=-jnp.inf)
+    tile = jnp.arange(block_d, dtype=jnp.int32)
+
+    def count_cols(bj, carry):
+        cnt, rows, ridx = carry
+        cols = jax.lax.dynamic_slice_in_dim(s2, bj * block_d, block_d, axis=1)
+        cidx = bj * block_d + tile
+        beats = (cols[:, None, :] > rows[:, :, None]) | (
+            (cols[:, None, :] == rows[:, :, None])
+            & (cidx[None, None, :] < ridx[None, :, None])
+        )
+        return cnt + beats.sum(axis=-1, dtype=jnp.int32), rows, ridx
+
+    def count_rows(bi, out):
+        rows = jax.lax.dynamic_slice_in_dim(s2, bi * block_d, block_d, axis=1)
+        ridx = bi * block_d + tile
+        cnt = jnp.zeros((Q, block_d), jnp.int32)
+        cnt, _, _ = jax.lax.fori_loop(
+            0, n_blocks, count_cols, (cnt, rows, ridx)
+        )
+        return jax.lax.dynamic_update_slice_in_dim(out, cnt, bi * block_d, axis=1)
+
+    out = jax.lax.fori_loop(
+        0, n_blocks, count_rows, jnp.zeros((Q, D_pad), jnp.int32)
+    )
+    return out[:, :D].reshape(*lead, D)
 
 
 def query_minmax(partial: jax.Array, mask: jax.Array):

@@ -52,7 +52,7 @@ class Rules:
         return self.table[logical]
 
     def resolve(self, *logical: str | None) -> PartitionSpec:
-        return PartitionSpec(*(self.physical(l) for l in logical))
+        return PartitionSpec(*(self.physical(ax) for ax in logical))
 
 
 def single_pod_rules() -> Rules:

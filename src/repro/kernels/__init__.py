@@ -2,7 +2,13 @@
 # for compute hot-spots the paper itself optimizes with a custom
 # kernel. Leave this package empty if the paper has none.
 
+from repro.kernels.forest_score import (
+    LEAF_GATHERS,
+    LEAF_SELECT_MAX,
+    resolve_leaf_gather,
+)
 from repro.kernels.ops import (
+    ENGINE_BLOCK_B,
     PaddedForest,
     forest_score,
     forest_score_range,
@@ -13,6 +19,9 @@ from repro.kernels.ops import (
 )
 
 __all__ = [
+    "ENGINE_BLOCK_B",
+    "LEAF_GATHERS",
+    "LEAF_SELECT_MAX",
     "PaddedForest",
     "forest_score",
     "forest_score_range",
@@ -20,4 +29,5 @@ __all__ = [
     "launch_counts",
     "padded_forest",
     "reset_launch_counts",
+    "resolve_leaf_gather",
 ]

@@ -22,10 +22,37 @@ Algorithm (per doc block × tree block)
 3. Order-free AND-reduction over the node axis (contiguous-halves tree
    reduction — legal because AND is associative/commutative).
 4. Exit leaf = count-trailing-zeros via ``popcount(~m & (m−1))`` on the two
-   lanes, then leaf values are contracted against an in-register one-hot
-   (small ``[BB, BT, L]`` elementwise-sum, VPU work).
+   lanes, then leaf values are resolved through one of three *leaf-gather
+   paths* (see below).
 5. Tree-block partial scores accumulate into the output block; the first
    tree step zero-initializes.
+
+Leaf-gather paths
+-----------------
+Resolving ``leaf_value[t, leaf[b, t]]`` dominated VPU time at the default
+L=64: the original formulation builds a ``[BB, BT, L]`` one-hot
+(compare + multiply + reduce ≈ 3·L VPU ops per doc·tree and an L-wide
+temp). Three interchangeable paths now exist, selected by the static
+``leaf_gather`` argument; all move the SAME f32 values, so they are
+bit-exact with each other:
+
+- ``"select"`` (default for L ≤ :data:`LEAF_SELECT_MAX`): a two-level
+  select tree — log2(L) rounds of lane selects on the bits of the ctz
+  leaf index, MSB first, so every round slices the value array into
+  *contiguous halves* (lane-friendly on the VPU, no strided shuffles).
+  ≈ L selects per doc·tree (the rounds halve: L/2 + L/4 + … + 1) and the
+  widest temp is ``[BB, BT, L/2]`` — the first round reads the ``[BT, L]``
+  table directly. Requires a power-of-two leaf axis; the padded-buffer
+  builder (:func:`repro.kernels.ops.padded_forest`) pads the leaf axis
+  and tags the layout (``leaf_layout="pow2"``).
+- ``"mxu"`` (default for L > :data:`LEAF_SELECT_MAX`): the one-hot is
+  contracted against the leaf table on the MXU — a ``dot_general`` with
+  the tree axis as batch dim (per tree: ``[BB, L] @ [L]``), so the
+  multiply-reduce leaves the VPU entirely. Exact because each output row
+  sums one ``v·1.0`` against L−1 zeros.
+- ``"onehot"``: the original broadcast-multiply-reduce, kept as the
+  in-kernel reference path (and the oracle the parity tests pin the new
+  paths against).
 
 Both entry points are dispatched through the counting wrapper in
 :mod:`repro.kernels.ops` (``_counted_pallas``): launches are recorded at
@@ -76,6 +103,24 @@ from jax.experimental import pallas as pl
 
 ALL_ONES = np.uint32(0xFFFFFFFF)
 
+# Auto leaf-gather policy: select tree up to this many (padded) leaves, MXU
+# contraction above. The paper's trees cap at 64 leaves (the bitmask bound),
+# so serving traffic takes the select path; the MXU fallback covers wide
+# synthetic/padded leaf tables.
+LEAF_SELECT_MAX = 64
+
+LEAF_GATHERS = ("onehot", "select", "mxu")
+
+
+def _next_pow2(n: int) -> int:
+    return 1 << (max(n, 1) - 1).bit_length()
+
+
+def resolve_leaf_gather(n_leaves: int) -> str:
+    """Concrete leaf-gather path for ``"auto"``: select tree for small leaf
+    axes (after power-of-two padding), MXU contraction for wide ones."""
+    return "select" if _next_pow2(n_leaves) <= LEAF_SELECT_MAX else "mxu"
+
 
 def _ctz64(hi: jax.Array, lo: jax.Array) -> jax.Array:
     lo_nz = lo != 0
@@ -84,13 +129,89 @@ def _ctz64(hi: jax.Array, lo: jax.Array) -> jax.Array:
     return jnp.where(lo_nz, ctz32, ctz32 + jnp.uint32(32)).astype(jnp.int32)
 
 
-def _score_block(x_ref, feat_ref, thr_ref, mlo_ref, mhi_ref, leaf_ref) -> jax.Array:
+def _leaf_values_onehot(leaf: jax.Array, leaf_tab: jax.Array) -> jax.Array:
+    """Reference path: ``[BB, BT, L]`` one-hot broadcast-multiply-reduce."""
+    L = leaf_tab.shape[1]
+    onehot = (
+        leaf[:, :, None] == jax.lax.iota(jnp.int32, L)[None, None, :]
+    ).astype(jnp.float32)
+    return jnp.sum(onehot * leaf_tab[None, :, :], axis=2)
+
+
+def _leaf_values_select(leaf: jax.Array, leaf_tab: jax.Array) -> jax.Array:
+    """Two-level select tree: log2(L) rounds of contiguous-half lane selects
+    on the leaf-index bits, MSB first. L must be a power of two."""
+    BT, L = leaf_tab.shape
+    assert L & (L - 1) == 0, f"select path needs a power-of-two leaf axis: {L}"
+    if L == 1:
+        return jnp.broadcast_to(leaf_tab[None, :, 0], leaf.shape)
+    levels = L.bit_length() - 1
+    # Round 0 reads the [BT, L] table directly — the widest materialized
+    # temp is [BB, BT, L/2], not the one-hot path's [BB, BT, L].
+    half = L // 2
+    take_hi = ((leaf >> (levels - 1)) & 1) == 1                  # [BB, BT]
+    cur = jnp.where(
+        take_hi[:, :, None], leaf_tab[None, :, half:], leaf_tab[None, :, :half]
+    )
+    for r in range(levels - 2, -1, -1):
+        half = cur.shape[2] // 2
+        take_hi = ((leaf >> r) & 1) == 1
+        cur = jnp.where(take_hi[:, :, None], cur[..., half:], cur[..., :half])
+    return cur[..., 0]
+
+
+def _leaf_values_mxu(leaf: jax.Array, leaf_tab: jax.Array) -> jax.Array:
+    """MXU contraction: one-hot rows dotted against the leaf table, tree
+    axis batched — per tree a ``[BB, L] @ [L]`` matvec."""
+    L = leaf_tab.shape[1]
+    onehot = (
+        leaf[:, :, None] == jax.lax.iota(jnp.int32, L)[None, None, :]
+    ).astype(jnp.float32)
+    per_tree = jax.lax.dot_general(
+        onehot, leaf_tab,
+        dimension_numbers=(((2,), (1,)), ((1,), (0,))),
+        preferred_element_type=jnp.float32,
+    )                                                            # [BT, BB]
+    return per_tree.T
+
+
+_LEAF_VALUE_FNS = {
+    "onehot": _leaf_values_onehot,
+    "select": _leaf_values_select,
+    "mxu": _leaf_values_mxu,
+}
+
+
+def _pairwise_tree_sum(per_tree: jax.Array) -> jax.Array:
+    """Deterministic contiguous-halves sum over the tree axis: [BB, BT]→[BB].
+
+    Explicit elementwise adds instead of ``jnp.sum`` — a ``reduce``'s
+    association is implementation-defined and shifts with how XLA fuses the
+    surrounding graph, which would break the leaf-gather paths' bit-for-bit
+    parity (their per-tree values are identical; only a reassociated final
+    sum could diverge). Handles non-power-of-two BT by carrying the odd
+    trailing element.
+    """
+    n = per_tree.shape[1]
+    while n > 1:
+        half = n // 2
+        summed = per_tree[:, :half] + per_tree[:, half:2 * half]
+        if n % 2:
+            summed = jnp.concatenate([summed, per_tree[:, 2 * half:]], axis=1)
+        per_tree = summed
+        n = per_tree.shape[1]
+    return per_tree[:, 0]
+
+
+def _score_block(
+    x_ref, feat_ref, thr_ref, mlo_ref, mhi_ref, leaf_ref,
+    leaf_gather: str = "onehot",
+) -> jax.Array:
     """One doc-block × tree-block partial score [BB] (steps 1-4 above)."""
     x = x_ref[...]
     feat = feat_ref[...]
     BB, F = x.shape
     BT, N = feat.shape
-    L = leaf_ref.shape[1]
 
     # (1) Feature gather via one-hot MXU matmul: xf[b, t*N+n] = x[b, feat[t,n]].
     flat_feat = feat.reshape(BT * N)
@@ -116,13 +237,10 @@ def _score_block(x_ref, feat_ref, thr_ref, mlo_ref, mhi_ref, leaf_ref) -> jax.Ar
     and_lo = m_lo[..., 0]
     and_hi = m_hi[..., 0]
 
-    # (4) Exit leaf → leaf-value contraction.
+    # (4) Exit leaf → leaf-value resolution via the selected gather path.
     leaf = _ctz64(and_hi, and_lo)                                   # [BB, BT]
-    leaf_onehot = (
-        leaf[:, :, None] == jax.lax.iota(jnp.int32, L)[None, None, :]
-    ).astype(jnp.float32)
-    per_tree = jnp.sum(leaf_onehot * leaf_ref[...][None, :, :], axis=2)  # [BB, BT]
-    return per_tree.sum(axis=1)                                     # [BB]
+    per_tree = _LEAF_VALUE_FNS[leaf_gather](leaf, leaf_ref[...])    # [BB, BT]
+    return _pairwise_tree_sum(per_tree)                             # [BB]
 
 
 def _forest_score_kernel(
@@ -133,8 +251,13 @@ def _forest_score_kernel(
     mhi_ref,      # [BT, N] u32
     leaf_ref,     # [BT, L] f32
     out_ref,      # [BB] f32 (accumulated over tree-block grid axis)
+    *,
+    leaf_gather: str,
 ):
-    partial = _score_block(x_ref, feat_ref, thr_ref, mlo_ref, mhi_ref, leaf_ref)
+    partial = _score_block(
+        x_ref, feat_ref, thr_ref, mlo_ref, mhi_ref, leaf_ref,
+        leaf_gather=leaf_gather,
+    )
 
     # (5) Accumulate across the sequential tree-block axis.
     @pl.when(pl.program_id(1) == 0)
@@ -149,8 +272,12 @@ def _forest_score_segments_kernel(
     out_ref,      # [BB, S] f32 — per-segment partials, accumulated over j
     *,
     seg_block_starts: tuple[int, ...],
+    leaf_gather: str,
 ):
-    partial = _score_block(x_ref, feat_ref, thr_ref, mlo_ref, mhi_ref, leaf_ref)
+    partial = _score_block(
+        x_ref, feat_ref, thr_ref, mlo_ref, mhi_ref, leaf_ref,
+        leaf_gather=leaf_gather,
+    )
 
     # Segment id of this tree block: static unrolled predicate sum (scalar).
     j = pl.program_id(1)
@@ -174,10 +301,21 @@ def _tree_specs(block_t: int, n: int, leaves: int, offset: int):
     return [spec(n), spec(n), spec(n), spec(n), spec(leaves)]
 
 
+def _check_leaf_gather(leaf_gather: str, n_leaves: int) -> None:
+    assert leaf_gather in LEAF_GATHERS, leaf_gather
+    if leaf_gather == "select":
+        assert n_leaves & (n_leaves - 1) == 0, (
+            f"leaf_gather='select' needs a power-of-two leaf axis, got "
+            f"{n_leaves} — use repro.kernels.ops.padded_forest (it pads the "
+            f"leaf axis and tags the layout) or pass 'mxu'/'onehot'"
+        )
+
+
 @functools.partial(
     jax.jit,
     static_argnames=(
-        "block_b", "block_t", "tree_block_offset", "n_tree_blocks", "interpret"
+        "block_b", "block_t", "tree_block_offset", "n_tree_blocks",
+        "leaf_gather", "interpret",
     ),
 )
 def forest_score_pallas(
@@ -192,6 +330,7 @@ def forest_score_pallas(
     block_t: int = 16,
     tree_block_offset: int = 0,
     n_tree_blocks: int | None = None,
+    leaf_gather: str = "onehot",
     interpret: bool = True,
 ) -> jax.Array:
     B, F = x.shape
@@ -199,6 +338,7 @@ def forest_score_pallas(
     L = leaf_value.shape[1]
     assert B % block_b == 0 and T % block_t == 0, (B, block_b, T, block_t)
     assert N & (N - 1) == 0, f"node axis must be a power of two, got {N}"
+    _check_leaf_gather(leaf_gather, L)
     total_blocks = T // block_t
     if n_tree_blocks is None:
         n_tree_blocks = total_blocks - tree_block_offset
@@ -208,7 +348,7 @@ def forest_score_pallas(
 
     grid = (B // block_b, n_tree_blocks)
     return pl.pallas_call(
-        _forest_score_kernel,
+        functools.partial(_forest_score_kernel, leaf_gather=leaf_gather),
         grid=grid,
         in_specs=[
             pl.BlockSpec((block_b, F), lambda i, j: (i, 0)),
@@ -223,7 +363,8 @@ def forest_score_pallas(
 @functools.partial(
     jax.jit,
     static_argnames=(
-        "seg_block_starts", "n_tree_blocks", "block_b", "block_t", "interpret"
+        "seg_block_starts", "n_tree_blocks", "block_b", "block_t",
+        "leaf_gather", "interpret",
     ),
 )
 def forest_score_segments_pallas(
@@ -238,6 +379,7 @@ def forest_score_segments_pallas(
     n_tree_blocks: int,                 # launch covers blocks [0, n)
     block_b: int = 256,
     block_t: int = 16,
+    leaf_gather: str = "onehot",
     interpret: bool = True,
 ) -> jax.Array:
     """Single launch → per-segment partial scores ``[B, S]``.
@@ -251,6 +393,7 @@ def forest_score_segments_pallas(
     L = leaf_value.shape[1]
     assert B % block_b == 0 and T % block_t == 0, (B, block_b, T, block_t)
     assert N & (N - 1) == 0, f"node axis must be a power of two, got {N}"
+    _check_leaf_gather(leaf_gather, L)
     assert seg_block_starts[0] == 0
     assert list(seg_block_starts) == sorted(set(seg_block_starts))
     assert 0 < n_tree_blocks <= T // block_t
@@ -259,7 +402,9 @@ def forest_score_segments_pallas(
 
     grid = (B // block_b, n_tree_blocks)
     kernel = functools.partial(
-        _forest_score_segments_kernel, seg_block_starts=seg_block_starts
+        _forest_score_segments_kernel,
+        seg_block_starts=seg_block_starts,
+        leaf_gather=leaf_gather,
     )
     return pl.pallas_call(
         kernel,

@@ -9,14 +9,28 @@ Padded-buffer caching
 ---------------------
 :func:`padded_forest` builds the kernel-aligned device buffers for an
 ensemble ONCE and caches them on the :class:`TreeEnsemble` instance (keyed
-by segment boundaries × tree-block size), so repeated scoring — the serving
-hot path — never re-pads. Segment boundaries (cascade sentinels) need NOT be
-tree-block aligned: each segment is padded independently with no-op trees
-(threshold ``+inf`` ⇒ always-true ⇒ all-ones mask; leaf values 0), which
-makes every segment start block-aligned by construction. Head and tail of a
-cascade then score from the same buffer set via ``tree_block_offset`` /
-``n_tree_blocks`` — :func:`repro.forest.ensemble.slice_trees` re-padding is
-gone from the hot path.
+by segment boundaries × tree-block size × leaf-gather path), so repeated
+scoring — the serving hot path — never re-pads. Segment boundaries (cascade
+sentinels) need NOT be tree-block aligned: each segment is padded
+independently with no-op trees (threshold ``+inf`` ⇒ always-true ⇒ all-ones
+mask; leaf values 0), which makes every segment start block-aligned by
+construction. Head and tail of a cascade then score from the same buffer
+set via ``tree_block_offset`` / ``n_tree_blocks`` —
+:func:`repro.forest.ensemble.slice_trees` re-padding is gone from the hot
+path.
+
+Leaf-gather layout
+------------------
+The buffer set carries a per-path leaf layout: the kernel's select-tree
+leaf gather (:mod:`repro.kernels.forest_score`, ``leaf_gather="select"``)
+walks the leaf-index bits over contiguous halves of the value array, so it
+needs the leaf axis padded to a power of two (``leaf_layout="pow2"``,
+padding values 0 — never selected, the ctz leaf index stays below the real
+leaf count). The one-hot and MXU paths read the native leaf axis
+(``leaf_layout="native"``). ``leaf_gather="auto"`` (the default) resolves
+via :func:`repro.kernels.forest_score.resolve_leaf_gather`: select tree up
+to ``LEAF_SELECT_MAX`` padded leaves, MXU contraction above. All paths are
+bit-exact with each other, so the resolved choice is a pure perf knob.
 
 Launch accounting
 -----------------
@@ -54,12 +68,20 @@ import numpy as np
 
 from repro.forest.ensemble import TreeEnsemble
 from repro.kernels.forest_score import (
+    _next_pow2,
     forest_score_pallas,
     forest_score_segments_pallas,
+    resolve_leaf_gather,
 )
 
 LANE = 128
 ALL_ONES = np.uint32(0xFFFFFFFF)
+
+# Default doc-block size of every kernel dispatch below. Decision-time
+# pricing (repro.metrics.speedup.progressive_cost_model, block_b-rounded
+# survivor counts) must quote the same number, so it lives here as THE
+# engine constant rather than as scattered literals.
+ENGINE_BLOCK_B = 256
 
 # Bound on cached (boundaries, block_t) buffer layouts per ensemble: a
 # long-running service sweeping sentinel configs must not leak device
@@ -108,8 +130,15 @@ def _pad_to(x: jax.Array, axis: int, multiple: int, value=0):
     return jnp.pad(x, widths, constant_values=value)
 
 
-def _next_pow2(n: int) -> int:
-    return 1 << (n - 1).bit_length()
+def effective_block_b(block_b: int, n_rows: int) -> int:
+    """Doc-block size a launch over ``n_rows`` rows actually uses: the
+    requested block, shrunk to the padded row count for small batches.
+    THE block policy — :func:`_prep_x` applies it to every dispatch and
+    the decision-time cost model
+    (:func:`repro.metrics.speedup.progressive_cost_model`) imports it to
+    price staged stages, so the two cannot drift apart.
+    """
+    return min(block_b, _next_pow2(max(int(n_rows), 8)))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -125,12 +154,15 @@ class PaddedForest:
     threshold: jax.Array   # [T_pad, N_pad] f32
     mask_lo: jax.Array     # [T_pad, N_pad] u32
     mask_hi: jax.Array     # [T_pad, N_pad] u32
-    leaf_value: jax.Array  # [T_pad, L] f32
+    leaf_value: jax.Array  # [T_pad, L_layout] f32 — see leaf_layout
     base_score: jax.Array  # [] f32
     boundaries: tuple[int, ...]       # cumulative tree-unit segment ends
     seg_block_starts: tuple[int, ...]  # per-segment start, in blocks
     seg_blocks: tuple[int, ...]        # per-segment length, in blocks
     block_t: int
+    leaf_gather: str = "onehot"   # resolved kernel path for this buffer set
+    leaf_layout: str = "native"   # "pow2": leaf axis padded for the select
+    #   path's contiguous-half bit walk; "native": ensemble leaf axis as-is
 
     @property
     def n_segments(self) -> int:
@@ -145,14 +177,19 @@ def padded_forest(
     ens: TreeEnsemble,
     boundaries: tuple[int, ...] | None = None,
     block_t: int = 16,
+    leaf_gather: str = "auto",
 ) -> PaddedForest:
     """Pad once, score many: cached kernel-aligned buffers for ``ens``.
 
     ``boundaries`` are cumulative segment ends in tree units (ascending,
-    last == ``ens.n_trees``); ``None`` means one segment. The result is
-    cached on the ensemble instance keyed by ``(boundaries, block_t)``,
-    bounded to the :data:`PADDED_CACHE_MAX` most recently used layouts
-    (LRU eviction — sweeping sentinel configs must not leak device memory).
+    last == ``ens.n_trees``); ``None`` means one segment. ``leaf_gather``
+    picks the kernel's leaf-value resolution path (and with it the leaf
+    buffer layout — the select tree needs a power-of-two leaf axis);
+    ``"auto"`` resolves per :func:`~repro.kernels.forest_score.resolve_leaf_gather`.
+    The result is cached on the ensemble instance keyed by ``(boundaries,
+    block_t, leaf_gather)``, bounded to the :data:`PADDED_CACHE_MAX` most
+    recently used layouts (LRU eviction — sweeping sentinel configs must
+    not leak device memory).
     """
     T, N = ens.feature.shape
     boundaries = tuple(boundaries) if boundaries is not None else (T,)
@@ -160,12 +197,14 @@ def padded_forest(
     assert all(b > 0 for b in boundaries)
     assert list(boundaries) == sorted(set(boundaries)), boundaries
     block_t = min(block_t, _next_pow2(max(T, 1)))
+    if leaf_gather == "auto":
+        leaf_gather = resolve_leaf_gather(ens.n_leaves)
 
     cache = getattr(ens, "_padded_cache", None)
     if cache is None:
         cache = OrderedDict()
         object.__setattr__(ens, "_padded_cache", cache)
-    key = (boundaries, block_t)
+    key = (boundaries, block_t, leaf_gather)
     if key in cache:
         cache.move_to_end(key)
         return cache[key]
@@ -176,10 +215,12 @@ def padded_forest(
     # outlive the trace. ensure_compile_time_eval escapes the trace: all
     # padding ops below execute eagerly on the concrete ensemble arrays.
     with jax.ensure_compile_time_eval():
-        return _build_padded_forest(ens, cache, key, boundaries, block_t)
+        return _build_padded_forest(
+            ens, cache, key, boundaries, block_t, leaf_gather
+        )
 
 
-def _build_padded_forest(ens, cache, key, boundaries, block_t):
+def _build_padded_forest(ens, cache, key, boundaries, block_t, leaf_gather):
     N = ens.feature.shape[1]
     n_pad = _next_pow2(max(N, 2))
     # Padded nodes: threshold +inf ⇒ predicate always true ⇒ all-ones mask.
@@ -188,6 +229,15 @@ def _build_padded_forest(ens, cache, key, boundaries, block_t):
     mlo = _pad_to(ens.mask_lo, 1, n_pad, ALL_ONES)
     mhi = _pad_to(ens.mask_hi, 1, n_pad, ALL_ONES)
     leaf = ens.leaf_value.astype(jnp.float32)
+    # Per-path leaf layout: the select tree's contiguous-half bit walk
+    # needs a power-of-two leaf axis; pad values are 0 and unreachable
+    # (every ctz leaf index is below the real leaf count).
+    leaf_layout = "native"
+    if leaf_gather == "select":
+        Lp = _next_pow2(max(ens.n_leaves, 1))
+        if Lp != ens.n_leaves:
+            leaf = _pad_to(leaf, 1, Lp)
+        leaf_layout = "pow2"
 
     # Per-segment tree padding: no-op trees (always-true nodes, zero leaves).
     parts = {name: [] for name in ("feat", "thr", "mlo", "mhi", "leaf")}
@@ -216,6 +266,8 @@ def _build_padded_forest(ens, cache, key, boundaries, block_t):
         seg_block_starts=tuple(seg_block_starts),
         seg_blocks=tuple(seg_blocks),
         block_t=block_t,
+        leaf_gather=leaf_gather,
+        leaf_layout=leaf_layout,
     )
     cache[key] = pf
     while len(cache) > PADDED_CACHE_MAX:
@@ -225,7 +277,7 @@ def _build_padded_forest(ens, cache, key, boundaries, block_t):
 
 def _prep_x(X: jax.Array, block_b: int):
     B = X.shape[0]
-    block_b = min(block_b, _next_pow2(max(B, 8)))
+    block_b = effective_block_b(block_b, B)
     x = _pad_to(X.astype(jnp.float32), 0, block_b)
     x = _pad_to(x, 1, LANE)
     return x, block_b
@@ -237,7 +289,7 @@ def forest_score_range(
     seg_lo: int = 0,
     seg_hi: int | None = None,
     *,
-    block_b: int = 256,
+    block_b: int = ENGINE_BLOCK_B,
     interpret: bool | None = None,
 ) -> jax.Array:
     """Score ``X: [B, F]`` through segments ``[seg_lo, seg_hi)`` — 1 launch.
@@ -259,6 +311,7 @@ def forest_score_range(
         block_t=pf.block_t,
         tree_block_offset=pf.seg_block_starts[seg_lo],
         n_tree_blocks=sum(pf.seg_blocks[seg_lo:seg_hi]),
+        leaf_gather=pf.leaf_gather,
         interpret=interpret,
     )
     base = pf.base_score if seg_lo == 0 else jnp.zeros_like(pf.base_score)
@@ -270,7 +323,7 @@ def forest_score_segments(
     X: jax.Array,
     n_segments: int | None = None,
     *,
-    block_b: int = 256,
+    block_b: int = ENGINE_BLOCK_B,
     interpret: bool | None = None,
 ) -> jax.Array:
     """Per-segment partial scores ``[B, S]`` for segments ``[0, S)`` — 1 launch.
@@ -292,6 +345,7 @@ def forest_score_segments(
         n_tree_blocks=pf.seg_block_starts[S - 1] + pf.seg_blocks[S - 1],
         block_b=block_b,
         block_t=pf.block_t,
+        leaf_gather=pf.leaf_gather,
         interpret=interpret,
     )
     return seg_scores[:B]
@@ -301,10 +355,11 @@ def forest_score(
     ens: TreeEnsemble,
     X: jax.Array,
     *,
-    block_b: int = 256,
+    block_b: int = ENGINE_BLOCK_B,
     block_t: int = 16,
+    leaf_gather: str = "auto",
     interpret: bool | None = None,
 ) -> jax.Array:
     """Score ``X: [B, F]`` through the ensemble with the Pallas kernel."""
-    pf = padded_forest(ens, block_t=block_t)
+    pf = padded_forest(ens, block_t=block_t, leaf_gather=leaf_gather)
     return forest_score_range(pf, X, block_b=block_b, interpret=interpret)

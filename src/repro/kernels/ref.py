@@ -20,6 +20,14 @@ def _ctz64(hi, lo):
     return jnp.where(lo_nz, ctz32, ctz32 + jnp.uint32(32)).astype(jnp.int32)
 
 
+def leaf_values_ref(leaf: jax.Array, leaf_value: jax.Array) -> jax.Array:
+    """Gather oracle for the kernel's leaf-gather paths: a plain
+    ``take_along_axis`` of ``leaf_value[t, leaf[b, t]]`` — the exact values
+    every in-kernel path (one-hot, select tree, MXU contraction) must
+    reproduce bit-for-bit. ``leaf: [B, T] i32``, ``leaf_value: [T, L]``."""
+    return jnp.take_along_axis(leaf_value[None], leaf[:, :, None], axis=2)[..., 0]
+
+
 def forest_score_ref(x, feature, threshold, mask_lo, mask_hi, leaf_value):
     """x: [B, F]; tree arrays [T, N] / [T, L] → scores [B] f32."""
     xf = x[:, feature]                                  # [B, T, N]
@@ -29,5 +37,5 @@ def forest_score_ref(x, feature, threshold, mask_lo, mask_hi, leaf_value):
     and_lo = jax.lax.reduce(m_lo, ALL_ONES, jax.lax.bitwise_and, dimensions=(2,))
     and_hi = jax.lax.reduce(m_hi, ALL_ONES, jax.lax.bitwise_and, dimensions=(2,))
     leaf = _ctz64(and_hi, and_lo)                       # [B, T]
-    per_tree = jnp.take_along_axis(leaf_value[None], leaf[:, :, None], axis=2)[..., 0]
+    per_tree = leaf_values_ref(leaf, leaf_value)
     return per_tree.sum(axis=1).astype(jnp.float32)

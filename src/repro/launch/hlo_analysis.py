@@ -177,7 +177,6 @@ class HloCost:
 def analyze(hlo: str) -> HloCost:
     comps, entry = parse_module(hlo)
     cost = HloCost()
-    visited_fusions: set[str] = set()
 
     def walk(comp: str, mult: float, in_fusion: bool):
         instrs = comps.get(comp, [])

@@ -16,7 +16,6 @@ import numpy as np
 from repro.configs import get_smoke_config, list_archs
 from repro.configs.base import (
     ForestConfig,
-    NequIPConfig,
     RecSysConfig,
     ShapeSpec,
     TransformerConfig,

@@ -16,7 +16,6 @@ import os
 import time
 
 import jax
-import numpy as np
 
 from repro.configs import get_config, get_smoke_config, list_archs
 from repro.configs.base import ShapeSpec

@@ -24,8 +24,15 @@ variant) or inside (device variant) the compiled step.
 
 from __future__ import annotations
 
+import math
+
 import jax
 import jax.numpy as jnp
+
+# THE kernel block policy, not a mirror of it: the same function _prep_x
+# applies to every dispatch prices the staged stages below, so the cost
+# model cannot drift from what the kernel actually scores.
+from repro.kernels.ops import effective_block_b as _stage_block
 
 
 def trees_traversed(
@@ -93,6 +100,7 @@ def progressive_cost_model(
     mode: str,
     launch_overhead_trees: float = 0.0,
     stage_capacities=None,
+    block_b: int = 1,
 ) -> float:
     """Estimated device cost of one progressive batch, in tree-traversal
     equivalents, for picking fused vs per-stage-tail execution.
@@ -102,22 +110,28 @@ def progressive_cost_model(
     ``sentinels[-1]`` head trees in one segmented launch; the staged head
     scores segment ``k`` only on the stage-(k−1) survivors but pays one
     extra launch (dispatch + gather/scatter HBM round trip) per stage,
-    priced at ``launch_overhead_trees`` doc·tree equivalents each. When
-    ``stage_capacities`` is given, staged stage work is priced at
-    ``min(capacity, survivors)`` per stage. This is a deliberate
-    decision-heuristic choice, not an exact work model: the staged kernel
-    really does score the full capacity-sized compacted block (padding
-    slots gather duplicate rows), so ``min`` undercounts the block slack —
-    but the serving buckets are oversized on purpose (headroom multiplier,
-    power-of-two rounding, a cold-start floor that never shrinks), and
-    pricing that safety slack as real work would lock the pick into fused
-    on exactly the sparse traffic where the measured bench shows staged
-    winning. The survivor estimate prices the useful work; the capacity
-    clip keeps dense traffic honest. (A finer model could price
-    block-rounded survivor counts — tracked in ROADMAP.) Both modes run
-    the same compacted tail. Host-side arithmetic only — never traced,
-    never syncs. :func:`progressive_cost_model_device` is the traced
-    mirror used by the in-program mode pick.
+    priced at ``launch_overhead_trees`` doc·tree equivalents each.
+
+    Staged stage pricing: survivors are first rounded UP to the stage's
+    effective kernel doc-block (``block_b`` clipped per
+    ``repro.kernels.ops._prep_x`` — the kernel cannot score less than one
+    block), then clipped at the stage capacity when ``stage_capacities`` is
+    given. ``block_b=1`` (the default) disables the rounding and reproduces
+    the bare ``min(capacity, survivors)`` model. This sits deliberately
+    between two wrong extremes: pricing the full capacity block would count
+    the serving buckets' safety slack (headroom multiplier, power-of-two
+    rounding, a cold-start floor that never shrinks) as real work and lock
+    the pick into fused on exactly the sparse traffic where the measured
+    bench shows staged winning, while pricing raw survivors pretends a
+    3-survivor stage is ~free when the kernel still scores a full
+    ``block_b`` doc block. Block-rounded survivors price the work the
+    kernel actually cannot avoid. Both modes run the same compacted tail
+    (block slack there cancels out of the comparison). Host-side
+    arithmetic only — never traced, never syncs.
+    :func:`progressive_cost_model_device` is the traced mirror used by the
+    in-program mode pick; callers must hand BOTH the same ``block_b``
+    (serving passes ``repro.kernels.ops.ENGINE_BLOCK_B``) or the picks can
+    disagree.
     """
     S = len(sentinels)
     assert mode in ("fused", "staged"), mode
@@ -129,11 +143,18 @@ def progressive_cost_model(
         head = n_docs * sentinels[-1]
         launches = 1 + (1 if has_tail else 0)
     else:
-        if stage_capacities is not None:
-            assert len(stage_capacities) == S
+        caps = (
+            list(stage_capacities)
+            if stage_capacities is not None
+            else [n_docs] * S
+        )
+        assert len(caps) == S
+        if block_b > 1:
             surv = [
-                min(float(c), s) for c, s in zip(stage_capacities, surv)
+                math.ceil(s / _stage_block(block_b, c)) * _stage_block(block_b, c)
+                for c, s in zip(caps, surv)
             ]
+        surv = [min(float(c), float(s)) for c, s in zip(caps, surv)]
         head = n_docs * sentinels[0] + sum(
             surv[k] * (sentinels[k + 1] - sentinels[k]) for k in range(S - 1)
         )
@@ -148,19 +169,22 @@ def progressive_cost_model_device(
     n_trees: int,
     launch_overhead_trees: float = 0.0,
     stage_capacities=None,
+    block_b: int = 1,
 ):
     """Traced mirror of :func:`progressive_cost_model` for the IN-PROGRAM
     mode pick: returns ``(fused_cost, staged_cost)`` as f32 device scalars.
 
     Same arithmetic, same units (doc·tree traversals), same staged pricing
-    at ``min(capacity, survivors)`` — only the survivor estimates are a
-    traced operand (the service's smoothed continue rates live on device),
-    so ``staged_cost < fused_cost`` can feed a ``lax.cond`` without a host
-    round trip. ``n_docs``, ``sentinels``, ``stage_capacities`` and the
-    overhead are static configuration baked into the trace. Chooses the
-    same branch as the host model away from exact cost ties (the host
-    compares in float64, this in float32; all inputs are small exact
-    integers/EMAs, so ties are the only divergence point).
+    (block-rounded survivors clipped at capacity) — only the survivor
+    estimates are a traced operand (the service's smoothed continue rates
+    live on device), so ``staged_cost < fused_cost`` can feed a
+    ``lax.cond`` without a host round trip. ``n_docs``, ``sentinels``,
+    ``stage_capacities``, ``block_b`` and the overhead are static
+    configuration baked into the trace. Chooses the same branch as the
+    host model away from exact cost ties (the host compares in float64,
+    this in float32; all inputs are small exact integers/EMAs, so ties —
+    and survivor estimates landing exactly on a block edge — are the only
+    divergence points).
     """
     S = len(sentinels)
     assert stage_survivors.shape == (S,), (stage_survivors.shape, S)
@@ -172,12 +196,18 @@ def progressive_cost_model_device(
         + tail
         + launch_overhead_trees * (1 + (1 if has_tail else 0))
     )
+    caps = (
+        list(stage_capacities) if stage_capacities is not None
+        else [n_docs] * S
+    )
+    assert len(caps) == S
     s_surv = surv
-    if stage_capacities is not None:
-        assert len(stage_capacities) == S
-        s_surv = jnp.minimum(
-            surv, jnp.asarray(stage_capacities, jnp.float32)
+    if block_b > 1:
+        effs = jnp.asarray(
+            [_stage_block(block_b, c) for c in caps], jnp.float32
         )
+        s_surv = jnp.ceil(s_surv / effs) * effs
+    s_surv = jnp.minimum(s_surv, jnp.asarray(caps, jnp.float32))
     deltas = jnp.asarray(
         [sentinels[k + 1] - sentinels[k] for k in range(S - 1)], jnp.float32
     )

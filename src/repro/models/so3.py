@@ -100,7 +100,6 @@ def clebsch_gordan(l1: int, l2: int, l3: int) -> np.ndarray:
         rows.append(K)
     K = np.concatenate(rows, axis=0)
     _, s, vh = np.linalg.svd(K)
-    null = vh[s.shape[0] - 1:] if vh.shape[0] == s.shape[0] else vh[s.shape[0]:]
     # vec ordering: C[m3, m1, m2] flattened with (m1 m2) major, m3 minor.
     c = vh[-1].reshape(d1 * d2, d3).T.reshape(d3, d1, d2)
     resid = s[-1]

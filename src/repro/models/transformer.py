@@ -23,7 +23,6 @@ from typing import Any
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs.base import TransformerConfig
 from repro.distributed.sharding import constrain

@@ -51,11 +51,11 @@ from typing import Callable, Sequence
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core.cascade import CascadeRanker, bucket_capacity
 from repro.core.lear import LearClassifier, augment_features
 from repro.forest.ensemble import TreeEnsemble
+from repro.kernels.ops import ENGINE_BLOCK_B
 from repro.metrics.speedup import (
     progressive_cost_model,
     trees_traversed_progressive,
@@ -204,8 +204,9 @@ class RankingService:
         Until the first batch lands there are no observed rates — default
         fused (1 segmented + ≤1 tail launch is the safe floor). After
         that, price both modes with the cost model on the smoothed
-        survivor counts — staged stage work at ``min(capacity, survivors)``
-        per stage — and take the cheaper.
+        survivor counts — staged stage work at block-rounded survivors
+        clipped at capacity (``block_b=ENGINE_BLOCK_B``, matching the
+        in-program pick) — and take the cheaper.
         """
         if self.execution_mode != "auto":
             return self.execution_mode
@@ -219,6 +220,7 @@ class RankingService:
                 n_docs, self._stage_ema, self.sentinels, T, m,
                 launch_overhead_trees=self.launch_overhead_trees,
                 stage_capacities=capacities,
+                block_b=ENGINE_BLOCK_B,
             )
             for m in ("fused", "staged")
         }

@@ -1,0 +1,116 @@
+"""Blocked pairwise-count ranking ≡ direct ≡ stable-argsort, exactly.
+
+The blocked compare tiles the D×D predicate but counts the SAME pairs with
+the SAME float comparisons and index tie-break, so its ranks must equal
+the direct path's and the stable-argsort oracle's integer-for-integer —
+across the auto cutoff, on tie-heavy inputs, under masks, and for
+non-tile-multiple candidate counts (where -inf padding must never beat a
+real document).
+"""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core.features import (
+    RANK_BLOCK_D,
+    RANK_BLOCKED_MIN_D,
+    augment_features,
+    query_ranks,
+    query_ranks_blocked,
+    query_ranks_direct,
+)
+from repro.metrics.ranking import rank_from_scores
+
+
+def _assert_all_equal(s, m):
+    oracle = np.asarray(rank_from_scores(s, m))
+    direct = np.asarray(query_ranks_direct(s, m))
+    blocked = np.asarray(query_ranks_blocked(s, m))
+    auto = np.asarray(query_ranks(s, m))
+    np.testing.assert_array_equal(direct, oracle)
+    np.testing.assert_array_equal(blocked, oracle)
+    np.testing.assert_array_equal(auto, oracle)
+
+
+@pytest.mark.parametrize(
+    "D", [8, 64, RANK_BLOCK_D, RANK_BLOCKED_MIN_D, RANK_BLOCKED_MIN_D + 1,
+          300, 513]
+)
+def test_blocked_equals_argsort_across_cutoff(D):
+    rng = np.random.default_rng(D)
+    Q = 3
+    s = jnp.asarray(rng.normal(size=(Q, D)).astype(np.float32))
+    m = jnp.asarray(rng.random((Q, D)) < 0.8)
+    _assert_all_equal(s, m)
+
+
+@pytest.mark.parametrize("D", [96, 257, 400])
+def test_blocked_tie_heavy(D):
+    """Scores on a tiny integer grid: masses of exact ties, resolved by
+    the document-index tie-break — the semantics the blocked tiling must
+    not perturb at tile borders."""
+    rng = np.random.default_rng(1000 + D)
+    Q = 4
+    s = jnp.asarray(rng.integers(0, 3, size=(Q, D)).astype(np.float32))
+    m = jnp.asarray(rng.random((Q, D)) < 0.9)
+    _assert_all_equal(s, m)
+
+
+def test_blocked_all_equal_scores_full_and_empty_mask():
+    D = RANK_BLOCKED_MIN_D + 59   # non-multiple of the tile edge
+    s = jnp.zeros((2, D), jnp.float32)
+    _assert_all_equal(s, jnp.ones((2, D), bool))
+    _assert_all_equal(s, jnp.zeros((2, D), bool))
+
+
+def test_blocked_small_tiles_exercise_multi_block():
+    """A tiny block_d forces many row/column tiles (including ragged last
+    tiles) on a small D — the loop structure itself under test."""
+    rng = np.random.default_rng(2)
+    s = jnp.asarray(rng.integers(0, 4, size=(3, 45)).astype(np.float32))
+    m = jnp.asarray(rng.random((3, 45)) < 0.7)
+    got = np.asarray(query_ranks_blocked(s, m, block_d=16))
+    np.testing.assert_array_equal(got, np.asarray(rank_from_scores(s, m)))
+
+
+def test_query_ranks_dispatch():
+    rng = np.random.default_rng(3)
+    small = jnp.asarray(
+        rng.normal(size=(2, RANK_BLOCKED_MIN_D)).astype(np.float32)
+    )
+    large = jnp.asarray(
+        rng.normal(size=(2, RANK_BLOCKED_MIN_D + 1)).astype(np.float32)
+    )
+    m_small = jnp.ones(small.shape, bool)
+    m_large = jnp.ones(large.shape, bool)
+    # Explicit methods agree with auto on both sides of the cutoff.
+    for s, m in ((small, m_small), (large, m_large)):
+        np.testing.assert_array_equal(
+            np.asarray(query_ranks(s, m)),
+            np.asarray(query_ranks(s, m, method="direct")),
+        )
+        np.testing.assert_array_equal(
+            np.asarray(query_ranks(s, m)),
+            np.asarray(query_ranks(s, m, method="blocked")),
+        )
+
+
+def test_augment_features_identical_above_cutoff():
+    """The device-resident feature build is unchanged by the blocked
+    dispatch: augmented features above the cutoff equal a direct-ranked
+    build exactly."""
+    rng = np.random.default_rng(4)
+    Q, D, F = 2, RANK_BLOCKED_MIN_D + 64, 5
+    X = jnp.asarray(rng.normal(size=(Q, D, F)).astype(np.float32))
+    partial = jnp.asarray(rng.integers(0, 5, size=(Q, D)).astype(np.float32))
+    mask = jnp.asarray(rng.random((Q, D)) < 0.85)
+    aug = np.asarray(augment_features(X, partial, mask))
+    # Rebuild the rank feature from the direct path: identical plane.
+    ranks = np.asarray(
+        query_ranks_direct(partial, mask)
+    ).astype(np.float32)
+    np.testing.assert_array_equal(
+        aug[..., F + 1], np.where(np.asarray(mask), ranks, 0.0)
+    )

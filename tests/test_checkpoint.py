@@ -51,7 +51,6 @@ def test_keep_last_gc(tmp_path):
 def test_training_resume_is_exact(tmp_path):
     """Train 6 steps straight vs 3 + checkpoint + restore + 3: identical."""
     opt = adamw(1e-2)
-    rng = np.random.default_rng(0)
     step = jax.jit(make_train_step(_toy_loss, opt))
 
     def batch_at(i):

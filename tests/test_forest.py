@@ -1,13 +1,11 @@
 """Forest substrate tests: scorer equivalence, slicing, GBDT training."""
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.forest import (
     GBDTParams,
-    TreeEnsemble,
     score_bitvector,
     score_level,
     score_numpy_oracle,

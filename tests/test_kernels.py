@@ -1,6 +1,5 @@
 """Pallas forest kernel: shape/dtype sweep vs the pure-jnp oracle."""
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

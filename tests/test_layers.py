@@ -1,6 +1,5 @@
 """Correctness of the flash-style blockwise attention vs naive attention."""
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

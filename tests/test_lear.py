@@ -17,7 +17,6 @@ from repro.core import (
 )
 from repro.data import make_letor_dataset
 from repro.forest import GBDTParams, score_bitvector, train_lambdamart
-from repro.forest.ensemble import random_ensemble
 from repro.metrics import mean_ndcg, precision_recall
 
 

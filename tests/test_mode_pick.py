@@ -103,6 +103,78 @@ def test_cost_model_prices_staged_at_min_capacity_peak():
         np.testing.assert_allclose(float(staged_d), staged_h, rtol=1e-6)
 
 
+def test_cost_model_block_rounded_survivor_pricing():
+    """ROADMAP fix: staged stage work is priced at block_b-ROUNDED survivor
+    counts clipped at capacity — a 3-survivor stage still costs one full
+    kernel doc block, but never more than the capacity block."""
+    ema = [3.0, 3.0, 3.0]
+    caps = [512, 512, 512]
+    priced = progressive_cost_model(
+        N_DOCS, ema, SENTINELS, N_TREES, "staged",
+        stage_capacities=caps, block_b=256,
+    )
+    # Stages 1..2 price ceil(3/256)*256 = 256 docs; the tail stays at the
+    # raw survivor estimate (identical in both modes — cancels out).
+    expect = N_DOCS * 32 + 256 * 32 + 256 * 32 + 3.0 * (N_TREES - 96)
+    assert priced == pytest.approx(expect)
+
+    # Tight bucket below block_b: the effective block shrinks with the
+    # compacted row count (kernels.ops._prep_x), so cap=128 prices 128.
+    tight = progressive_cost_model(
+        N_DOCS, ema, SENTINELS, N_TREES, "staged",
+        stage_capacities=[128] * 3, block_b=256,
+    )
+    expect_tight = N_DOCS * 32 + 128 * 32 + 128 * 32 + 3.0 * (N_TREES - 96)
+    assert tight == pytest.approx(expect_tight)
+
+    # Rounding clips at capacity for dense traffic.
+    dense = progressive_cost_model(
+        N_DOCS, [600.0] * 3, SENTINELS, N_TREES, "staged",
+        stage_capacities=caps, block_b=256,
+    )
+    expect_dense = N_DOCS * 32 + 512 * 32 + 512 * 32 + 600.0 * (N_TREES - 96)
+    assert dense == pytest.approx(expect_dense)
+
+    # block_b=1 (the default) reproduces the bare min(capacity, survivors)
+    # model — pre-existing callers see no change.
+    bare = progressive_cost_model(
+        N_DOCS, ema, SENTINELS, N_TREES, "staged", stage_capacities=caps
+    )
+    assert bare == pytest.approx(N_DOCS * 32 + 3 * 32 + 3 * 32
+                                 + 3.0 * (N_TREES - 96))
+
+
+@pytest.mark.parametrize("block_b", [1, 64, 256])
+@pytest.mark.parametrize(
+    "rates", [[0.6, 0.3, 0.1], [0.02, 0.01, 0.005], [0.9, 0.8, 0.7]]
+)
+def test_device_pick_matches_host_pick_block_rounded(block_b, rates):
+    """Host/device pick agreement holds with block-rounded pricing — both
+    models must be handed the same block_b (the serving stack passes
+    ENGINE_BLOCK_B to both)."""
+    ema = [r * N_DOCS for r in rates]
+    caps = [1024, 512, 128]
+    for loh in (0.0, 2048.0, 8192.0):
+        host = {
+            m: progressive_cost_model(
+                N_DOCS, ema, SENTINELS, N_TREES, m,
+                launch_overhead_trees=loh, stage_capacities=caps,
+                block_b=block_b,
+            )
+            for m in ("fused", "staged")
+        }
+        fused_d, staged_d = progressive_cost_model_device(
+            N_DOCS, jnp.asarray(ema, jnp.float32), SENTINELS, N_TREES,
+            launch_overhead_trees=loh, stage_capacities=caps,
+            block_b=block_b,
+        )
+        np.testing.assert_allclose(float(fused_d), host["fused"], rtol=1e-5)
+        np.testing.assert_allclose(float(staged_d), host["staged"], rtol=1e-5)
+        host_pick = "staged" if host["staged"] < host["fused"] else "fused"
+        device_pick = "staged" if bool(staged_d < fused_d) else "fused"
+        assert device_pick == host_pick, (block_b, rates, loh)
+
+
 def test_cost_model_no_tail_no_tail_launch_priced():
     """Sentinel at the ensemble end: no tail work, and fused prices a
     single launch (staged S launches)."""

@@ -6,7 +6,6 @@ and the absence of NaNs. Full configs are only ever lowered abstractly by
 the dry-run.
 """
 
-import dataclasses
 
 import jax
 import jax.numpy as jnp

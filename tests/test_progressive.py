@@ -428,9 +428,13 @@ def test_auto_mode_launch_counters_stable_under_cond():
     strategies = [
         (lambda p, m, k=k: ert_continue(p, m, k_s=k)) for k in (16, 10, 6)
     ]
+    # Low launch overhead: the cost model picks staged whenever the EMA is
+    # trusted (at this toy scale the block-rounded survivor pricing
+    # saturates at the capacity block, so the flip comes from the traced
+    # have_ema operand, not the EMA magnitude).
     kwargs = dict(
         sentinels=[10, 20, 35], capacities=128, strategies=strategies,
-        launch_overhead_trees=512.0,
+        launch_overhead_trees=100.0,
     )
 
     ops.reset_launch_counts()
@@ -441,10 +445,11 @@ def test_auto_mode_launch_counters_stable_under_cond():
     jax.block_until_ready(res.scores)
     counts = ops.launch_counts()
     assert counts == {"segmented": 1, "plain": 5}, counts
-    # Branch flip on the cached step: no re-trace, no counter movement.
+    # Branch flip on the cached step (have_ema=False forces the fused
+    # cold-start branch — a traced operand): no re-trace, no counter move.
     res2 = cascade.rank_progressive(
-        X, mask, mode="auto",
-        stage_ema=jnp.asarray([144.0, 144.0, 144.0]), **kwargs,
+        X, mask, mode="auto", have_ema=False,
+        stage_ema=jnp.asarray([4.0, 4.0, 4.0]), **kwargs,
     )
     jax.block_until_ready(res2.scores)
     assert ops.launch_counts() == counts, ops.launch_counts()
@@ -471,10 +476,13 @@ def test_auto_mode_bitexact_with_picked_branch():
         m: cascade.rank_progressive(X, mask, mode=m, **kwargs)
         for m in ("fused", "staged")
     }
-    for ema, expect in (([4.0] * 3, "staged"), ([144.0] * 3, "fused")):
+    # Block-rounded pricing: at this scale staged stage work saturates at
+    # the capacity block, so launch overhead decides — cheap launches pick
+    # staged, expensive launches pick fused. Both cond branches execute.
+    for loh, expect in ((100.0, "staged"), (5000.0, "fused")):
         got = cascade.rank_progressive(
-            X, mask, mode="auto", stage_ema=jnp.asarray(ema),
-            launch_overhead_trees=512.0, **kwargs,
+            X, mask, mode="auto", stage_ema=jnp.asarray([4.0] * 3),
+            launch_overhead_trees=loh, **kwargs,
         )
         assert ("staged" if bool(got.picked_staged) else "fused") == expect
         np.testing.assert_array_equal(

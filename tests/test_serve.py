@@ -9,7 +9,6 @@ controlled exactly per batch without training a classifier.
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.core.lear import LearClassifier
 from repro.forest.ensemble import random_ensemble

@@ -11,7 +11,6 @@ whole module is marked ``slow`` — it runs in the full lane
 serving path covered in tier-1 with untrained forests.
 """
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
