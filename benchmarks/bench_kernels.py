@@ -41,7 +41,8 @@ from repro.core.features import (
 from repro.core.strategies import ert_continue
 from repro.forest.ensemble import random_ensemble, slice_trees
 from repro.forest.scoring import score_bitvector, score_level
-from repro.kernels.forest_score import LEAF_GATHERS, resolve_leaf_gather
+from repro.kernels.forest_score import LEAF_GATHERS
+from repro.kernels.ops import resolve_leaf_gather
 from repro.kernels.ops import (
     ENGINE_BLOCK_B,
     forest_score,

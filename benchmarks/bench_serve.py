@@ -1,0 +1,271 @@
+"""Load-generator benchmark for the continuously-batched serving tier.
+
+Drives :class:`repro.serve.tier.ServingTier` with closed-loop client
+threads at 1×/8×/64× concurrency and measures what the tentpole claims:
+
+- **QPS and latency under concurrency** — per-request submit→result wall
+  times (p50/p99) and aggregate throughput per stream level. The payoff of
+  continuous batching is the 64× row: many concurrent single-query clients
+  get packed into full engine blocks, so QPS must beat the serial
+  baseline by ≥2× (the acceptance bar for the committed full run).
+- **Serial baseline** — the same queries submitted one at a time through a
+  warmed service (each padded to the same ``(1, D)`` bucket the tier would
+  use): what a deployment without the batcher pays.
+- **Warm start** — AOT warmup seconds, and the FIRST real request's
+  latency vs steady-state p50 (must be ≤2×: no compile hides behind
+  request 1).
+- **Zero cold-start overflow** — warmup seeds every bucket's capacities at
+  the physical max, so the service must report 0 overflow docs across the
+  whole run.
+- **Bit-exactness** — a sample of batched responses replayed through a
+  fresh single-query service must match score-for-score, index-for-index.
+
+CPU wall times are NOT TPU predictions (the kernel runs in interpret mode
+here); the *ratios* — batched vs serial QPS, first-request vs steady p50 —
+are the portable part. Results go to ``BENCH_serve.json`` at the repo root
+(full run committed for the perf trajectory); ``main(smoke=True,
+json_path=...)`` is the tiny CI profile used by ``check_bench.py``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import threading
+import time
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.core.lear import LearClassifier
+from repro.forest.ensemble import random_ensemble
+from repro.serve.batching import BucketPolicy
+from repro.serve.ranking_service import RankingService
+from repro.serve.tier import ServingTier
+from repro.serve.warmup import warmup_service
+
+JSON_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_serve.json")
+
+N_FEATURES = 12
+SENTINELS = (8, 28)
+CONCURRENCY = (1, 8, 64)
+
+
+def _make_service(n_trees: int, seed: int = 0) -> RankingService:
+    ens = random_ensemble(seed, n_trees=n_trees, depth=4,
+                          n_features=N_FEATURES)
+    clfs = [
+        LearClassifier(
+            forest=random_ensemble(
+                100 + i, n_trees=10, depth=3, n_features=N_FEATURES + 4
+            ),
+            sentinel=s,
+        )
+        for i, s in enumerate(SENTINELS)
+    ]
+    return RankingService(
+        ens, clfs[0], threshold=0.4, extra_classifiers=clfs[1:],
+        execution_mode="auto", launch_overhead_trees="auto",
+    )
+
+
+def _make_queries(rng, n: int, lo: int, hi: int) -> list[np.ndarray]:
+    return [
+        rng.normal(size=(int(rng.integers(lo, hi + 1)), N_FEATURES))
+        .astype(np.float32)
+        for _ in range(n)
+    ]
+
+
+def _pct(xs, q) -> float:
+    return float(np.percentile(np.asarray(xs), q))
+
+
+def _lat_section(lat_s: list[float], wall_s: float) -> dict:
+    return {
+        "n_queries": len(lat_s),
+        "qps": round(len(lat_s) / wall_s, 2),
+        "p50_ms": round(_pct(lat_s, 50) * 1e3, 3),
+        "p99_ms": round(_pct(lat_s, 99) * 1e3, 3),
+    }
+
+
+def run_serial(n_trees: int, queries, doc_bucket: int) -> dict:
+    """One query at a time through a warmed service — the no-batcher
+    deployment, padded to the same (1, D) shape the tier would use."""
+    svc = _make_service(n_trees)
+    warmup_service(svc, N_FEATURES, [(1, doc_bucket)])
+    lat = []
+    t_wall = time.perf_counter()
+    for q in queries:
+        X = np.zeros((1, doc_bucket, N_FEATURES), np.float32)
+        m = np.zeros((1, doc_bucket), bool)
+        X[0, : len(q)] = q
+        m[0, : len(q)] = True
+        t0 = time.perf_counter()
+        svc.rank_batch(jnp.asarray(X), jnp.asarray(m))
+        lat.append(time.perf_counter() - t0)
+    wall = time.perf_counter() - t_wall
+    out = _lat_section(lat, wall)
+    out["overflow_docs"] = svc.stats.overflow_docs
+    return out
+
+
+def run_stream(tier: ServingTier, queries, concurrency: int) -> dict:
+    """Closed-loop clients: each thread submits its share sequentially and
+    waits for every result before the next submit."""
+    chunks = [queries[i::concurrency] for i in range(concurrency)]
+    lats: list[list[float]] = [[] for _ in range(concurrency)]
+    b0 = dict(
+        flushes_full=tier.batcher.stats.flushes_full,
+        flushes_deadline=tier.batcher.stats.flushes_deadline,
+        batches=tier.service.stats.batches,
+        queries=tier.service.stats.queries,
+    )
+
+    def client(ci: int) -> None:
+        for q in chunks[ci]:
+            t0 = time.perf_counter()
+            tier.submit(q).result(timeout=600)
+            lats[ci].append(time.perf_counter() - t0)
+
+    threads = [
+        threading.Thread(target=client, args=(ci,), daemon=True)
+        for ci in range(concurrency)
+    ]
+    t_wall = time.perf_counter()
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    wall = time.perf_counter() - t_wall
+
+    out = _lat_section([x for per_client in lats for x in per_client], wall)
+    out["concurrency"] = concurrency
+    d_batches = tier.service.stats.batches - b0["batches"]
+    d_queries = tier.service.stats.queries - b0["queries"]
+    out["engine_batches"] = d_batches
+    out["mean_queries_per_batch"] = round(d_queries / max(d_batches, 1), 2)
+    out["flushes_full"] = (
+        tier.batcher.stats.flushes_full - b0["flushes_full"]
+    )
+    out["flushes_deadline"] = (
+        tier.batcher.stats.flushes_deadline - b0["flushes_deadline"]
+    )
+    return out
+
+
+def check_bitexact(tier_results, queries, n_trees: int) -> dict:
+    """Replay a sample of batched responses through a fresh single-query
+    service: scores and top-k must match exactly."""
+    ref = _make_service(n_trees)
+    identical = True
+    for q, (top, scores) in zip(queries, tier_results):
+        t_ref, s_ref = ref.rank_batch(
+            jnp.asarray(q[None]), jnp.ones((1, len(q)), bool)
+        )
+        k = min(ref.top_k, len(q))
+        if not (
+            np.array_equal(scores, np.asarray(s_ref)[0])
+            and np.array_equal(top, np.asarray(t_ref)[0][:k])
+        ):
+            identical = False
+            break
+    return {"checked": len(tier_results), "identical": identical}
+
+
+def main(json_path: str = JSON_PATH, smoke: bool = False) -> dict:
+    n_trees = 32 if smoke else 64
+    n_queries = 64 if smoke else 512
+    n_bitexact = 4 if smoke else 16
+    lo, hi = (33, 64)
+    policy = BucketPolicy(max_queries=8, max_wait_ms=2.0, min_docs=8)
+    rng = np.random.default_rng(0)
+    queries = _make_queries(rng, n_queries, lo, hi)
+    doc_bucket = policy.doc_bucket(hi)
+
+    svc = _make_service(n_trees)
+    tier = ServingTier(
+        svc, N_FEATURES, doc_counts=(hi,), policy=policy,
+        warmup=True, persistent_cache=True,
+    )
+    t0 = time.perf_counter()
+    tier.start()
+    start_seconds = time.perf_counter() - t0
+
+    # The first REAL request after warmup: any compile hiding here shows
+    # up as first_ms >> steady p50.
+    t0 = time.perf_counter()
+    first_result = tier.rank(queries[0])
+    first_ms = (time.perf_counter() - t0) * 1e3
+
+    streams = [run_stream(tier, queries, c) for c in CONCURRENCY]
+
+    bitexact_sample = queries[:n_bitexact]
+    sample_results = [first_result] + [
+        tier.rank(q) for q in bitexact_sample[1:]
+    ]
+    tier.stop()
+
+    serial = run_serial(n_trees, queries, doc_bucket)
+    bitexact = check_bitexact(sample_results, bitexact_sample, n_trees)
+
+    steady_p50 = streams[0]["p50_ms"]
+    payload = {
+        "config": {
+            "smoke": smoke,
+            "n_trees": n_trees,
+            "n_features": N_FEATURES,
+            "sentinels": list(SENTINELS),
+            "n_queries": n_queries,
+            "doc_range": [lo, hi],
+            "max_queries": policy.max_queries,
+            "max_wait_ms": policy.max_wait_ms,
+            "n_devices": tier.placement.n_devices,
+        },
+        "serial": serial,
+        "streams": streams,
+        "speedup": {
+            "qps_max_concurrency_vs_serial": round(
+                streams[-1]["qps"] / serial["qps"], 2
+            ),
+        },
+        "warmup": {
+            "start_seconds": round(start_seconds, 2),
+            "warmup_seconds": round(tier.warmup_report.total_seconds, 2),
+            "buckets": [list(b) for b in tier.warmup_report.buckets],
+            "cache_dir": tier.warmup_report.cache_dir,
+            "warm_first_request_ms": round(first_ms, 3),
+            "first_to_steady_p50_ratio": round(
+                first_ms / max(steady_p50, 1e-9), 3
+            ),
+        },
+        "cold_start_overflow_docs": svc.stats.overflow_docs,
+        "bitexact": bitexact,
+    }
+    with open(json_path, "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")
+
+    print(f"serial        qps={serial['qps']:>8}  p50={serial['p50_ms']}ms"
+          f"  p99={serial['p99_ms']}ms")
+    for s in streams:
+        print(f"stream {s['concurrency']:>3}x   qps={s['qps']:>8}"
+              f"  p50={s['p50_ms']}ms  p99={s['p99_ms']}ms"
+              f"  q/batch={s['mean_queries_per_batch']}")
+    print(f"speedup {payload['speedup']['qps_max_concurrency_vs_serial']}x"
+          f"  overflow={payload['cold_start_overflow_docs']}"
+          f"  first/p50={payload['warmup']['first_to_steady_p50_ratio']}"
+          f"  bitexact={bitexact['identical']}")
+    return payload
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny CI profile (do not commit its numbers)")
+    ap.add_argument("--json", default=JSON_PATH)
+    args = ap.parse_args()
+    main(json_path=args.json, smoke=args.smoke)

@@ -1,9 +1,11 @@
-"""CI bench smoke: run the kernel bench tiny, validate the JSON schema.
+"""CI bench smoke: run both benches tiny, validate the JSON schemas.
 
-Runs ``bench_kernels.main(smoke=True)`` against a temp file (NEVER the
-tracked ``BENCH_kernels.json`` — the repo copy records the full-size
-numbers) and then checks the contract the serving stack and the perf
-trajectory depend on:
+Runs ``bench_kernels.main(smoke=True)`` and ``bench_serve.main(smoke=True)``
+against temp files (NEVER the tracked ``BENCH_*.json`` — the repo copies
+record the full-size numbers) and then checks the contracts the serving
+stack and the perf trajectory depend on.
+
+Kernel bench (:func:`validate`):
 
 - every sweep section is present (``fused_vs_staged``, ``leaf_gather``,
   ``blocked_rank``, ``launch_calibration``);
@@ -13,6 +15,17 @@ trajectory depend on:
   ``auto_bitexact_with_picked_branch`` true at every swept rate);
 - the kernel paths' exactness flags hold (``bitexact`` per leaf-gather
   point, ``matches_argsort`` per blocked-rank point).
+
+Serve bench (:func:`validate_serve`):
+
+- every section is present (``serial``, ``streams``, ``speedup``,
+  ``warmup``, ``bitexact``) with non-zero QPS and ``p99 ≥ p50`` per row;
+- zero cold-start overflow docs (AOT warmup's no-overflow guarantee);
+- batched responses bit-exact with single-query serving;
+- for a FULL run additionally the acceptance ratios: ≥2× QPS at max
+  concurrency vs serial, first-request latency ≤2× steady p50 (smoke
+  skips only the ratio bars — tiny runs on a loaded CI box are too noisy
+  to gate on, while the structural/exactness contracts always hold).
 
 Exit code 0 on success, 1 with a findings list on violation — CI-friendly,
 no pytest dependency.
@@ -97,23 +110,104 @@ def validate(payload: dict) -> list[str]:
     return problems
 
 
+REQUIRED_SERVE_SECTIONS = (
+    "config", "serial", "streams", "speedup", "warmup",
+    "cold_start_overflow_docs", "bitexact",
+)
+
+
+def validate_serve(payload: dict) -> list[str]:
+    """Schema + contract findings for a serve-bench payload."""
+    problems = []
+    for section in REQUIRED_SERVE_SECTIONS:
+        if section not in payload:
+            problems.append(f"missing section: {section}")
+    if problems:
+        return problems
+
+    def check_lat(row: dict, name: str) -> None:
+        if not _positive_finite(row.get("qps")):
+            problems.append(f"{name}: bad qps {row.get('qps')!r}")
+        p50, p99 = row.get("p50_ms"), row.get("p99_ms")
+        if not (_positive_finite(p50) and _positive_finite(p99)):
+            problems.append(f"{name}: bad latency p50={p50!r} p99={p99!r}")
+        elif p99 < p50:
+            problems.append(f"{name}: p99 {p99} < p50 {p50}")
+
+    check_lat(payload["serial"], "serial")
+    streams = payload["streams"]
+    if not streams:
+        problems.append("streams is empty")
+    for row in streams:
+        check_lat(row, f"stream {row.get('concurrency')}x")
+
+    if payload["cold_start_overflow_docs"] != 0:
+        problems.append(
+            f"cold-start overflow: {payload['cold_start_overflow_docs']} "
+            "docs (warmup must make overflow impossible)"
+        )
+    bx = payload["bitexact"]
+    if not (bx.get("identical") and bx.get("checked", 0) > 0):
+        problems.append(f"batched serving not bit-exact: {bx}")
+
+    ratio = payload["speedup"].get("qps_max_concurrency_vs_serial")
+    if not _positive_finite(ratio):
+        problems.append(f"speedup: bad ratio {ratio!r}")
+    first = payload["warmup"].get("first_to_steady_p50_ratio")
+    if not _positive_finite(first):
+        problems.append(f"warmup: bad first-request ratio {first!r}")
+    if problems or payload["config"].get("smoke"):
+        return problems
+    # Full-run acceptance bars (the committed BENCH_serve.json).
+    if ratio < 2.0:
+        problems.append(
+            f"batched QPS only {ratio}x serial at max concurrency (need >=2)"
+        )
+    if first > 2.0:
+        problems.append(
+            f"warm first request {first}x steady p50 (need <=2: AOT warmup "
+            "must leave no compile behind request 1)"
+        )
+    return problems
+
+
 def main() -> int:
     import bench_kernels
+    import bench_serve
 
+    problems = []
     with tempfile.TemporaryDirectory() as tmp:
         json_path = os.path.join(tmp, "BENCH_kernels.json")
         bench_kernels.main(csv=False, json_path=json_path, smoke=True)
         with open(json_path) as f:
-            payload = json.load(f)
+            kernels = json.load(f)
+        problems += [f"kernels: {p}" for p in validate(kernels)]
 
-    problems = validate(payload)
+        serve_path = os.path.join(tmp, "BENCH_serve.json")
+        serve = bench_serve.main(json_path=serve_path, smoke=True)
+        problems += [f"serve: {p}" for p in validate_serve(serve)]
+
+    # The COMMITTED full-run serve numbers must hold the acceptance bars
+    # (≥2× QPS, warm first request, zero overflow) — a regenerated file
+    # that regressed them fails CI here, not in a reviewer's head.
+    tracked = os.path.join(
+        os.path.dirname(os.path.abspath(__file__)), "..", "BENCH_serve.json"
+    )
+    if os.path.exists(tracked):
+        with open(tracked) as f:
+            problems += [
+                f"tracked BENCH_serve.json: {p}"
+                for p in validate_serve(json.load(f))
+            ]
+
     if problems:
         print("bench smoke FAILED:")
         for p in problems:
             print(f"  - {p}")
         return 1
-    n_rows = len(payload["rows"])
-    print(f"bench smoke OK: {n_rows} rows, all sweep sections valid")
+    n_rows = len(kernels["rows"])
+    print(f"bench smoke OK: {n_rows} kernel rows, "
+          f"{len(serve['streams'])} serve stream levels, all sections valid")
     return 0
 
 

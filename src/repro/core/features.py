@@ -45,6 +45,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.ops import env_int
+
 N_AUG = 4   # sentinel-time features appended to the q-d vector
 NEG = -1e30  # masked-document fill; ranks padding after every real doc
 
@@ -58,7 +60,8 @@ RANK_BLOCK_D = 128       # tile edge of the blocked pairwise-count compare
 # crossover near D≈128 with non-monotonic ratios). Below the cutoff the
 # direct form stays a single fusable elementwise+reduce, which is worth
 # more inside the compiled progressive step than a small tiled win.
-RANK_BLOCKED_MIN_D = 256
+# Env-overridable (deployments with a measured on-target crossover).
+RANK_BLOCKED_MIN_D = env_int("REPRO_RANK_BLOCKED_MIN_D", 256)
 
 
 def query_ranks(

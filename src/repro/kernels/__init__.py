@@ -2,20 +2,19 @@
 # for compute hot-spots the paper itself optimizes with a custom
 # kernel. Leave this package empty if the paper has none.
 
-from repro.kernels.forest_score import (
-    LEAF_GATHERS,
-    LEAF_SELECT_MAX,
-    resolve_leaf_gather,
-)
+from repro.kernels.forest_score import LEAF_GATHERS
 from repro.kernels.ops import (
     ENGINE_BLOCK_B,
+    LEAF_SELECT_MAX,
     PaddedForest,
+    env_int,
     forest_score,
     forest_score_range,
     forest_score_segments,
     launch_counts,
     padded_forest,
     reset_launch_counts,
+    resolve_leaf_gather,
 )
 
 __all__ = [
@@ -23,6 +22,7 @@ __all__ = [
     "LEAF_GATHERS",
     "LEAF_SELECT_MAX",
     "PaddedForest",
+    "env_int",
     "forest_score",
     "forest_score_range",
     "forest_score_segments",

@@ -36,7 +36,7 @@ temp). Three interchangeable paths now exist, selected by the static
 ``leaf_gather`` argument; all move the SAME f32 values, so they are
 bit-exact with each other:
 
-- ``"select"`` (default for L ≤ :data:`LEAF_SELECT_MAX`): a two-level
+- ``"select"`` (default for L ≤ :data:`repro.kernels.ops.LEAF_SELECT_MAX`): a two-level
   select tree — log2(L) rounds of lane selects on the bits of the ctz
   leaf index, MSB first, so every round slices the value array into
   *contiguous halves* (lane-friendly on the VPU, no strided shuffles).
@@ -45,7 +45,7 @@ bit-exact with each other:
   table directly. Requires a power-of-two leaf axis; the padded-buffer
   builder (:func:`repro.kernels.ops.padded_forest`) pads the leaf axis
   and tags the layout (``leaf_layout="pow2"``).
-- ``"mxu"`` (default for L > :data:`LEAF_SELECT_MAX`): the one-hot is
+- ``"mxu"`` (default for L > :data:`repro.kernels.ops.LEAF_SELECT_MAX`): the one-hot is
   contracted against the leaf table on the MXU — a ``dot_general`` with
   the tree axis as batch dim (per tree: ``[BB, L] @ [L]``), so the
   multiply-reduce leaves the VPU entirely. Exact because each output row
@@ -103,23 +103,11 @@ from jax.experimental import pallas as pl
 
 ALL_ONES = np.uint32(0xFFFFFFFF)
 
-# Auto leaf-gather policy: select tree up to this many (padded) leaves, MXU
-# contraction above. The paper's trees cap at 64 leaves (the bitmask bound),
-# so serving traffic takes the select path; the MXU fallback covers wide
-# synthetic/padded leaf tables.
-LEAF_SELECT_MAX = 64
-
 LEAF_GATHERS = ("onehot", "select", "mxu")
 
 
 def _next_pow2(n: int) -> int:
     return 1 << (max(n, 1) - 1).bit_length()
-
-
-def resolve_leaf_gather(n_leaves: int) -> str:
-    """Concrete leaf-gather path for ``"auto"``: select tree for small leaf
-    axes (after power-of-two padding), MXU contraction for wide ones."""
-    return "select" if _next_pow2(n_leaves) <= LEAF_SELECT_MAX else "mxu"
 
 
 def _ctz64(hi: jax.Array, lo: jax.Array) -> jax.Array:

@@ -60,22 +60,52 @@ re-executions regardless of which branch each batch takes.
 from __future__ import annotations
 
 import dataclasses
+import os
+import typing
 from collections import OrderedDict
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.forest.ensemble import TreeEnsemble
 from repro.kernels.forest_score import (
     _next_pow2,
     forest_score_pallas,
     forest_score_segments_pallas,
-    resolve_leaf_gather,
 )
+
+if typing.TYPE_CHECKING:  # annotation-only: keeps ops importable before
+    from repro.forest.ensemble import TreeEnsemble  # repro.forest (no cycle)
 
 LANE = 128
 ALL_ONES = np.uint32(0xFFFFFFFF)
+
+
+def env_int(name: str, default: int, *, minimum: int = 1) -> int:
+    """THE environment-override helper for the engine's tuning constants.
+
+    Deployment knobs that used to be hard module constants
+    (:data:`PADDED_CACHE_MAX`, :data:`LEAF_SELECT_MAX`,
+    :data:`repro.core.features.RANK_BLOCKED_MIN_D`) read their value
+    through this single chokepoint at import time: unset or empty →
+    ``default``; a non-integer or a value below ``minimum`` raises
+    immediately (a silently-ignored typo'd override is worse than a
+    startup crash). Overrides are read ONCE at module import — set the
+    variable before the first ``repro`` import, as with ``XLA_FLAGS``.
+    """
+    raw = os.environ.get(name, "").strip()
+    if not raw:
+        return default
+    try:
+        value = int(raw)
+    except ValueError:
+        raise ValueError(
+            f"{name} must be an integer, got {raw!r}"
+        ) from None
+    if value < minimum:
+        raise ValueError(f"{name} must be >= {minimum}, got {value}")
+    return value
+
 
 # Default doc-block size of every kernel dispatch below. Decision-time
 # pricing (repro.metrics.speedup.progressive_cost_model, block_b-rounded
@@ -86,7 +116,21 @@ ENGINE_BLOCK_B = 256
 # Bound on cached (boundaries, block_t) buffer layouts per ensemble: a
 # long-running service sweeping sentinel configs must not leak device
 # memory. Eviction is LRU; a re-requested layout is simply re-padded.
-PADDED_CACHE_MAX = 8
+PADDED_CACHE_MAX = env_int("REPRO_PADDED_CACHE_MAX", 8)
+
+# Auto leaf-gather policy cutoff: select tree up to this many (padded)
+# leaves, MXU contraction above. The paper's trees cap at 64 leaves (the
+# bitmask bound), so serving traffic takes the select path; the MXU
+# fallback covers wide synthetic/padded leaf tables. The crossover was
+# measured in interpret mode (ROADMAP item 1 revisits it on real
+# hardware), hence overridable per deployment.
+LEAF_SELECT_MAX = env_int("REPRO_LEAF_SELECT_MAX", 64)
+
+
+def resolve_leaf_gather(n_leaves: int) -> str:
+    """Concrete leaf-gather path for ``"auto"``: select tree for small leaf
+    axes (after power-of-two padding), MXU contraction for wide ones."""
+    return "select" if _next_pow2(n_leaves) <= LEAF_SELECT_MAX else "mxu"
 
 _LAUNCH_COUNTS = {"plain": 0, "segmented": 0}
 

@@ -35,6 +35,26 @@ import jax.numpy as jnp
 from repro.kernels.ops import effective_block_b as _stage_block
 
 
+def _sane_survivors(stage_survivors, n_docs: float) -> list[float]:
+    """Clamp decision-time survivor estimates to ``[0, n_docs]``, mapping
+    non-finite inputs to the bound they exceed (NaN → 0 — an estimate the
+    model knows nothing about must not poison the pick).
+
+    The EMA that feeds the mode pick comes from run-time stats; an
+    all-masked batch, a zero-survivor stage, or a poisoned stats pipeline
+    (NaN from a degenerate reduction upstream) must degrade to a
+    well-defined pick, never to NaN/inf costs — a NaN cost makes every
+    ``<`` comparison False and silently pins the service to one branch.
+    """
+    out = []
+    for s in stage_survivors:
+        s = float(s)
+        if math.isnan(s):
+            s = 0.0
+        out.append(min(max(s, 0.0), n_docs))  # ±inf land on the bounds
+    return out
+
+
 def trees_traversed(
     continue_mask,
     mask,
@@ -136,7 +156,9 @@ def progressive_cost_model(
     S = len(sentinels)
     assert mode in ("fused", "staged"), mode
     assert len(stage_survivors) == S
-    surv = [min(float(s), float(n_docs)) for s in stage_survivors]
+    n_docs = max(float(n_docs), 0.0)   # empty batch: costs reduce to the
+    #   per-launch overhead — finite, and identical tail for both modes
+    surv = _sane_survivors(stage_survivors, n_docs)
     has_tail = sentinels[-1] < n_trees
     tail = surv[-1] * (n_trees - sentinels[-1])
     if mode == "fused":
@@ -188,7 +210,15 @@ def progressive_cost_model_device(
     """
     S = len(sentinels)
     assert stage_survivors.shape == (S,), (stage_survivors.shape, S)
-    surv = jnp.minimum(stage_survivors.astype(jnp.float32), float(n_docs))
+    n_docs = max(int(n_docs), 0)
+    # Same sanitization as the host model (_sane_survivors): NaN → 0,
+    # ±inf/out-of-range → clamped, so the traced costs are always finite
+    # and the lax.cond predicate is always a real decision.
+    surv = jnp.nan_to_num(
+        stage_survivors.astype(jnp.float32),
+        nan=0.0, posinf=float(n_docs), neginf=0.0,
+    )
+    surv = jnp.clip(surv, 0.0, float(n_docs))
     has_tail = sentinels[-1] < n_trees
     tail = surv[-1] * float(n_trees - sentinels[-1])
     fused = (

@@ -1,4 +1,18 @@
-from repro.serve.ranking_service import RankingService, ServiceStats
+from repro.serve.batching import BucketPolicy, ContinuousBatcher
 from repro.serve.lm_serve import generate
+from repro.serve.placement import ServePlacement
+from repro.serve.ranking_service import RankingService, ServiceStats
+from repro.serve.tier import ServingTier
+from repro.serve.warmup import enable_persistent_cache, warmup_service
 
-__all__ = ["RankingService", "ServiceStats", "generate"]
+__all__ = [
+    "BucketPolicy",
+    "ContinuousBatcher",
+    "RankingService",
+    "ServePlacement",
+    "ServiceStats",
+    "ServingTier",
+    "enable_persistent_cache",
+    "generate",
+    "warmup_service",
+]

@@ -1,0 +1,260 @@
+"""Continuous batching: many small concurrent queries → padded engine blocks.
+
+The progressive engine wants big padded ``[Q, D, F]`` blocks (jit-stable
+shapes, one fused device read per batch); real serving traffic is a stream
+of single queries with ragged candidate counts. The
+:class:`ContinuousBatcher` closes that gap:
+
+- **Submit** is non-blocking: a query's features go into the pending set
+  keyed by its *document bucket* (candidate count rounded up to a power of
+  two, floored at ``BucketPolicy.min_docs``) and the caller gets a
+  ``Future``.
+- **One worker thread owns every engine call** — the RankingService's
+  adaptive state (per-bucket peaks/EMA, jit step cache) is touched from
+  exactly one thread, so the service itself needs no locks.
+- **Flush policy**: a bucket flushes when it holds ``max_queries`` queries
+  (full-bucket trigger — the batch the engine was sized for) or when its
+  oldest request has waited ``max_wait_ms`` (deadline trigger — bounded
+  p99 under trickle traffic). The worker sleeps on a condition variable
+  with the earliest pending deadline as its timeout: no polling loop, no
+  idle CPU burn.
+- **Scatter-back**: the flushed block is padded to the next power-of-two
+  query count (so the engine sees the same handful of shapes forever —
+  these are exactly the buckets AOT warmup compiles), scored once, and
+  each query's slice of the result is scattered back to its Future with a
+  per-request top-k. The per-request top-k reproduces ``lax.top_k``'s
+  tie-break (descending score, ascending index) so a batched response is
+  *bit-exact* with submitting the same query alone.
+
+Padding rows carry ``mask=False`` everywhere, and the engine's masked
+reductions make dead rows inert — which is what makes the bit-exactness
+claim hold: scoring is per-document, the LEAR features are per-query
+masked reductions, and compaction touches only alive documents, so a
+query's scores do not depend on its neighbors in the block.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from concurrent.futures import Future
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.kernels.forest_score import _next_pow2
+from repro.serve.ranking_service import RankingService
+
+
+@dataclasses.dataclass(frozen=True)
+class BucketPolicy:
+    """When to flush, and which padded shapes exist.
+
+    ``max_queries`` is both the full-bucket flush trigger and the largest
+    padded Q; with power-of-two padding the engine sees at most
+    ``log2(max_queries)+1`` query shapes per document bucket.
+    """
+
+    max_queries: int = 8
+    max_wait_ms: float = 2.0
+    min_docs: int = 8
+    max_docs: int = 4096
+
+    def __post_init__(self):
+        assert self.max_queries >= 1
+        assert _next_pow2(self.max_queries) == self.max_queries, (
+            "max_queries must be a power of two", self.max_queries
+        )
+        assert self.min_docs >= 1 and self.max_docs >= self.min_docs
+
+    def doc_bucket(self, n_docs: int) -> int:
+        assert 1 <= n_docs <= self.max_docs, (n_docs, self.max_docs)
+        return max(self.min_docs, _next_pow2(n_docs))
+
+    def query_bucket(self, n_queries: int) -> int:
+        return min(self.max_queries, _next_pow2(n_queries))
+
+    def buckets(self, doc_counts) -> list[tuple[int, int]]:
+        """The (Q, D) padded shapes this policy produces for the given doc
+        counts — the warmup list: every query bucket up to ``max_queries``
+        crossed with each distinct document bucket."""
+        q = 1
+        qs = []
+        while q <= self.max_queries:
+            qs.append(q)
+            q *= 2
+        ds = sorted({self.doc_bucket(d) for d in doc_counts})
+        return [(q, d) for d in ds for q in qs]
+
+
+@dataclasses.dataclass
+class _Pending:
+    features: np.ndarray   # [n_docs, F] f32
+    n_docs: int
+    future: Future
+    deadline: float        # perf_counter() time at which it must flush
+
+
+@dataclasses.dataclass
+class BatcherStats:
+    submitted: int = 0
+    completed: int = 0
+    failed: int = 0
+    flushes_full: int = 0
+    flushes_deadline: int = 0
+    flushes_drain: int = 0
+    padded_query_slots: int = 0   # dead rows shipped (padding overhead)
+    max_queue_depth: int = 0
+
+    @property
+    def flushes(self) -> int:
+        return self.flushes_full + self.flushes_deadline + self.flushes_drain
+
+
+class ContinuousBatcher:
+    """Packs concurrent single-query submissions into engine-sized blocks.
+
+    Lifecycle: ``start()`` → any number of ``submit()`` (thread-safe, from
+    any thread) → ``stop()`` (drains pending requests, then joins the
+    worker). ``submit`` after ``stop`` raises.
+    """
+
+    def __init__(
+        self,
+        service: RankingService,
+        n_features: int,
+        policy: BucketPolicy | None = None,
+        placement=None,
+    ):
+        self.service = service
+        self.n_features = int(n_features)
+        self.policy = policy or BucketPolicy()
+        self.placement = placement
+        self.stats = BatcherStats()
+        self._pending: dict[int, list[_Pending]] = {}
+        self._cond = threading.Condition()
+        self._running = False
+        self._worker: threading.Thread | None = None
+
+    # -- client side ------------------------------------------------------
+
+    def start(self) -> None:
+        assert self._worker is None, "batcher already started"
+        self._running = True
+        self._worker = threading.Thread(
+            target=self._run, name="repro-batcher", daemon=True
+        )
+        self._worker.start()
+
+    def submit(self, features) -> Future:
+        """Enqueue one query's ``[n_docs, F]`` candidate features; returns a
+        Future resolving to ``(top_idx [k], scores [n_docs])``."""
+        feats = np.asarray(features, np.float32)
+        assert feats.ndim == 2 and feats.shape[1] == self.n_features, (
+            feats.shape, self.n_features
+        )
+        n_docs = feats.shape[0]
+        db = self.policy.doc_bucket(n_docs)
+        fut: Future = Future()
+        req = _Pending(
+            features=feats,
+            n_docs=n_docs,
+            future=fut,
+            deadline=time.perf_counter() + self.policy.max_wait_ms / 1e3,
+        )
+        with self._cond:
+            assert self._running, "batcher is not running"
+            self._pending.setdefault(db, []).append(req)
+            self.stats.submitted += 1
+            depth = sum(len(v) for v in self._pending.values())
+            self.stats.max_queue_depth = max(self.stats.max_queue_depth, depth)
+            self._cond.notify()
+        return fut
+
+    def stop(self) -> None:
+        """Drain everything still queued, then stop the worker."""
+        with self._cond:
+            if not self._running:
+                return
+            self._running = False
+            self._cond.notify()
+        self._worker.join()
+        self._worker = None
+        # Whatever the worker left behind (requests that arrived in its
+        # final instants) flushes on the caller's thread.
+        for db, reqs in sorted(self._pending.items()):
+            if reqs:
+                self.stats.flushes_drain += 1
+                self._flush(db, reqs)
+        self._pending.clear()
+
+    # -- worker side ------------------------------------------------------
+
+    def _take_ready(self, now: float):
+        """Pop the bucket to flush now, with its trigger, or the earliest
+        future deadline. Full buckets beat deadline flushes (they amortize
+        best); among deadline-ripe buckets the oldest request wins."""
+        for db, reqs in sorted(self._pending.items()):
+            if len(reqs) >= self.policy.max_queries:
+                self._pending[db] = reqs[self.policy.max_queries:]
+                return db, reqs[: self.policy.max_queries], "full", None
+        ripe_db, ripe_t = None, None
+        for db, reqs in self._pending.items():
+            if not reqs:
+                continue
+            t = min(r.deadline for r in reqs)
+            if ripe_t is None or t < ripe_t:
+                ripe_db, ripe_t = db, t
+        if ripe_t is not None and ripe_t <= now:
+            reqs = self._pending.pop(ripe_db)
+            return ripe_db, reqs, "deadline", None
+        return None, None, None, ripe_t
+
+    def _run(self) -> None:
+        while True:
+            with self._cond:
+                db = reqs = None
+                while True:
+                    now = time.perf_counter()
+                    db, reqs, trigger, next_t = self._take_ready(now)
+                    if reqs is not None:
+                        break
+                    if not self._running:
+                        return  # leftovers flush in stop()
+                    self._cond.wait(
+                        timeout=None if next_t is None else max(next_t - now, 0.0)
+                    )
+            if trigger == "full":
+                self.stats.flushes_full += 1
+            else:
+                self.stats.flushes_deadline += 1
+            self._flush(db, reqs)
+
+    def _flush(self, db: int, reqs: list[_Pending]) -> None:
+        """Score one padded block and scatter per-query results back."""
+        try:
+            qb = self.policy.query_bucket(len(reqs))
+            X = np.zeros((qb, db, self.n_features), np.float32)
+            mask = np.zeros((qb, db), bool)
+            for i, r in enumerate(reqs):
+                X[i, : r.n_docs] = r.features
+                mask[i, : r.n_docs] = True
+            self.stats.padded_query_slots += qb - len(reqs)
+            _, scores = self.service.rank_batch(
+                jnp.asarray(X), jnp.asarray(mask), placement=self.placement
+            )
+            scores = np.asarray(scores)
+            for i, r in enumerate(reqs):
+                s = scores[i, : r.n_docs].copy()
+                k = min(self.service.top_k, r.n_docs)
+                # lax.top_k order: descending score, ascending index.
+                top = np.lexsort((np.arange(r.n_docs), -s))[:k]
+                r.future.set_result((top.astype(np.int32), s))
+                self.stats.completed += 1
+        except BaseException as e:  # noqa: BLE001 — futures must not hang
+            for r in reqs:
+                if not r.future.done():
+                    r.future.set_exception(e)
+                    self.stats.failed += 1

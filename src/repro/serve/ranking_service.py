@@ -64,6 +64,23 @@ from repro.serve.calibration import calibrate_launch_overhead_trees
 
 
 @dataclasses.dataclass
+class _BucketAdaptState:
+    """Adaptive state for ONE padded batch shape ``(Q, D)``.
+
+    The serving tier packs traffic into power-of-two capacity buckets
+    (:mod:`repro.serve.batching`); survivor behavior is a function of the
+    batch shape (D bounds the survivor count, Q·D scales the head work), so
+    both adaptation signals live per bucket: the running survivor ``peaks``
+    drive that bucket's compaction-capacity ratchet and the smoothed
+    survivor ``ema`` feeds that bucket's fused-vs-staged pick. A sparse
+    Q=1 trickle must not shrink (or mis-mode) the Q=64 bulk bucket.
+    """
+
+    peaks: list[int] | None = None  # running max survivors per stage
+    ema: list[float] | None = None  # smoothed survivors per stage
+
+
+@dataclasses.dataclass
 class ServiceStats:
     batches: int = 0
     queries: int = 0
@@ -130,8 +147,13 @@ class RankingService:
         self.launch_overhead_trees = float(launch_overhead_trees)
         self.survivor_ema = survivor_ema
         self.stats = ServiceStats()
-        self._stage_peaks: list[int] | None = None  # running max survivors
-        self._stage_ema: list[float] | None = None  # smoothed survivors
+        # Adaptive state is PER padded batch shape (capacity bucket): each
+        # (Q, D) the service has seen owns its survivor peaks and EMA.
+        # ``_active_key`` is the bucket of the most recent rank_batch —
+        # the introspection surface (_stage_peaks/_stage_ema properties,
+        # _pick_capacities, _pick_mode) reads through it.
+        self._adapt: dict[tuple[int, int] | None, _BucketAdaptState] = {}
+        self._active_key: tuple[int, int] | None = None
 
         stages = sorted([classifier, *extra_classifiers], key=lambda c: c.sentinel)
         self.stage_classifiers = stages
@@ -147,6 +169,37 @@ class RankingService:
             strategy=self.stage_strategies[0],
             classifier_trees=stages[0].n_trees,
         )
+
+    def bucket_state(self, Q: int, D: int) -> _BucketAdaptState:
+        """Adaptive state for batch shape ``(Q, D)``, created on first use.
+
+        The warmup path (:func:`repro.serve.warmup.warmup_service`) seeds
+        ``peaks`` here BEFORE the bucket's first trace so the compaction
+        capacities are stable from batch 1 — one trace per bucket and no
+        cold-start overflow.
+        """
+        return self._adapt.setdefault((Q, D), _BucketAdaptState())
+
+    def _active_state(self) -> _BucketAdaptState:
+        return self._adapt.setdefault(self._active_key, _BucketAdaptState())
+
+    # Back-compat introspection surface: the pre-bucketing attributes now
+    # read/write the ACTIVE bucket's state (the shape most recently served).
+    @property
+    def _stage_peaks(self) -> list[int] | None:
+        return self._active_state().peaks
+
+    @_stage_peaks.setter
+    def _stage_peaks(self, value) -> None:
+        self._active_state().peaks = value
+
+    @property
+    def _stage_ema(self) -> list[float] | None:
+        return self._active_state().ema
+
+    @_stage_ema.setter
+    def _stage_ema(self, value) -> None:
+        self._active_state().ema = value
 
     def _make_strategy(self, clf: LearClassifier) -> Callable[..., jax.Array]:
         # NOTE: the strategy is traced into the cached jitted cascade step,
@@ -169,7 +222,9 @@ class RankingService:
     def _pick_capacities(self, n_docs: int) -> list[int]:
         """Per-stage compaction capacities with p99-style headroom.
 
-        Each stage gets its own bucket sized from the RUNNING MAX of its
+        Reads the ACTIVE batch-shape bucket's survivor peaks — each padded
+        ``(Q, D)`` shape ratchets its own capacities. Each stage gets its
+        own bucket sized from the RUNNING MAX of its
         observed survivor counts times ``headroom``, and never below the
         cold-start estimate — one sparse batch must not shrink the bucket
         under the traffic the service has already seen (that would silently
@@ -226,16 +281,28 @@ class RankingService:
         }
         return "staged" if cost["staged"] < cost["fused"] else "fused"
 
-    def rank_batch(self, X: jax.Array, mask: jax.Array):
+    def rank_batch(self, X: jax.Array, mask: jax.Array, placement=None):
         """X: [Q, D, F]; returns (top-k doc indices [Q, k], scores [Q, D]).
 
         Device-resident end to end: the step is submitted with everything
-        it needs (with ``execution_mode="auto"``, also last batch's
+        it needs (with ``execution_mode="auto"``, also this bucket's
         survivor EMA as a tiny f32 operand for the in-program mode pick),
         and the ONLY device→host transfer is the single fused
         ``jax.device_get`` at the end — response and stats together.
+
+        Adaptation (survivor peaks → capacities, EMA → mode pick) is keyed
+        by the padded batch shape ``(Q, D)`` — each serving bucket adapts
+        to its own traffic.
+
+        ``placement`` (a :class:`repro.serve.placement.ServePlacement`, or
+        anything with ``.put(X, mask)``) pins the operands to a device
+        mesh before submit; ``None`` is the single-device fast path and
+        is bit-exact with any 1-device placement.
         """
+        if placement is not None:
+            X, mask = placement.put(X, mask)
         Q, D, _ = X.shape
+        self._active_key = (Q, D)
         n_docs = Q * D
         capacities = self._pick_capacities(n_docs)
         mode = self.execution_mode
@@ -291,18 +358,23 @@ class RankingService:
             mask.sum(),
             picked_staged,
         ))
-        # Adapt: running max sizes the buckets, the EMA feeds the cost model.
+        # Adapt: running max sizes the buckets, the EMA feeds the cost
+        # model. Peaks and EMA seed independently — warmup pre-seeds peaks
+        # (the no-overflow guarantee) but leaves the EMA to real traffic.
         a = self.survivor_ema
-        if self._stage_peaks is None:
-            self._stage_peaks = [int(n) for n in survivors]
-            self._stage_ema = [float(n) for n in survivors]
+        state = self._active_state()
+        if state.peaks is None:
+            state.peaks = [int(n) for n in survivors]
         else:
-            self._stage_peaks = [
-                max(p, int(n)) for p, n in zip(self._stage_peaks, survivors)
+            state.peaks = [
+                max(p, int(n)) for p, n in zip(state.peaks, survivors)
             ]
-            self._stage_ema = [
+        if state.ema is None:
+            state.ema = [float(n) for n in survivors]
+        else:
+            state.ema = [
                 (1 - a) * e + a * float(n)
-                for e, n in zip(self._stage_ema, survivors)
+                for e, n in zip(state.ema, survivors)
             ]
 
         s = self.stats

@@ -1,0 +1,115 @@
+"""The serving tier: service + placement + AOT warmup + continuous batcher.
+
+:class:`ServingTier` is the deployable unit — what `examples/` and the
+load-generator bench (benchmarks/bench_serve.py) stand up:
+
+    tier = ServingTier(service, n_features=F, doc_counts=(64, 256))
+    tier.start()                 # persistent cache + AOT warmup + batcher
+    fut = tier.submit(features)  # non-blocking, one query
+    top_idx, scores = fut.result()
+    tier.stop()
+
+``start()`` does the three cold-start moves in order: point jax at the
+persistent compilation cache (restarts replay compiled artifacts from
+disk), AOT-warm every padded ``(Q, D)`` bucket the batching policy can
+produce for the configured ``doc_counts`` (both execution branches), and
+only then open the request queue — the first real request lands on a hot
+step cache with capacity buckets seeded so cold-start overflow is
+impossible.
+"""
+
+from __future__ import annotations
+
+from concurrent.futures import Future
+
+from repro.serve.batching import BatcherStats, BucketPolicy, ContinuousBatcher
+from repro.serve.placement import ServePlacement, single_device
+from repro.serve.ranking_service import RankingService
+from repro.serve.warmup import (
+    WarmupReport,
+    enable_persistent_cache,
+    warmup_service,
+)
+
+
+class ServingTier:
+    def __init__(
+        self,
+        service: RankingService,
+        n_features: int,
+        doc_counts=(64,),
+        policy: BucketPolicy | None = None,
+        placement: ServePlacement | None = None,
+        warmup: bool = True,
+        persistent_cache: bool = True,
+        cache_dir: str | None = None,
+    ):
+        self.service = service
+        self.n_features = int(n_features)
+        self.policy = policy or BucketPolicy()
+        self.placement = placement or single_device()
+        self.doc_counts = tuple(doc_counts)
+        self.do_warmup = warmup
+        self.persistent_cache = persistent_cache
+        self.cache_dir = cache_dir
+        self.warmup_report: WarmupReport | None = None
+        self.batcher = ContinuousBatcher(
+            service, self.n_features, self.policy, placement=self.placement
+        )
+        self._started = False
+
+    def start(self) -> "ServingTier":
+        assert not self._started, "tier already started"
+        cache_dir = (
+            enable_persistent_cache(self.cache_dir)
+            if self.persistent_cache else None
+        )
+        if self.do_warmup:
+            self.warmup_report = warmup_service(
+                self.service,
+                self.n_features,
+                self.policy.buckets(self.doc_counts),
+                placement=self.placement,
+            )
+            self.warmup_report.cache_dir = cache_dir
+        self.batcher.start()
+        self._started = True
+        return self
+
+    def submit(self, features) -> Future:
+        """Non-blocking: one query's ``[n_docs, F]`` candidates → Future of
+        ``(top_idx, scores)``."""
+        return self.batcher.submit(features)
+
+    def rank(self, features):
+        """Blocking convenience wrapper around :meth:`submit`."""
+        return self.submit(features).result()
+
+    def stop(self) -> None:
+        if self._started:
+            self.batcher.stop()
+            self._started = False
+
+    def stats(self) -> dict:
+        """Operator snapshot: batcher counters + service aggregates."""
+        svc, b = self.service.stats, self.batcher.stats
+        return {
+            "batcher": {
+                f.name: getattr(b, f.name)
+                for f in BatcherStats.__dataclass_fields__.values()
+            },
+            "service": {
+                "batches": svc.batches,
+                "queries": svc.queries,
+                "docs": svc.docs,
+                "overflow_docs": svc.overflow_docs,
+                "speedup": svc.speedup,
+                "continue_rate": svc.continue_rate,
+                "batches_fused": svc.batches_fused,
+                "batches_staged": svc.batches_staged,
+            },
+            "warmup_seconds": (
+                self.warmup_report.total_seconds if self.warmup_report else 0.0
+            ),
+            "n_devices": self.placement.n_devices,
+        }

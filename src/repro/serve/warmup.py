@@ -1,0 +1,119 @@
+"""AOT warmup: pay every compile before the first real request arrives.
+
+Two cold-start costs stand between service start and steady-state latency:
+
+1. **Tracing/compilation** — the progressive engine jits one step per
+   static configuration (batch shape, capacities, mode). The first request
+   at a new capacity bucket would eat that compile. :func:`warmup_service`
+   drives one synthetic batch through every configured ``(Q, D)`` bucket so
+   the step cache is hot; with ``execution_mode="auto"`` both ``lax.cond``
+   branches are part of that single compiled step (the pick is a traced
+   operand), and the warmup additionally *executes* both branches by
+   seeding the survivor EMA at its two extremes.
+
+2. **Capacity re-bucketing** — the compaction-capacity ratchet normally
+   learns survivor peaks from traffic, which means batch 1 runs at the
+   cold-start estimate and can both overflow (quality loss) and trigger a
+   re-jit when the ratchet moves. Warmup seeds each bucket's peaks at
+   ``seed_peak_frac × Q × D`` *before* the first trace: with the default
+   ``1.0`` the capacities start at the physical maximum (every document
+   survives), which cannot overflow and can only ratchet *down* never —
+   the running max keeps them pinned, so the bucket compiles exactly once.
+
+Across process restarts the same trace is a cache hit on disk:
+:func:`enable_persistent_cache` points jax's persistent compilation cache
+at a directory (default ``$REPRO_COMPILE_CACHE`` or a per-user temp dir),
+so restart warmup replays compiled artifacts instead of re-invoking XLA.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+import tempfile
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.serve.ranking_service import RankingService, ServiceStats
+
+DEFAULT_WARMUP_BUCKETS = ((1, 64), (4, 64), (8, 64))
+
+
+def enable_persistent_cache(cache_dir: str | None = None) -> str | None:
+    """Point jax's persistent compilation cache at ``cache_dir`` (created
+    if needed). Thresholds are dropped to "cache everything" — serving
+    steps are small but latency-critical. Returns the directory actually
+    configured, or ``None`` if the runtime lacks the cache config (the
+    service must start regardless)."""
+    if cache_dir is None:
+        cache_dir = os.environ.get("REPRO_COMPILE_CACHE") or os.path.join(
+            tempfile.gettempdir(), f"repro-xla-cache-{os.getuid()}"
+        )
+    try:
+        os.makedirs(cache_dir, exist_ok=True)
+        jax.config.update("jax_compilation_cache_dir", cache_dir)
+        jax.config.update("jax_persistent_cache_min_compile_time_secs", 0)
+        jax.config.update("jax_persistent_cache_min_entry_size_bytes", -1)
+    except (OSError, AttributeError, ValueError):
+        return None
+    return cache_dir
+
+
+@dataclasses.dataclass
+class WarmupReport:
+    buckets: list[tuple[int, int]]
+    seconds_per_bucket: dict[tuple[int, int], float]
+    cache_dir: str | None = None
+
+    @property
+    def total_seconds(self) -> float:
+        return sum(self.seconds_per_bucket.values())
+
+
+def warmup_service(
+    service: RankingService,
+    n_features: int,
+    buckets=DEFAULT_WARMUP_BUCKETS,
+    *,
+    seed_peak_frac: float = 1.0,
+    run_both_branches: bool = True,
+    placement=None,
+) -> WarmupReport:
+    """Compile (and execute) every ``(Q, D)`` serving bucket up front.
+
+    For each bucket: seed the per-bucket survivor peaks (stable capacities
+    → exactly one trace, zero cold-start overflow), then run one synthetic
+    batch. With mode ``"auto"`` and ``run_both_branches``, run a second
+    batch with the EMA forced to the opposite extreme so both ``lax.cond``
+    branches have executed, not just compiled. Afterwards the warmup's
+    fingerprints are wiped — stats reset, EMAs cleared (real traffic
+    starts with the honest cold-start fused default) — but the seeded
+    peaks are KEPT: they are the no-overflow guarantee.
+    """
+    S = len(service.sentinels)
+    report = WarmupReport(buckets=[], seconds_per_bucket={})
+    for Q, D in buckets:
+        t0 = time.perf_counter()
+        state = service.bucket_state(Q, D)
+        if state.peaks is None:
+            seed = max(1, min(int(seed_peak_frac * Q * D), Q * D))
+            state.peaks = [seed] * S
+        X = jnp.zeros((Q, D, n_features), jnp.float32)
+        mask = jnp.ones((Q, D), bool)
+        # Extreme EMAs steer the device pick to each branch in turn (the
+        # cost model prices zero survivors as maximally staged-friendly
+        # and full survival as fused-friendly).
+        ema_probes = [[0.0] * S]
+        if run_both_branches and service.execution_mode == "auto" and S > 1:
+            ema_probes.append([float(Q * D)] * S)
+        for ema in ema_probes:
+            state.ema = ema
+            service.rank_batch(X, mask, placement=placement)
+        state.ema = None  # real traffic re-learns its own continue rates
+        report.buckets.append((Q, D))
+        report.seconds_per_bucket[(Q, D)] = time.perf_counter() - t0
+    # Warmup batches are not traffic: stats restart clean.
+    service.stats = ServiceStats()
+    return report

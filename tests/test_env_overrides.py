@@ -1,0 +1,120 @@
+"""Environment-variable overrides of the engine tuning constants.
+
+The three deployment knobs (`PADDED_CACHE_MAX`, `LEAF_SELECT_MAX`,
+`RANK_BLOCKED_MIN_D`) read the environment through the single
+:func:`repro.kernels.ops.env_int` helper at import time. The helper's
+parsing contract is tested in-process; the end-to-end override path (env →
+import → behavior change) needs a fresh interpreter, so it runs in a
+subprocess — same idiom as the multi-device check in test_distributed.
+"""
+
+import subprocess
+import sys
+
+import pytest
+
+from repro.kernels.ops import env_int
+
+
+def test_env_int_default_when_unset(monkeypatch):
+    monkeypatch.delenv("REPRO_TEST_KNOB", raising=False)
+    assert env_int("REPRO_TEST_KNOB", 42) == 42
+
+
+def test_env_int_empty_means_default(monkeypatch):
+    monkeypatch.setenv("REPRO_TEST_KNOB", "   ")
+    assert env_int("REPRO_TEST_KNOB", 42) == 42
+
+
+def test_env_int_parses_override(monkeypatch):
+    monkeypatch.setenv("REPRO_TEST_KNOB", " 128 ")
+    assert env_int("REPRO_TEST_KNOB", 42) == 128
+
+
+def test_env_int_rejects_garbage(monkeypatch):
+    monkeypatch.setenv("REPRO_TEST_KNOB", "fast")
+    with pytest.raises(ValueError, match="must be an integer"):
+        env_int("REPRO_TEST_KNOB", 42)
+
+
+def test_env_int_rejects_below_minimum(monkeypatch):
+    monkeypatch.setenv("REPRO_TEST_KNOB", "0")
+    with pytest.raises(ValueError, match="must be >= 1"):
+        env_int("REPRO_TEST_KNOB", 42)
+    monkeypatch.setenv("REPRO_TEST_KNOB", "-3")
+    with pytest.raises(ValueError):
+        env_int("REPRO_TEST_KNOB", 42)
+
+
+_OVERRIDE_PROG = r"""
+import repro.kernels.ops as ops
+import repro.core.features as features
+from repro.forest.ensemble import random_ensemble
+
+# The constants themselves picked up the environment.
+assert ops.PADDED_CACHE_MAX == 2, ops.PADDED_CACHE_MAX
+assert ops.LEAF_SELECT_MAX == 16, ops.LEAF_SELECT_MAX
+assert features.RANK_BLOCKED_MIN_D == 32, features.RANK_BLOCKED_MIN_D
+
+# ... and the behavior behind each constant moved with them.
+# 1. Leaf-gather auto policy: the select/mxu crossover is now at 16 leaves.
+assert ops.resolve_leaf_gather(16) == "select"
+assert ops.resolve_leaf_gather(17) == "mxu"   # default would say "select"
+
+# 2. Padded-buffer LRU: the per-ensemble cache evicts above 2 layouts.
+ens = random_ensemble(0, n_trees=8, depth=2, n_features=4)
+for bt in (1, 2, 4):
+    ops.padded_forest(ens, block_t=bt)
+assert len(ens._padded_cache) == 2, len(ens._padded_cache)
+
+# 3. Blocked-rank auto policy: 33 candidates now pick the tiled compare
+# (default cutoff 256 would go direct). Wrap the blocked entry point to
+# observe the dispatch, and keep the result exact vs the direct form.
+import numpy as np, jax.numpy as jnp
+calls = []
+real_blocked = features.query_ranks_blocked
+features.query_ranks_blocked = (
+    lambda *a, **k: calls.append(1) or real_blocked(*a, **k)
+)
+part = jnp.asarray(np.random.default_rng(0).normal(size=(2, 33)),
+                   jnp.float32)
+mask = jnp.ones((2, 33), bool)
+auto = features.query_ranks(part, mask)   # auto → blocked above 32
+assert calls, "auto dispatch did not pick the blocked path"
+direct = features.query_ranks(part, mask, method="direct")
+np.testing.assert_array_equal(np.asarray(auto), np.asarray(direct))
+print("OVERRIDES_OK")
+"""
+
+
+def test_override_path_end_to_end():
+    """Env → fresh import → constants AND the behavior they gate change."""
+    res = subprocess.run(
+        [sys.executable, "-c", _OVERRIDE_PROG],
+        capture_output=True, text=True, timeout=300,
+        env={
+            "PYTHONPATH": "src", "PATH": "/usr/bin:/bin", "HOME": "/root",
+            "JAX_PLATFORMS": "cpu",
+            "REPRO_PADDED_CACHE_MAX": "2",
+            "REPRO_LEAF_SELECT_MAX": "16",
+            "REPRO_RANK_BLOCKED_MIN_D": "32",
+        },
+        cwd="/root/repo",
+    )
+    assert "OVERRIDES_OK" in res.stdout, res.stdout + res.stderr
+
+
+def test_bad_override_fails_at_import():
+    """A typo'd override must crash the first repro import, not be ignored."""
+    res = subprocess.run(
+        [sys.executable, "-c", "import repro.kernels.ops"],
+        capture_output=True, text=True, timeout=300,
+        env={
+            "PYTHONPATH": "src", "PATH": "/usr/bin:/bin", "HOME": "/root",
+            "JAX_PLATFORMS": "cpu",
+            "REPRO_LEAF_SELECT_MAX": "sixty-four",
+        },
+        cwd="/root/repo",
+    )
+    assert res.returncode != 0
+    assert "REPRO_LEAF_SELECT_MAX must be an integer" in res.stderr

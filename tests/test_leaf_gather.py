@@ -17,11 +17,15 @@ from repro.forest.ensemble import from_arrays, random_ensemble
 from repro.forest.scoring import score_numpy_oracle
 from repro.kernels.forest_score import (
     LEAF_GATHERS,
-    LEAF_SELECT_MAX,
     forest_score_pallas,
+)
+from repro.kernels.ops import (
+    LEAF_SELECT_MAX,
+    forest_score,
+    forest_score_segments,
+    padded_forest,
     resolve_leaf_gather,
 )
-from repro.kernels.ops import forest_score, forest_score_segments, padded_forest
 from repro.kernels.ref import leaf_values_ref
 
 

@@ -175,6 +175,87 @@ def test_device_pick_matches_host_pick_block_rounded(block_b, rates):
         assert device_pick == host_pick, (block_b, rates, loh)
 
 
+@pytest.mark.parametrize(
+    "ema",
+    [
+        [0.0, 0.0, 0.0],                        # zero survivors everywhere
+        [float("nan")] * 3,                     # poisoned stats pipeline
+        [float("inf"), 100.0, float("-inf")],   # runaway estimates
+        [-50.0, -1.0, 0.0],                     # negative (impossible) counts
+    ],
+)
+@pytest.mark.parametrize("n_docs", [0, N_DOCS])
+def test_cost_model_degenerate_ema_stays_finite(ema, n_docs):
+    """Regression: zero-survivor, empty-batch, and non-finite EMA inputs
+    must never produce NaN/inf costs — a NaN cost makes every comparison
+    False and silently pins the pick to one branch."""
+    import math
+
+    caps = [512, 512, 512]
+    for mode in ("fused", "staged"):
+        cost = progressive_cost_model(
+            n_docs, ema, SENTINELS, N_TREES, mode,
+            launch_overhead_trees=4096.0, stage_capacities=caps, block_b=256,
+        )
+        assert math.isfinite(cost), (mode, ema, n_docs, cost)
+        assert cost >= 0.0
+    fused_d, staged_d = progressive_cost_model_device(
+        n_docs, jnp.asarray(ema, jnp.float32), SENTINELS, N_TREES,
+        launch_overhead_trees=4096.0, stage_capacities=caps, block_b=256,
+    )
+    assert np.isfinite(float(fused_d)) and np.isfinite(float(staged_d))
+    # The pick is a real decision (one strict comparison of finite floats),
+    # and host/device still agree on it.
+    host = _host_pick_b256(ema, caps, 4096.0, n_docs)
+    device = "staged" if bool(staged_d < fused_d) else "fused"
+    assert device == host, (ema, n_docs, device, host)
+
+
+def _host_pick_b256(ema, caps, loh, n_docs):
+    cost = {
+        m: progressive_cost_model(
+            n_docs, ema, SENTINELS, N_TREES, m,
+            launch_overhead_trees=loh, stage_capacities=caps, block_b=256,
+        )
+        for m in ("fused", "staged")
+    }
+    return "staged" if cost["staged"] < cost["fused"] else "fused"
+
+
+def test_cost_model_sanitizes_like_clamped_input():
+    """Sanitized non-finite estimates price exactly like their clamped
+    finite equivalents (NaN → 0, +inf → n_docs, negative → 0)."""
+    caps = [512, 512, 512]
+    pairs = [
+        ([float("nan")] * 3, [0.0] * 3),
+        ([float("inf")] * 3, [float(N_DOCS)] * 3),
+        ([-10.0, -1.0, -0.5], [0.0] * 3),
+    ]
+    for bad, clean in pairs:
+        for mode in ("fused", "staged"):
+            got = progressive_cost_model(
+                N_DOCS, bad, SENTINELS, N_TREES, mode,
+                stage_capacities=caps, block_b=256,
+            )
+            want = progressive_cost_model(
+                N_DOCS, clean, SENTINELS, N_TREES, mode,
+                stage_capacities=caps, block_b=256,
+            )
+            assert got == pytest.approx(want), (bad, mode)
+        bad_d = progressive_cost_model_device(
+            N_DOCS, jnp.asarray(bad, jnp.float32), SENTINELS, N_TREES,
+            stage_capacities=caps, block_b=256,
+        )
+        clean_d = progressive_cost_model_device(
+            N_DOCS, jnp.asarray(clean, jnp.float32), SENTINELS, N_TREES,
+            stage_capacities=caps, block_b=256,
+        )
+        np.testing.assert_allclose(
+            np.asarray([float(x) for x in bad_d]),
+            np.asarray([float(x) for x in clean_d]), rtol=1e-6,
+        )
+
+
 def test_cost_model_no_tail_no_tail_launch_priced():
     """Sentinel at the ensemble end: no tail work, and fused prices a
     single launch (staged S launches)."""

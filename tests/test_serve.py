@@ -179,6 +179,33 @@ def test_service_device_pick_matches_host_reference():
         assert device_pick == host_pick, (rate, device_pick, host_pick)
 
 
+def test_adaptive_state_is_per_batch_shape():
+    """Survivor peaks and the continue-rate EMA are keyed by the padded
+    batch shape: a sparse trickle at one shape must not shrink capacities
+    or skew the mode pick of another shape's bucket."""
+    rng = np.random.default_rng(8)
+    svc = _service(execution_mode="fused")
+    dense = _batch(rng, 2, 64, 12, survive_frac=0.8)
+    tiny = _batch(rng, 1, 8, 12, survive_frac=0.0)
+    svc.rank_batch(*dense)
+    svc.rank_batch(*dense)
+    big = svc.bucket_state(2, 64)
+    peaks_before = list(big.peaks)
+    ema_before = list(big.ema)
+    for _ in range(3):
+        svc.rank_batch(*tiny)
+    # The tiny bucket adapted independently...
+    small = svc.bucket_state(1, 8)
+    assert small.peaks is not None and small.peaks != peaks_before
+    # ...and the bulk bucket's state is untouched by the trickle.
+    assert big.peaks == peaks_before
+    assert big.ema == ema_before
+    # The introspection surface follows the most recently served shape.
+    assert svc._stage_ema == small.ema
+    svc.rank_batch(*dense)
+    assert svc._stage_ema == big.ema
+
+
 def test_modes_serve_identical_scores():
     """Fused and staged services return identical responses on a
     non-overflow batch (the engine's bit-exactness surfaces end to end)."""
