@@ -150,16 +150,20 @@ def _bench_cascade(rows, smoke=False):
         cap = int(ref.continue_mask.sum()) + 64
 
         if tag == "batch64x64":
-            t_full = _time(lambda x: score_bitvector(ens, x.reshape(Q * D, F)), X)
+            t_full = _time(
+                lambda x, n=Q * D, f=F: score_bitvector(ens, x.reshape(n, f)), X
+            )
             rows.append(("cascade_full_scoring", t_full, "trees=256,all_docs"))
         t_seed, t_comp, t_prog = _time_group(
             [
-                lambda x: _seed_cascade_compacted(
-                    ens, sentinel, x, mask, cap, k_s
+                lambda x, m=mask, c=cap: _seed_cascade_compacted(
+                    ens, sentinel, x, m, c, k_s
                 )[0],
-                lambda x: cascade.rank_compacted(x, mask, capacity=cap).scores,
-                lambda x: cascade.rank_progressive(
-                    x, mask, sentinels=[sentinel], capacities=cap
+                lambda x, m=mask, c=cap: cascade.rank_compacted(
+                    x, m, capacity=c
+                ).scores,
+                lambda x, m=mask, c=cap: cascade.rank_progressive(
+                    x, m, sentinels=[sentinel], capacities=c
                 ).scores,
             ],
             X, iters=2 if smoke else 16,

@@ -71,7 +71,9 @@ def _make_service(n_trees: int, seed: int = 0) -> RankingService:
     )
 
 
-def _make_queries(rng, n: int, lo: int, hi: int) -> list[np.ndarray]:
+def _make_queries(
+    rng: np.random.Generator, n: int, lo: int, hi: int
+) -> list[np.ndarray]:
     return [
         rng.normal(size=(int(rng.integers(lo, hi + 1)), N_FEATURES))
         .astype(np.float32)
@@ -79,7 +81,7 @@ def _make_queries(rng, n: int, lo: int, hi: int) -> list[np.ndarray]:
     ]
 
 
-def _pct(xs, q) -> float:
+def _pct(xs: list[float], q: float) -> float:
     return float(np.percentile(np.asarray(xs), q))
 
 
@@ -92,7 +94,9 @@ def _lat_section(lat_s: list[float], wall_s: float) -> dict:
     }
 
 
-def run_serial(n_trees: int, queries, doc_bucket: int) -> dict:
+def run_serial(
+    n_trees: int, queries: list[np.ndarray], doc_bucket: int
+) -> dict:
     """One query at a time through a warmed service — the no-batcher
     deployment, padded to the same (1, D) shape the tier would use."""
     svc = _make_service(n_trees)
@@ -113,7 +117,9 @@ def run_serial(n_trees: int, queries, doc_bucket: int) -> dict:
     return out
 
 
-def run_stream(tier: ServingTier, queries, concurrency: int) -> dict:
+def run_stream(
+    tier: ServingTier, queries: list[np.ndarray], concurrency: int
+) -> dict:
     """Closed-loop clients: each thread submits its share sequentially and
     waits for every result before the next submit."""
     chunks = [queries[i::concurrency] for i in range(concurrency)]
@@ -157,7 +163,11 @@ def run_stream(tier: ServingTier, queries, concurrency: int) -> dict:
     return out
 
 
-def check_bitexact(tier_results, queries, n_trees: int) -> dict:
+def check_bitexact(
+    tier_results: list[tuple[np.ndarray, np.ndarray]],
+    queries: list[np.ndarray],
+    n_trees: int,
+) -> dict:
     """Replay a sample of batched responses through a fresh single-query
     service: scores and top-k must match exactly."""
     ref = _make_service(n_trees)

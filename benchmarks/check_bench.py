@@ -47,7 +47,7 @@ REQUIRED_SECTIONS = (
 )
 
 
-def _positive_finite(x) -> bool:
+def _positive_finite(x: object) -> bool:
     return isinstance(x, (int, float)) and math.isfinite(x) and x > 0
 
 

@@ -1,0 +1,61 @@
+"""Repo-specific static analysis: tracer-safety and engine-contract
+rules over the serving hot path.
+
+Run as ``python -m repro.analysis [paths...]`` (or through
+``tools/check_invariants.py``); the default target is ``src/repro``.
+Rules, error codes, and the suppression syntax are documented in
+``docs/static-analysis.md``.
+"""
+
+from __future__ import annotations
+
+from repro.analysis.engine import Finding, format_findings, run_paths
+
+__all__ = ["Finding", "format_findings", "run_paths", "main"]
+
+
+def main(argv: list[str] | None = None) -> int:
+    """CLI entry point; returns the process exit code (0 = clean)."""
+    import argparse
+    from pathlib import Path
+
+    from repro.analysis.rules import all_rules
+
+    parser = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description=(
+            "tracer-safety & invariant linter for the LEAR serving engine"
+        ),
+    )
+    parser.add_argument(
+        "paths", nargs="*", default=["src/repro"],
+        help="files or directories to analyze (default: src/repro)",
+    )
+    parser.add_argument(
+        "--select", default=None,
+        help="comma-separated rule codes to run (default: all)",
+    )
+    parser.add_argument(
+        "--format", choices=("text", "json"), default="text", dest="fmt",
+    )
+    parser.add_argument(
+        "--list-rules", action="store_true",
+        help="print the rule table and exit",
+    )
+    args = parser.parse_args(argv)
+
+    if args.list_rules:
+        for rule in all_rules():
+            print(f"{rule.code}  {rule.name}")
+            print(f"       fix: {rule.hint}")
+        return 0
+
+    missing = [p for p in args.paths if not Path(p).exists()]
+    if missing:
+        parser.error(f"no such path(s): {', '.join(missing)}")
+    codes = (
+        [c.strip() for c in args.select.split(",")] if args.select else None
+    )
+    findings = run_paths(args.paths, codes=codes)
+    print(format_findings(findings, fmt=args.fmt))
+    return 1 if findings else 0

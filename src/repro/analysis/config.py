@@ -1,0 +1,68 @@
+"""Repo-contract knobs for the static-analysis pass.
+
+Every rule that encodes a *project* decision (rather than a generic JAX
+fact) reads its names from here, so the contracts stay greppable in one
+place and the rules stay reusable.  The contracts themselves:
+
+- the fused serving step (``core/cascade.py``) and both Pallas kernel
+  entry points (``kernels/forest_score.py``) are jit roots — anything
+  they reach must never sync to host (PR 2/PR 3);
+- tree-axis reductions in kernel bodies go through
+  ``_pairwise_tree_sum`` so the three leaf-gather paths stay bit-exact
+  (PR 4);
+- the engine is owned by the batcher's worker thread; only the worker
+  run loop (and the post-join drain) may call into it (PR 5);
+- ``RankingService.rank_batch`` performs exactly ONE ``jax.device_get``
+  per batch (PR 3).
+"""
+
+from __future__ import annotations
+
+# --- trace-scope seeds -------------------------------------------------
+# Functions that are traced even though no decorator says so: they are
+# passed INTO the jitted step as closures or looked up through dict /
+# tuple dispatch the call-graph cannot see.  Matched as suffixes of the
+# analyzer's fully-qualified ids (``module:Qual.Name``).
+TRACED_ROOT_SUFFIXES: tuple[str, ...] = (
+    # the per-stage continue strategy closed over by the fused step
+    "RankingService._make_strategy.strategy",
+    # strategy family — dispatched via the ``strategies`` tuple operand
+    ":ert_continue",
+    ":ept_continue",
+    ":ideal_continue",
+    # LEAR classifier evaluation inside the step
+    "LearClassifier.prob_continue",
+    "LearClassifier.continue_mask",
+)
+
+# --- TS003: sanctioned tree-axis reducers ------------------------------
+# Functions allowed to reduce over the tree axis inside kernel scope.
+# ``_pairwise_tree_sum`` is THE sanctioned reduction (fixed-shape
+# pairwise halving → bit-exact across leaf-gather paths).
+TREE_SUM_ALLOWED: tuple[str, ...] = ("_pairwise_tree_sum",)
+
+# --- TS005: thread discipline ------------------------------------------
+# serve/ classes whose methods face client threads, mapped to the ONLY
+# methods allowed to call into the engine.  ``ContinuousBatcher._run``
+# is the worker loop; ``_flush`` is called from the loop and once more
+# from ``stop()`` after the worker has been joined (drain — single
+# threaded by construction).  ``ServingTier.start`` runs AOT warmup
+# before the worker exists.
+SERVE_CLASS_ALLOWED_METHODS: dict[str, frozenset[str]] = {
+    "ContinuousBatcher": frozenset({"_run", "_flush"}),
+    "ServingTier": frozenset({"start"}),
+}
+
+# Engine entry points: calling any of these hands work to the engine and
+# is only legal from the allowlisted methods above.
+ENGINE_METHOD_NAMES: frozenset[str] = frozenset(
+    {"rank_batch", "rank", "rank_progressive", "rank_compacted"}
+)
+ENGINE_FUNCTION_SUFFIXES: tuple[str, ...] = (":warmup_service",)
+
+# --- TS006: the single-transfer contract -------------------------------
+# Host walk starts here; at most ONE explicit device→host transfer site
+# may be reachable per call.
+SINGLE_TRANSFER_ROOT_SUFFIXES: tuple[str, ...] = (
+    "RankingService.rank_batch",
+)

@@ -1,0 +1,42 @@
+"""Rule registry for the tracer-safety analyzer.
+
+A rule is an object with a ``code`` (``TS00x``), a ``name``, a ``hint``
+(the one-line fix shown under every finding), and a
+``check(project, suppressions) -> Iterator[Finding]`` method.  To add a
+rule: create ``tsNNN_short_name.py`` beside the existing six, subclass
+nothing (duck typing), and append an instance to :func:`all_rules` —
+see ``docs/static-analysis.md`` for the walkthrough and the fixture
+conventions a new rule must ship with.
+"""
+
+from __future__ import annotations
+
+from repro.analysis.rules.ts001_host_sync import HostSyncRule
+from repro.analysis.rules.ts002_control_flow import TracerControlFlowRule
+from repro.analysis.rules.ts003_reassociation import ReassociationRule
+from repro.analysis.rules.ts004_trace_constants import TraceTimeConstantRule
+from repro.analysis.rules.ts005_thread_discipline import ThreadDisciplineRule
+from repro.analysis.rules.ts006_single_device_get import SingleDeviceGetRule
+
+
+def all_rules() -> list:
+    """The active rule set, in error-code order."""
+    return [
+        HostSyncRule(),
+        TracerControlFlowRule(),
+        ReassociationRule(),
+        TraceTimeConstantRule(),
+        ThreadDisciplineRule(),
+        SingleDeviceGetRule(),
+    ]
+
+
+__all__ = [
+    "HostSyncRule",
+    "TracerControlFlowRule",
+    "ReassociationRule",
+    "TraceTimeConstantRule",
+    "ThreadDisciplineRule",
+    "SingleDeviceGetRule",
+    "all_rules",
+]

@@ -1,0 +1,73 @@
+"""Shared helpers for the rule modules."""
+
+from __future__ import annotations
+
+import ast
+from collections.abc import Iterator
+
+from repro.analysis.callgraph import (
+    EAGER_CONTEXT_CANONICAL,
+    FunctionInfo,
+    ModuleInfo,
+    ProjectIndex,
+)
+
+
+def body_nodes(
+    project: ProjectIndex, func: FunctionInfo
+) -> Iterator[ast.AST]:
+    """All AST nodes in a function's OWN body: nested function/lambda
+    subtrees are skipped (they are analyzed as their own functions), and
+    so is code under ``with jax.ensure_compile_time_eval():`` — that
+    runs at trace time, where host access is legal."""
+    mod = project.modules[func.module]
+    if isinstance(func.node, ast.Lambda):
+        roots: list[ast.AST] = [func.node.body]
+    else:
+        roots = list(func.node.body)
+
+    def walk(node: ast.AST) -> Iterator[ast.AST]:
+        if isinstance(
+            node, (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)
+        ):
+            return
+        if isinstance(node, ast.With) and any(
+            isinstance(item.context_expr, ast.Call)
+            and project.canonical(mod, item.context_expr.func)
+            in EAGER_CONTEXT_CANONICAL
+            for item in node.items
+        ):
+            return
+        yield node
+        for child in ast.iter_child_nodes(node):
+            yield from walk(child)
+
+    for root in roots:
+        yield from walk(root)
+
+
+def classify_transfer(
+    project: ProjectIndex, mod: ModuleInfo, call: ast.Call
+) -> str | None:
+    """Name the device→host transfer a call performs, or None.
+
+    Covers the explicit sync surface: ``jax.device_get``,
+    ``block_until_ready`` (function or method), ``.item()``, and
+    ``numpy.asarray``/``numpy.array`` on device values (``jnp.*`` is
+    resolved through import aliases and does NOT match).
+    """
+    canon = project.canonical(mod, call.func)
+    if canon is not None:
+        if canon.endswith("jax.device_get") or canon == "jax.device_get":
+            return "jax.device_get"
+        if canon == "jax.block_until_ready":
+            return "jax.block_until_ready"
+        root, _, leaf = canon.rpartition(".")
+        if root == "numpy" and leaf in ("asarray", "array"):
+            return f"numpy.{leaf}"
+    if isinstance(call.func, ast.Attribute):
+        if call.func.attr == "block_until_ready":
+            return ".block_until_ready()"
+        if call.func.attr == "item" and not call.args and not call.keywords:
+            return ".item()"
+    return None

@@ -1,0 +1,68 @@
+"""TS001 — host sync reachable from jit/kernel scope.
+
+A ``jax.device_get``, ``block_until_ready``, ``.item()``, or
+``numpy.asarray`` inside code reachable from a jitted function either
+fails at trace time or silently forces a device→host round trip on
+every step — the exact regression the fused serving step exists to
+prevent.  ``float()``/``bool()`` are flagged only when applied to a
+tracer-tainted value (on static Python ints they are trace-time
+arithmetic and fine).
+"""
+
+from __future__ import annotations
+
+import ast
+from collections.abc import Iterator
+
+from repro.analysis.callgraph import FunctionInfo, ProjectIndex
+from repro.analysis.engine import Finding, Suppressions
+from repro.analysis.rules.common import body_nodes, classify_transfer
+
+HINT = (
+    "hoist the sync out of traced code (host side of the step), or keep the "
+    "value lazy on device; trace-time work belongs under "
+    "jax.ensure_compile_time_eval()"
+)
+
+
+class HostSyncRule:
+    code = "TS001"
+    name = "host-sync-in-jit"
+    hint = HINT
+
+    def check(
+        self, project: ProjectIndex, suppressions: Suppressions
+    ) -> Iterator[Finding]:
+        for func in project.functions_in(project.jit_scope):
+            mod = project.modules[func.module]
+            for node in body_nodes(project, func):
+                if not isinstance(node, ast.Call):
+                    continue
+                transfer = classify_transfer(project, mod, node)
+                if transfer is not None:
+                    yield self._finding(func, node, transfer)
+                    continue
+                if (
+                    isinstance(node.func, ast.Name)
+                    and node.func.id in ("float", "bool")
+                    and node.args
+                    and project.expr_tainted(func, node.args[0])
+                ):
+                    yield self._finding(
+                        func, node, f"{node.func.id}() on a traced value"
+                    )
+
+    def _finding(
+        self, func: FunctionInfo, node: ast.Call, what: str
+    ) -> Finding:
+        return Finding(
+            code=self.code,
+            path=str(func.path),
+            line=node.lineno,
+            col=node.col_offset,
+            message=(
+                f"{what} in `{func.qualname}`, which is reachable from "
+                "jit/kernel scope"
+            ),
+            hint=self.hint,
+        )

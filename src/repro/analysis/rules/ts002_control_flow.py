@@ -1,0 +1,55 @@
+"""TS002 — Python control flow on tracer values in jit scope.
+
+A bare ``if``/``while`` on a value derived from traced inputs raises
+``TracerBoolConversionError`` at trace time (or, worse, bakes one
+branch into the compiled program if the value happens to be concrete).
+Branching on shapes, dtypes, static (annotated ``int``/``str``/config)
+parameters, or ``is None`` checks is trace-time Python and fine.
+"""
+
+from __future__ import annotations
+
+import ast
+from collections.abc import Iterator
+
+from repro.analysis.callgraph import ProjectIndex
+from repro.analysis.engine import Finding, Suppressions
+from repro.analysis.rules.common import body_nodes
+
+HINT = (
+    "use jnp.where / jax.lax.cond / jax.lax.while_loop for data-dependent "
+    "control flow; if the value is really static, annotate the parameter "
+    "with its host type (int, str, ...)"
+)
+
+
+class TracerControlFlowRule:
+    code = "TS002"
+    name = "python-control-flow-on-tracer"
+    hint = HINT
+
+    def check(
+        self, project: ProjectIndex, suppressions: Suppressions
+    ) -> Iterator[Finding]:
+        for func in project.functions_in(project.jit_scope):
+            for node in body_nodes(project, func):
+                if not isinstance(node, (ast.If, ast.While)):
+                    continue
+                if (
+                    isinstance(node, ast.While)
+                    and isinstance(node.test, ast.Constant)
+                ):
+                    continue
+                if project.expr_tainted(func, node.test):
+                    kind = "if" if isinstance(node, ast.If) else "while"
+                    yield Finding(
+                        code=self.code,
+                        path=str(func.path),
+                        line=node.lineno,
+                        col=node.col_offset,
+                        message=(
+                            f"`{kind}` on a traced value in "
+                            f"`{func.qualname}` (jit scope)"
+                        ),
+                        hint=self.hint,
+                    )

@@ -1,0 +1,94 @@
+"""TS003 — reassociation hazard in kernel bodies.
+
+The three leaf-gather paths (select/MXU/one-hot) are bit-exact with
+each other ONLY because every tree-axis reduction goes through
+``_pairwise_tree_sum`` — a fixed-shape pairwise halving whose float
+association order does not depend on tree count or padding.  A bare
+``jnp.sum``/``.sum()`` or a ``+=`` accumulation loop inside kernel
+scope reduces in a different order and silently breaks the
+bit-exactness contract the parity tests pin.
+
+Reductions that are provably order-free (one-hot row selection, integer
+adds) may be waived with ``# repro: noqa(TS003) -- <why>``.
+"""
+
+from __future__ import annotations
+
+import ast
+from collections.abc import Iterator
+
+from repro.analysis import config
+from repro.analysis.callgraph import FunctionInfo, ProjectIndex
+from repro.analysis.engine import Finding, Suppressions
+from repro.analysis.rules.common import body_nodes
+
+HINT = (
+    "reduce through _pairwise_tree_sum (kernels/forest_score.py) so the "
+    "association order stays fixed; waive with `# repro: noqa(TS003)` only "
+    "for provably order-free reductions"
+)
+
+
+class ReassociationRule:
+    code = "TS003"
+    name = "reassociation-hazard-in-kernel"
+    hint = HINT
+
+    def check(
+        self, project: ProjectIndex, suppressions: Suppressions
+    ) -> Iterator[Finding]:
+        for func in project.functions_in(project.kernel_scope):
+            if func.name in config.TREE_SUM_ALLOWED:
+                continue
+            mod = project.modules[func.module]
+            loop_depth_nodes = _nodes_inside_loops(project, func)
+            for node in body_nodes(project, func):
+                if isinstance(node, ast.Call):
+                    canon = project.canonical(mod, node.func)
+                    is_jnp_sum = canon is not None and canon in (
+                        "jax.numpy.sum", "numpy.sum"
+                    )
+                    is_method_sum = (
+                        isinstance(node.func, ast.Attribute)
+                        and node.func.attr == "sum"
+                    )
+                    if is_jnp_sum or is_method_sum:
+                        yield self._finding(func, node, "bare sum()")
+                elif (
+                    isinstance(node, ast.AugAssign)
+                    and isinstance(node.op, ast.Add)
+                    and id(node) in loop_depth_nodes
+                ):
+                    yield self._finding(
+                        func, node, "`+=` accumulation inside a loop"
+                    )
+
+    def _finding(
+        self, func: FunctionInfo, node: ast.AST, what: str
+    ) -> Finding:
+        return Finding(
+            code=self.code,
+            path=str(func.path),
+            line=node.lineno,
+            col=node.col_offset,
+            message=(
+                f"{what} in kernel scope (`{func.qualname}`) bypasses "
+                "_pairwise_tree_sum"
+            ),
+            hint=self.hint,
+        )
+
+
+def _nodes_inside_loops(project: ProjectIndex, func: FunctionInfo) -> set[int]:
+    """ids of body nodes that sit inside a for/while loop."""
+    inside: set[int] = set()
+    loops = [
+        n
+        for n in body_nodes(project, func)
+        if isinstance(n, (ast.For, ast.While))
+    ]
+    for loop in loops:
+        for node in ast.walk(loop):
+            if node is not loop:
+                inside.add(id(node))
+    return inside

@@ -1,0 +1,64 @@
+"""TS004 — environment reads inside jitted or kernel bodies.
+
+Engine tunables (``PADDED_CACHE_MAX``, ``LEAF_SELECT_MAX``, ...) are
+read ONCE at import through ``env_int`` so a compiled computation can
+never disagree with the environment it was traced under.  An
+``env_int``/``os.environ``/``os.getenv`` read inside jit scope would be
+baked in at trace time at best — and at worst make two traces of the
+same config diverge.
+"""
+
+from __future__ import annotations
+
+import ast
+from collections.abc import Iterator
+
+from repro.analysis.callgraph import ProjectIndex
+from repro.analysis.engine import Finding, Suppressions
+from repro.analysis.rules.common import body_nodes
+
+HINT = (
+    "read the environment once at module scope (see env_int in "
+    "kernels/ops.py) and close over the value; traced code must only see "
+    "trace-time constants"
+)
+
+
+class TraceTimeConstantRule:
+    code = "TS004"
+    name = "env-read-in-traced-scope"
+    hint = HINT
+
+    def check(
+        self, project: ProjectIndex, suppressions: Suppressions
+    ) -> Iterator[Finding]:
+        scope = project.jit_scope | project.kernel_scope
+        for func in project.functions_in(scope):
+            mod = project.modules[func.module]
+            for node in body_nodes(project, func):
+                what = None
+                if isinstance(node, ast.Call):
+                    canon = project.canonical(mod, node.func)
+                    resolved = (
+                        project.resolve_canonical(canon) if canon else None
+                    )
+                    if resolved is not None and resolved.endswith(":env_int"):
+                        what = "env_int()"
+                    elif canon in ("os.getenv", "os.environ.get"):
+                        what = canon + "()"
+                elif isinstance(node, ast.Subscript):
+                    canon = project.canonical(mod, node.value)
+                    if canon == "os.environ":
+                        what = "os.environ[...]"
+                if what is not None:
+                    yield Finding(
+                        code=self.code,
+                        path=str(func.path),
+                        line=node.lineno,
+                        col=node.col_offset,
+                        message=(
+                            f"{what} read inside `{func.qualname}`, which "
+                            "is traced (jit/kernel scope)"
+                        ),
+                        hint=self.hint,
+                    )

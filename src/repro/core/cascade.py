@@ -86,7 +86,7 @@ from __future__ import annotations
 
 import dataclasses
 from collections import OrderedDict
-from typing import Callable, Sequence
+from collections.abc import Callable, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -101,6 +101,7 @@ from repro.forest.ensemble import TreeEnsemble, slice_trees
 from repro.forest.scoring import score_bitvector
 from repro.kernels.ops import (
     ENGINE_BLOCK_B,
+    PaddedForest,
     forest_score,
     forest_score_range,
     forest_score_segments,
@@ -149,11 +150,11 @@ class CascadeRanker:
     # End-to-end jitted progressive steps, keyed by the full static config
     # (buffers, sentinels, capacities, strategies, mode, …). LRU-bounded so
     # sweeping configurations cannot pin unbounded compiled computations.
-    _step_cache: "OrderedDict" = dataclasses.field(
+    _step_cache: OrderedDict = dataclasses.field(
         default_factory=OrderedDict, init=False, repr=False, compare=False
     )
 
-    def _head_tail(self):
+    def _head_tail(self) -> tuple[TreeEnsemble, TreeEnsemble]:
         # Sliced sub-ensembles are cached: repeated rank*() calls reuse the
         # same TreeEnsemble objects (and therefore their padded-buffer
         # caches) instead of re-slicing per call.
@@ -163,7 +164,9 @@ class CascadeRanker:
             self._ht_cache = (head, tail)
         return self._ht_cache
 
-    def rank(self, X: jax.Array, mask: jax.Array, **strategy_kwargs) -> CascadeResult:
+    def rank(
+        self, X: jax.Array, mask: jax.Array, **strategy_kwargs: object
+    ) -> CascadeResult:
         """Reference path: full compute, masked combine."""
         Q, D, F = X.shape
         flat = X.reshape(Q * D, F)
@@ -183,7 +186,7 @@ class CascadeRanker:
         mask: jax.Array,
         capacity: int,
         compaction: str = "cumsum",
-        **strategy_kwargs,
+        **strategy_kwargs: object,
     ) -> CascadeResult:
         """Single-sentinel production path: tail sees only compacted survivors."""
         Q, D, F = X.shape
@@ -214,7 +217,7 @@ class CascadeRanker:
         stage_ema: jax.Array | None = None,
         have_ema: jax.Array | bool = True,
         launch_overhead_trees: float = 0.0,
-        **strategy_kwargs,
+        **strategy_kwargs: object,
     ) -> CascadeResult:
         """Multi-sentinel engine, end-to-end jitted (one XLA computation).
 
@@ -348,7 +351,7 @@ _STEP_CACHE_MAX = 16  # compiled progressive steps kept per ranker (LRU)
 
 
 def _build_progressive_step(
-    pf,
+    pf: PaddedForest,
     sentinels: tuple[int, ...],
     capacities: tuple[int, ...],
     strategies: tuple,
@@ -358,7 +361,7 @@ def _build_progressive_step(
     static_kwargs: dict,
     n_trees: int,
     launch_overhead_trees: float = 0.0,
-):
+) -> Callable[..., tuple]:
     """Build the end-to-end jitted progressive step for one configuration.
 
     Everything static (buffers, sentinels, capacities, strategies, mode) is
@@ -505,8 +508,14 @@ def _build_progressive_step(
     return step
 
 
-def _compacted_tail(X, partial, cont, tail: TreeEnsemble, capacity: int,
-                    compaction: str = "cumsum"):
+def _compacted_tail(
+    X: jax.Array,
+    partial: jax.Array,
+    cont: jax.Array,
+    tail: TreeEnsemble,
+    capacity: int,
+    compaction: str = "cumsum",
+) -> tuple[jax.Array, jax.Array]:
     """Gather survivors → dense block of ``capacity`` → tail kernel → scatter.
 
     Kept at the Python level (jitted pieces around one counted kernel call)
@@ -520,7 +529,9 @@ def _compacted_tail(X, partial, cont, tail: TreeEnsemble, capacity: int,
 
 
 @jax.jit
-def _scatter_tail(scores, sel, tail_sel, n_cont):
+def _scatter_tail(
+    scores: jax.Array, sel: jax.Array, tail_sel: jax.Array, n_cont: jax.Array
+) -> jax.Array:
     """Scatter valid compacted tail scores back onto the [Q, D] grid."""
     Q, D = scores.shape
     valid = jnp.arange(sel.shape[0]) < n_cont

@@ -30,7 +30,9 @@ import jax
 import jax.numpy as jnp
 
 
-def _cumsum_partition(cont: jax.Array, capacity: int):
+def _cumsum_partition(
+    cont: jax.Array, capacity: int
+) -> tuple[jax.Array, jax.Array, jax.Array]:
     """Shared body: ``(sel, n_cont, within)``; ``within`` is dead-code
     eliminated by XLA for the caller that drops it."""
     cont = cont.reshape(-1)
@@ -48,7 +50,9 @@ def _cumsum_partition(cont: jax.Array, capacity: int):
 
 
 @_partial(jax.jit, static_argnames=("capacity",))
-def compact_indices_cumsum(cont: jax.Array, capacity: int):
+def compact_indices_cumsum(
+    cont: jax.Array, capacity: int
+) -> tuple[jax.Array, jax.Array]:
     """O(n) stable partition. ``cont: [n] bool`` → ``(sel [capacity] i32,
     n_cont [] i32)``."""
     sel, n_cont, _ = _cumsum_partition(cont, capacity)
@@ -56,7 +60,9 @@ def compact_indices_cumsum(cont: jax.Array, capacity: int):
 
 
 @_partial(jax.jit, static_argnames=("capacity",))
-def compact_indices_cumsum_masked(cont: jax.Array, capacity: int):
+def compact_indices_cumsum_masked(
+    cont: jax.Array, capacity: int
+) -> tuple[jax.Array, jax.Array, jax.Array]:
     """:func:`compact_indices_cumsum` plus the per-input *within-capacity*
     mask: ``within[i]`` ⇔ ``cont[i]`` and survivor ``i`` was assigned a
     selection slot ``< capacity``. The per-stage-tail cascade mode uses it
@@ -66,7 +72,9 @@ def compact_indices_cumsum_masked(cont: jax.Array, capacity: int):
 
 
 @_partial(jax.jit, static_argnames=("capacity",))
-def compact_indices_argsort(cont: jax.Array, capacity: int):
+def compact_indices_argsort(
+    cont: jax.Array, capacity: int
+) -> tuple[jax.Array, jax.Array]:
     """O(n log n) reference: stable argsort puts survivors first."""
     cont = cont.reshape(-1)
     order = jnp.argsort(~cont, stable=True)

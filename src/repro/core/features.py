@@ -153,7 +153,9 @@ def query_ranks_blocked(
     return out[:, :D].reshape(*lead, D)
 
 
-def query_minmax(partial: jax.Array, mask: jax.Array):
+def query_minmax(
+    partial: jax.Array, mask: jax.Array
+) -> tuple[jax.Array, jax.Array]:
     """Per-query (segment) min/max of the partial score — ``([Q,1],[Q,1])``.
 
     Masked documents are excluded via ±inf fill; an all-masked query yields

@@ -107,7 +107,11 @@ class LearClassifier:
         return jax.nn.sigmoid(logits).reshape(Q, D)
 
     def continue_mask(
-        self, X_aug, mask, threshold: float, use_kernel: bool = False
+        self,
+        X_aug: jax.Array,
+        mask: jax.Array,
+        threshold: float,
+        use_kernel: bool = False,
     ) -> jax.Array:
         """Continue ⇔ P(Continue) ≥ threshold. Higher = more aggressive EE."""
         return mask & (self.prob_continue(X_aug, use_kernel=use_kernel) >= threshold)

@@ -28,7 +28,7 @@ class CSRGraph:
         return self.indices.shape[0]
 
     @staticmethod
-    def random(n_nodes: int, avg_degree: int, seed: int = 0) -> "CSRGraph":
+    def random(n_nodes: int, avg_degree: int, seed: int = 0) -> CSRGraph:
         rng = np.random.default_rng(seed)
         deg = rng.poisson(avg_degree, size=n_nodes).clip(1)
         indptr = np.zeros(n_nodes + 1, dtype=np.int64)

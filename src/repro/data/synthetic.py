@@ -57,7 +57,7 @@ class LetorDataset:
     def n_queries(self) -> int:
         return self.X.shape[0]
 
-    def select(self, idx: np.ndarray) -> "LetorDataset":
+    def select(self, idx: np.ndarray) -> LetorDataset:
         return LetorDataset(self.X[idx], self.labels[idx], self.mask[idx], self.name)
 
     def splits(self) -> dict[str, "LetorDataset"]:

@@ -23,7 +23,7 @@ encoding (the paper's trees have ≤ 64 leaves).
 from __future__ import annotations
 
 import dataclasses
-from typing import Sequence
+from collections.abc import Sequence
 
 import jax
 import jax.numpy as jnp
@@ -72,7 +72,7 @@ class TreeEnsemble:
         # Padded complete-tree depth bound: n_leaves = 2**depth.
         return int(np.log2(self.n_leaves))
 
-    def astype(self, dtype) -> "TreeEnsemble":
+    def astype(self, dtype) -> TreeEnsemble:
         return dataclasses.replace(
             self,
             threshold=self.threshold.astype(dtype),

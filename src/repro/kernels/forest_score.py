@@ -101,6 +101,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
 
+from repro.typecheck import Array, Float32, Int32, Ref, UInt32
+
 ALL_ONES = np.uint32(0xFFFFFFFF)
 
 LEAF_GATHERS = ("onehot", "select", "mxu")
@@ -123,6 +125,9 @@ def _leaf_values_onehot(leaf: jax.Array, leaf_tab: jax.Array) -> jax.Array:
     onehot = (
         leaf[:, :, None] == jax.lax.iota(jnp.int32, L)[None, None, :]
     ).astype(jnp.float32)
+    # repro: noqa(TS003) -- reduces over the LEAF axis, not trees: each
+    # row of the one-hot has exactly one nonzero, so the sum SELECTS a
+    # single leaf value and is order-free by construction.
     return jnp.sum(onehot * leaf_tab[None, :, :], axis=2)
 
 
@@ -192,7 +197,8 @@ def _pairwise_tree_sum(per_tree: jax.Array) -> jax.Array:
 
 
 def _score_block(
-    x_ref, feat_ref, thr_ref, mlo_ref, mhi_ref, leaf_ref,
+    x_ref: Ref, feat_ref: Ref, thr_ref: Ref, mlo_ref: Ref, mhi_ref: Ref,
+    leaf_ref: Ref,
     leaf_gather: str = "onehot",
 ) -> jax.Array:
     """One doc-block × tree-block partial score [BB] (steps 1-4 above)."""
@@ -232,16 +238,16 @@ def _score_block(
 
 
 def _forest_score_kernel(
-    x_ref,        # [BB, F] f32
-    feat_ref,     # [BT, N] i32
-    thr_ref,      # [BT, N] f32
-    mlo_ref,      # [BT, N] u32
-    mhi_ref,      # [BT, N] u32
-    leaf_ref,     # [BT, L] f32
-    out_ref,      # [BB] f32 (accumulated over tree-block grid axis)
+    x_ref: Ref,        # [BB, F] f32
+    feat_ref: Ref,     # [BT, N] i32
+    thr_ref: Ref,      # [BT, N] f32
+    mlo_ref: Ref,      # [BT, N] u32
+    mhi_ref: Ref,      # [BT, N] u32
+    leaf_ref: Ref,     # [BT, L] f32
+    out_ref: Ref,      # [BB] f32 (accumulated over tree-block grid axis)
     *,
     leaf_gather: str,
-):
+) -> None:
     partial = _score_block(
         x_ref, feat_ref, thr_ref, mlo_ref, mhi_ref, leaf_ref,
         leaf_gather=leaf_gather,
@@ -256,12 +262,13 @@ def _forest_score_kernel(
 
 
 def _forest_score_segments_kernel(
-    x_ref, feat_ref, thr_ref, mlo_ref, mhi_ref, leaf_ref,
-    out_ref,      # [BB, S] f32 — per-segment partials, accumulated over j
+    x_ref: Ref, feat_ref: Ref, thr_ref: Ref, mlo_ref: Ref, mhi_ref: Ref,
+    leaf_ref: Ref,
+    out_ref: Ref,  # [BB, S] f32 — per-segment partials, accumulated over j
     *,
     seg_block_starts: tuple[int, ...],
     leaf_gather: str,
-):
+) -> None:
     partial = _score_block(
         x_ref, feat_ref, thr_ref, mlo_ref, mhi_ref, leaf_ref,
         leaf_gather=leaf_gather,
@@ -284,7 +291,9 @@ def _forest_score_segments_kernel(
     out_ref[...] += partial[:, None] * seg_onehot[None, :]
 
 
-def _tree_specs(block_t: int, n: int, leaves: int, offset: int):
+def _tree_specs(
+    block_t: int, n: int, leaves: int, offset: int
+) -> list[pl.BlockSpec]:
     spec = lambda width: pl.BlockSpec((block_t, width), lambda i, j: (j + offset, 0))
     return [spec(n), spec(n), spec(n), spec(n), spec(leaves)]
 
@@ -307,12 +316,12 @@ def _check_leaf_gather(leaf_gather: str, n_leaves: int) -> None:
     ),
 )
 def forest_score_pallas(
-    x: jax.Array,          # [B, F] f32 (B % block_b == 0, F lane-padded)
-    feature: jax.Array,    # [T, N] i32 (T % block_t == 0, N power of two)
-    threshold: jax.Array,  # [T, N] f32
-    mask_lo: jax.Array,    # [T, N] u32
-    mask_hi: jax.Array,    # [T, N] u32
-    leaf_value: jax.Array,  # [T, L] f32
+    x: Float32[Array, "b f"],          # B % block_b == 0, F lane-padded
+    feature: Int32[Array, "t n"],      # T % block_t == 0, N power of two
+    threshold: Float32[Array, "t n"],
+    mask_lo: UInt32[Array, "t n"],
+    mask_hi: UInt32[Array, "t n"],
+    leaf_value: Float32[Array, "t l"],
     *,
     block_b: int = 256,
     block_t: int = 16,
@@ -320,7 +329,7 @@ def forest_score_pallas(
     n_tree_blocks: int | None = None,
     leaf_gather: str = "onehot",
     interpret: bool = True,
-) -> jax.Array:
+) -> Float32[Array, "b"]:
     B, F = x.shape
     T, N = feature.shape
     L = leaf_value.shape[1]
@@ -356,12 +365,12 @@ def forest_score_pallas(
     ),
 )
 def forest_score_segments_pallas(
-    x: jax.Array,          # [B, F] f32 (B % block_b == 0, F lane-padded)
-    feature: jax.Array,    # [T, N] i32 (T % block_t == 0, N power of two)
-    threshold: jax.Array,  # [T, N] f32
-    mask_lo: jax.Array,    # [T, N] u32
-    mask_hi: jax.Array,    # [T, N] u32
-    leaf_value: jax.Array,  # [T, L] f32
+    x: Float32[Array, "b f"],          # B % block_b == 0, F lane-padded
+    feature: Int32[Array, "t n"],      # T % block_t == 0, N power of two
+    threshold: Float32[Array, "t n"],
+    mask_lo: UInt32[Array, "t n"],
+    mask_hi: UInt32[Array, "t n"],
+    leaf_value: Float32[Array, "t l"],
     *,
     seg_block_starts: tuple[int, ...],  # ascending, seg_block_starts[0] == 0
     n_tree_blocks: int,                 # launch covers blocks [0, n)
@@ -369,7 +378,7 @@ def forest_score_segments_pallas(
     block_t: int = 16,
     leaf_gather: str = "onehot",
     interpret: bool = True,
-) -> jax.Array:
+) -> Float32[Array, "b s"]:
     """Single launch → per-segment partial scores ``[B, S]``.
 
     Segment ``k`` covers tree blocks ``[seg_block_starts[k],

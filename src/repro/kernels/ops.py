@@ -152,7 +152,10 @@ def launch_counts() -> dict[str, int]:
     return dict(_LAUNCH_COUNTS)
 
 
-def _counted_pallas(kind: str, call, *args, **kwargs):
+def _counted_pallas(
+    kind: str, call: typing.Callable[..., jax.Array],
+    *args: object, **kwargs: object,
+) -> jax.Array:
     """Counting ``pallas_call`` wrapper: record the launch at staging time.
 
     ``call`` is one of the (jitted) Pallas entry points. The counter bumps
@@ -164,7 +167,9 @@ def _counted_pallas(kind: str, call, *args, **kwargs):
     return call(*args, **kwargs)
 
 
-def _pad_to(x: jax.Array, axis: int, multiple: int, value=0):
+def _pad_to(
+    x: jax.Array, axis: int, multiple: int, value: float | jax.Array = 0
+) -> jax.Array:
     size = x.shape[axis]
     pad = (-size) % multiple
     if pad == 0:
@@ -264,7 +269,14 @@ def padded_forest(
         )
 
 
-def _build_padded_forest(ens, cache, key, boundaries, block_t, leaf_gather):
+def _build_padded_forest(
+    ens: TreeEnsemble,
+    cache: OrderedDict,
+    key: tuple,
+    boundaries: tuple[int, ...],
+    block_t: int,
+    leaf_gather: str,
+) -> PaddedForest:
     N = ens.feature.shape[1]
     n_pad = _next_pow2(max(N, 2))
     # Padded nodes: threshold +inf ⇒ predicate always true ⇒ all-ones mask.
@@ -319,7 +331,7 @@ def _build_padded_forest(ens, cache, key, boundaries, block_t, leaf_gather):
     return pf
 
 
-def _prep_x(X: jax.Array, block_b: int):
+def _prep_x(X: jax.Array, block_b: int) -> tuple[jax.Array, int]:
     B = X.shape[0]
     block_b = effective_block_b(block_b, B)
     x = _pad_to(X.astype(jnp.float32), 0, block_b)

@@ -13,7 +13,7 @@ import jax.numpy as jnp
 ALL_ONES = jnp.uint32(0xFFFFFFFF)
 
 
-def _ctz64(hi, lo):
+def _ctz64(hi: jax.Array, lo: jax.Array) -> jax.Array:
     lo_nz = lo != 0
     m = jnp.where(lo_nz, lo, hi)
     ctz32 = jax.lax.population_count(~m & (m - jnp.uint32(1)))
@@ -28,7 +28,14 @@ def leaf_values_ref(leaf: jax.Array, leaf_value: jax.Array) -> jax.Array:
     return jnp.take_along_axis(leaf_value[None], leaf[:, :, None], axis=2)[..., 0]
 
 
-def forest_score_ref(x, feature, threshold, mask_lo, mask_hi, leaf_value):
+def forest_score_ref(
+    x: jax.Array,
+    feature: jax.Array,
+    threshold: jax.Array,
+    mask_lo: jax.Array,
+    mask_hi: jax.Array,
+    leaf_value: jax.Array,
+) -> jax.Array:
     """x: [B, F]; tree arrays [T, N] / [T, L] → scores [B] f32."""
     xf = x[:, feature]                                  # [B, T, N]
     pred_true = xf <= threshold[None]

@@ -2,10 +2,13 @@
 
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
 
-def precision_recall(pred_continue, true_continue, mask):
+def precision_recall(
+    pred_continue: jax.Array, true_continue: jax.Array, mask: jax.Array
+) -> dict[str, float]:
     """Per-class precision/recall for the Continue (1) / Exit (0) classes.
 
     Returns a dict matching the paper's Table 2 layout.

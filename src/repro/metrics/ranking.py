@@ -47,5 +47,7 @@ def ndcg_at_k(scores: jax.Array, labels: jax.Array, mask: jax.Array, k: int = 10
     return jnp.where(idcg > 0, dcg / jnp.maximum(idcg, 1e-12), 1.0)
 
 
-def mean_ndcg(scores, labels, mask, k: int = 10) -> jax.Array:
+def mean_ndcg(
+    scores: jax.Array, labels: jax.Array, mask: jax.Array, k: int = 10
+) -> jax.Array:
     return ndcg_at_k(scores, labels, mask, k).mean()

@@ -25,6 +25,7 @@ variant) or inside (device variant) the compiled step.
 from __future__ import annotations
 
 import math
+from collections.abc import Sequence
 
 import jax
 import jax.numpy as jnp
@@ -35,7 +36,9 @@ import jax.numpy as jnp
 from repro.kernels.ops import effective_block_b as _stage_block
 
 
-def _sane_survivors(stage_survivors, n_docs: float) -> list[float]:
+def _sane_survivors(
+    stage_survivors: Sequence[float], n_docs: float
+) -> list[float]:
     """Clamp decision-time survivor estimates to ``[0, n_docs]``, mapping
     non-finite inputs to the bound they exceed (NaN → 0 — an estimate the
     model knows nothing about must not poison the pick).
@@ -56,8 +59,8 @@ def _sane_survivors(stage_survivors, n_docs: float) -> list[float]:
 
 
 def trees_traversed(
-    continue_mask,
-    mask,
+    continue_mask: jax.Array,
+    mask: jax.Array,
     sentinel: int,
     n_trees: int,
     classifier_trees: int = 0,
@@ -72,7 +75,11 @@ def trees_traversed(
 
 
 def speedup_vs_full(
-    continue_mask, mask, sentinel: int, n_trees: int, classifier_trees: int = 0
+    continue_mask: jax.Array,
+    mask: jax.Array,
+    sentinel: int,
+    n_trees: int,
+    classifier_trees: int = 0,
 ) -> float:
     full = mask.sum() * n_trees
     ee = trees_traversed(continue_mask, mask, sentinel, n_trees, classifier_trees)
@@ -80,11 +87,11 @@ def speedup_vs_full(
 
 
 def trees_traversed_progressive(
-    mask,
-    stage_masks,
-    sentinels,
+    mask: jax.Array,
+    stage_masks: Sequence[jax.Array],
+    sentinels: Sequence[int],
     n_trees: int,
-    classifier_trees=0,
+    classifier_trees: int | Sequence[int] = 0,
 ) -> jnp.ndarray:
     """Multi-sentinel generalization of :func:`trees_traversed`.
 
@@ -114,12 +121,12 @@ def trees_traversed_progressive(
 
 def progressive_cost_model(
     n_docs: float,
-    stage_survivors,
-    sentinels,
+    stage_survivors: Sequence[float],
+    sentinels: Sequence[int],
     n_trees: int,
     mode: str,
     launch_overhead_trees: float = 0.0,
-    stage_capacities=None,
+    stage_capacities: Sequence[int] | None = None,
     block_b: int = 1,
 ) -> float:
     """Estimated device cost of one progressive batch, in tree-traversal
@@ -187,12 +194,12 @@ def progressive_cost_model(
 def progressive_cost_model_device(
     n_docs: int,
     stage_survivors: jax.Array,   # [S] f32 — traced survivor estimates
-    sentinels,
+    sentinels: Sequence[int],
     n_trees: int,
     launch_overhead_trees: float = 0.0,
-    stage_capacities=None,
+    stage_capacities: Sequence[int] | None = None,
     block_b: int = 1,
-):
+) -> tuple[jax.Array, jax.Array]:
     """Traced mirror of :func:`progressive_cost_model` for the IN-PROGRAM
     mode pick: returns ``(fused_cost, staged_cost)`` as f32 device scalars.
 
@@ -254,7 +261,11 @@ def progressive_cost_model_device(
 
 
 def speedup_progressive(
-    mask, stage_masks, sentinels, n_trees: int, classifier_trees=0
+    mask: jax.Array,
+    stage_masks: Sequence[jax.Array],
+    sentinels: Sequence[int],
+    n_trees: int,
+    classifier_trees: int | Sequence[int] = 0,
 ) -> jnp.ndarray:
     """Lazy device scalar (no host sync) — ``float()`` it in a stats path."""
     full = mask.sum() * n_trees

@@ -282,7 +282,8 @@ def _layer_fn(cfg: TransformerConfig, moe: bool):
     return body
 
 
-def _run_stack(cfg, stack, x, positions, mode: _Mode, cache, moe: bool):
+def _run_stack(cfg: TransformerConfig, stack, x, positions, mode: _Mode,
+               cache, moe: bool):
     """scan over stacked layer params; optionally remat each layer."""
     body = _layer_fn(cfg, moe)
 

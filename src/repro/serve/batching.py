@@ -38,6 +38,8 @@ from __future__ import annotations
 import dataclasses
 import threading
 import time
+import typing
+from collections.abc import Sequence
 from concurrent.futures import Future
 
 import numpy as np
@@ -46,6 +48,10 @@ import jax.numpy as jnp
 
 from repro.kernels.forest_score import _next_pow2
 from repro.serve.ranking_service import RankingService
+
+if typing.TYPE_CHECKING:  # annotation-only: placement is constructed by
+    from numpy.typing import ArrayLike  # the tier, never by the batcher
+    from repro.serve.placement import ServePlacement
 
 
 @dataclasses.dataclass(frozen=True)
@@ -62,7 +68,7 @@ class BucketPolicy:
     min_docs: int = 8
     max_docs: int = 4096
 
-    def __post_init__(self):
+    def __post_init__(self) -> None:
         assert self.max_queries >= 1
         assert _next_pow2(self.max_queries) == self.max_queries, (
             "max_queries must be a power of two", self.max_queries
@@ -76,7 +82,7 @@ class BucketPolicy:
     def query_bucket(self, n_queries: int) -> int:
         return min(self.max_queries, _next_pow2(n_queries))
 
-    def buckets(self, doc_counts) -> list[tuple[int, int]]:
+    def buckets(self, doc_counts: Sequence[int]) -> list[tuple[int, int]]:
         """The (Q, D) padded shapes this policy produces for the given doc
         counts — the warmup list: every query bucket up to ``max_queries``
         crossed with each distinct document bucket."""
@@ -126,8 +132,8 @@ class ContinuousBatcher:
         service: RankingService,
         n_features: int,
         policy: BucketPolicy | None = None,
-        placement=None,
-    ):
+        placement: ServePlacement | None = None,
+    ) -> None:
         self.service = service
         self.n_features = int(n_features)
         self.policy = policy or BucketPolicy()
@@ -148,7 +154,7 @@ class ContinuousBatcher:
         )
         self._worker.start()
 
-    def submit(self, features) -> Future:
+    def submit(self, features: ArrayLike) -> Future:
         """Enqueue one query's ``[n_docs, F]`` candidate features; returns a
         Future resolving to ``(top_idx [k], scores [n_docs])``."""
         feats = np.asarray(features, np.float32)
@@ -192,7 +198,9 @@ class ContinuousBatcher:
 
     # -- worker side ------------------------------------------------------
 
-    def _take_ready(self, now: float):
+    def _take_ready(
+        self, now: float
+    ) -> tuple[int | None, list[_Pending] | None, str | None, float | None]:
         """Pop the bucket to flush now, with its trigger, or the earliest
         future deadline. Full buckets beat deadline flushes (they amortize
         best); among deadline-ripe buckets the oldest request wins."""

@@ -30,9 +30,11 @@ expensive here). On a real TPU the same probe measures Mosaic dispatch.
 
 from __future__ import annotations
 
+import contextlib
 import json
 import os
 import time
+from collections.abc import Callable
 
 import jax
 import jax.numpy as jnp
@@ -48,7 +50,9 @@ DEFAULT_LAUNCH_OVERHEAD_TREES = 4096.0  # fallback when the probe degenerates
 _CALIBRATION_CACHE: dict = {}
 
 
-def _min_time_us(fn, *args, iters: int) -> float:
+def _min_time_us(
+    fn: Callable[..., object], *args: object, iters: int
+) -> float:
     fn(*args)  # compile / warm caches outside the timed window
     best = float("inf")
     for _ in range(iters):
@@ -133,7 +137,7 @@ def _record(path: str, payload: dict) -> None:
     """Merge the calibration under ``"launch_calibration"``; never raise —
     a read-only checkout or a corrupt target file must not take the
     serving path down (ValueError covers json.JSONDecodeError)."""
-    try:
+    with contextlib.suppress(OSError, ValueError):
         doc = {}
         if os.path.exists(path):
             with open(path) as f:
@@ -144,5 +148,3 @@ def _record(path: str, payload: dict) -> None:
         with open(path, "w") as f:
             json.dump(doc, f, indent=2)
             f.write("\n")
-    except (OSError, ValueError):
-        pass

@@ -11,13 +11,13 @@ from repro.models import transformer as tfm
 
 def generate(
     cfg: TransformerConfig,
-    params,
+    params: dict,
     prompt_tokens: jax.Array,   # [B, S_prompt]
     n_steps: int,
     cache_len: int | None = None,
     temperature: float = 0.0,
-    key=None,
-):
+    key: jax.Array | None = None,
+) -> jax.Array:
     """Greedy (or sampled) generation; returns [B, n_steps] tokens."""
     B, S = prompt_tokens.shape
     cache_len = cache_len or (S + n_steps)
@@ -38,7 +38,9 @@ def generate(
     return jnp.concatenate(out, axis=1)
 
 
-def _pick(logits, temperature, key, i):
+def _pick(
+    logits: jax.Array, temperature: float, key: jax.Array | None, i: int
+) -> jax.Array:
     if temperature <= 0.0:
         return jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
     k = jax.random.fold_in(key, i)

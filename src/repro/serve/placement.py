@@ -49,7 +49,9 @@ class ServePlacement:
             n *= self.mesh.shape[ax]
         return n
 
-    def put(self, X: jax.Array, mask: jax.Array):
+    def put(
+        self, X: jax.Array, mask: jax.Array
+    ) -> tuple[jax.Array, jax.Array]:
         """Pin ``X [Q, D, F]`` / ``mask [Q, D]`` to the mesh, query-axis
         data-parallel. Identity when ``mesh is None``. A Q not divisible
         by the batch-axis shard count falls back to replication (the

@@ -47,10 +47,16 @@ the ``sentinel_fn`` / ``full_fn`` hooks — see examples/cascade_retrieval.py.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Sequence
+import typing
+from collections.abc import Callable, Sequence
 
 import jax
 import jax.numpy as jnp
+
+if typing.TYPE_CHECKING:  # annotation-only: avoids a serve-package cycle
+    import numpy as np
+
+    from repro.serve.placement import ServePlacement
 
 from repro.core.cascade import CascadeRanker, bucket_capacity
 from repro.core.lear import LearClassifier, augment_features
@@ -123,7 +129,7 @@ class RankingService:
         execution_mode: str = "auto",
         launch_overhead_trees: float | str = "auto",
         survivor_ema: float = 0.3,
-    ):
+    ) -> None:
         assert execution_mode in ("auto", "fused", "staged"), execution_mode
         # The capacity ratchet needs strictly-positive headroom: in staged
         # mode observed survivor peaks are clipped AT the current bucket (a
@@ -190,7 +196,7 @@ class RankingService:
         return self._active_state().peaks
 
     @_stage_peaks.setter
-    def _stage_peaks(self, value) -> None:
+    def _stage_peaks(self, value: list[int] | None) -> None:
         self._active_state().peaks = value
 
     @property
@@ -198,7 +204,7 @@ class RankingService:
         return self._active_state().ema
 
     @_stage_ema.setter
-    def _stage_ema(self, value) -> None:
+    def _stage_ema(self, value: list[float] | None) -> None:
         self._active_state().ema = value
 
     def _make_strategy(self, clf: LearClassifier) -> Callable[..., jax.Array]:
@@ -246,7 +252,9 @@ class RankingService:
             ]
         return [bucket_capacity(w, n_docs) for w in want]
 
-    def _pick_mode(self, n_docs: int, capacities=None) -> str:
+    def _pick_mode(
+        self, n_docs: int, capacities: Sequence[int] | None = None
+    ) -> str:
         """Host-side REFERENCE pick: fused head vs per-stage tails.
 
         Serving no longer calls this per batch — with
@@ -281,7 +289,12 @@ class RankingService:
         }
         return "staged" if cost["staged"] < cost["fused"] else "fused"
 
-    def rank_batch(self, X: jax.Array, mask: jax.Array, placement=None):
+    def rank_batch(
+        self,
+        X: jax.Array,
+        mask: jax.Array,
+        placement: ServePlacement | None = None,
+    ) -> tuple[np.ndarray, np.ndarray]:
         """X: [Q, D, F]; returns (top-k doc indices [Q, k], scores [Q, D]).
 
         Device-resident end to end: the step is submitted with everything
@@ -404,7 +417,9 @@ class TwoStageCascade:
     full_fn: Callable[[jax.Array], jax.Array]       # ids -> full scores
     keep_fraction: float = 0.05
 
-    def score(self, cand_ids: jax.Array):
+    def score(
+        self, cand_ids: jax.Array
+    ) -> tuple[jax.Array, jax.Array, jax.Array]:
         cheap = self.sentinel_fn(cand_ids)
         C = cand_ids.shape[0]
         keep = max(1, int(C * self.keep_fraction))

@@ -20,7 +20,13 @@ impossible.
 
 from __future__ import annotations
 
+import typing
+from collections.abc import Sequence
 from concurrent.futures import Future
+
+if typing.TYPE_CHECKING:
+    import numpy as np
+    from numpy.typing import ArrayLike
 
 from repro.serve.batching import BatcherStats, BucketPolicy, ContinuousBatcher
 from repro.serve.placement import ServePlacement, single_device
@@ -37,13 +43,13 @@ class ServingTier:
         self,
         service: RankingService,
         n_features: int,
-        doc_counts=(64,),
+        doc_counts: Sequence[int] = (64,),
         policy: BucketPolicy | None = None,
         placement: ServePlacement | None = None,
         warmup: bool = True,
         persistent_cache: bool = True,
         cache_dir: str | None = None,
-    ):
+    ) -> None:
         self.service = service
         self.n_features = int(n_features)
         self.policy = policy or BucketPolicy()
@@ -58,7 +64,7 @@ class ServingTier:
         )
         self._started = False
 
-    def start(self) -> "ServingTier":
+    def start(self) -> ServingTier:
         assert not self._started, "tier already started"
         cache_dir = (
             enable_persistent_cache(self.cache_dir)
@@ -76,12 +82,12 @@ class ServingTier:
         self._started = True
         return self
 
-    def submit(self, features) -> Future:
+    def submit(self, features: ArrayLike) -> Future:
         """Non-blocking: one query's ``[n_docs, F]`` candidates → Future of
         ``(top_idx, scores)``."""
         return self.batcher.submit(features)
 
-    def rank(self, features):
+    def rank(self, features: ArrayLike) -> tuple[np.ndarray, np.ndarray]:
         """Blocking convenience wrapper around :meth:`submit`."""
         return self.submit(features).result()
 

@@ -32,11 +32,16 @@ import dataclasses
 import os
 import tempfile
 import time
+import typing
+from collections.abc import Sequence
 
 import jax
 import jax.numpy as jnp
 
 from repro.serve.ranking_service import RankingService, ServiceStats
+
+if typing.TYPE_CHECKING:  # annotation-only: avoids a serve-package cycle
+    from repro.serve.placement import ServePlacement
 
 DEFAULT_WARMUP_BUCKETS = ((1, 64), (4, 64), (8, 64))
 
@@ -75,11 +80,11 @@ class WarmupReport:
 def warmup_service(
     service: RankingService,
     n_features: int,
-    buckets=DEFAULT_WARMUP_BUCKETS,
+    buckets: Sequence[tuple[int, int]] = DEFAULT_WARMUP_BUCKETS,
     *,
     seed_peak_frac: float = 1.0,
     run_both_branches: bool = True,
-    placement=None,
+    placement: ServePlacement | None = None,
 ) -> WarmupReport:
     """Compile (and execute) every ``(Q, D)`` serving bucket up front.
 

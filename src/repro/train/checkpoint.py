@@ -14,6 +14,7 @@ in at ``_to_numpy``; on CPU all arrays are host-local).
 
 from __future__ import annotations
 
+import contextlib
 import json
 import os
 import re
@@ -80,10 +81,8 @@ def _gc(directory: str, keep_last: int) -> None:
     steps = _steps(directory)
     for s in steps[:-keep_last] if keep_last else []:
         for ext in (".npz", ".json"):
-            try:
+            with contextlib.suppress(FileNotFoundError):
                 os.remove(os.path.join(directory, f"step_{s:010d}{ext}"))
-            except FileNotFoundError:
-                pass
 
 
 def latest_step(directory: str) -> int | None:

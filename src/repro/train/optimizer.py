@@ -16,7 +16,7 @@ sharding of their params).
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable
+from collections.abc import Callable
 
 import jax
 import jax.numpy as jnp

@@ -1,0 +1,124 @@
+"""Shape/dtype annotation support for the kernel entry points.
+
+Two jobs:
+
+1. **Import-safe jaxtyping aliases.**  ``Float32``/``Int32``/``UInt32``
+   re-export jaxtyping when it is installed and degrade to plain
+   ``jax.Array`` subscript shims when it is not — annotating a module
+   with ``Float32[Array, "b f"]`` must never make it unimportable on a
+   minimal box.
+2. **A runtime-checked lane.**  :func:`shape_checked` wraps a function
+   whose annotations are jaxtyping array types and validates argument
+   and return shapes/dtypes at call time, with dim variables bound
+   consistently ACROSS arguments (``"t n"`` on two operands means the
+   same ``t`` and ``n``).  The tier-1 shape tests
+   (``tests/test_shapes.py``) drive the kernel entry points through it;
+   production call sites stay unwrapped — zero hot-path overhead.
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+import typing
+from collections.abc import Callable
+from typing import Any, TypeVar
+
+import jax
+
+Array = jax.Array
+
+# Pallas kernel-body operands.  There is no stable public type for the
+# mutable block references pallas passes to kernel bodies, so ``Ref`` is
+# ``Any`` at runtime — but the NAME matters: the tracer-safety analyzer
+# treats ``Ref``-annotated parameters as device values (tainted), so
+# annotating a kernel body never weakens TS002/TS003 detection.
+Ref = Any
+
+try:
+    from jaxtyping import AbstractArray as _AbstractArray
+    from jaxtyping import Bool, Float32, Int32, UInt32, jaxtyped
+
+    HAVE_JAXTYPING = True
+except ImportError:  # pragma: no cover - exercised only on minimal boxes
+    HAVE_JAXTYPING = False
+    _AbstractArray = None  # type: ignore[assignment, misc]
+
+    class _ArrayShim:
+        """``Float32[Array, "b f"]`` → ``jax.Array`` when jaxtyping is
+        absent: annotations keep their meaning for readers and stay
+        valid at runtime, runtime checking is disabled."""
+
+        def __class_getitem__(cls, item: object) -> type:
+            return jax.Array
+
+    Bool = Float32 = Int32 = UInt32 = _ArrayShim  # type: ignore[assignment, misc]
+
+    def jaxtyped(*, typechecker: object = None) -> Callable:  # type: ignore[misc]
+        def deco(fn: Callable) -> Callable:
+            return fn
+
+        return deco
+
+
+F = TypeVar("F", bound=Callable)
+
+
+def _is_array_hint(hint: object) -> bool:
+    return (
+        HAVE_JAXTYPING
+        and isinstance(hint, type)
+        and issubclass(hint, _AbstractArray)
+    )
+
+
+def _describe(value: object) -> str:
+    shape = getattr(value, "shape", None)
+    dtype = getattr(value, "dtype", None)
+    if shape is None:
+        return repr(type(value))
+    return f"shape={tuple(shape)} dtype={dtype}"
+
+
+def shape_checked(fn: Callable) -> Callable:
+    """Wrap ``fn`` so its jaxtyping annotations are enforced per call.
+
+    Works on jit-wrapped callables too (hints are read through
+    ``__wrapped__``; the wrapped/compiled callable is still what runs).
+    When jaxtyping is unavailable the function is returned unchanged.
+    """
+    if not HAVE_JAXTYPING:
+        return fn
+    target = inspect.unwrap(fn)
+    hints = typing.get_type_hints(target)
+    sig = inspect.signature(target)
+    array_hints = {
+        name: hint for name, hint in hints.items() if _is_array_hint(hint)
+    }
+    if not array_hints:
+        return fn
+    return_hint = array_hints.pop("return", None)
+
+    @functools.wraps(fn)
+    @jaxtyped(typechecker=None)
+    def wrapper(*args: Any, **kwargs: Any) -> Any:
+        bound = sig.bind(*args, **kwargs)
+        for name, hint in array_hints.items():
+            if name not in bound.arguments:
+                continue
+            value = bound.arguments[name]
+            if not isinstance(value, hint):
+                raise TypeError(
+                    f"{target.__name__}: argument `{name}` "
+                    f"({_describe(value)}) does not satisfy {hint} "
+                    "(dim variables bind across arguments)"
+                )
+        out = fn(*args, **kwargs)
+        if return_hint is not None and not isinstance(out, return_hint):
+            raise TypeError(
+                f"{target.__name__}: return value ({_describe(out)}) "
+                f"does not satisfy {return_hint}"
+            )
+        return out
+
+    return wrapper

@@ -1,0 +1,16 @@
+"""Suppression fixture: both noqa placements silence a real finding."""
+
+import jax
+import numpy as np
+
+
+@jax.jit
+def step(x):
+    return np.asarray(x)  # repro: noqa(TS001) -- fixture: deliberate waiver
+
+
+@jax.jit
+def step2(x):
+    # repro: noqa(TS001, TS002) -- fixture: comment-line waiver applies
+    # to the next code line (multi-line justifications welcome)
+    return np.asarray(x)

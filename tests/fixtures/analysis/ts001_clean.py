@@ -1,0 +1,16 @@
+"""TS001 fixture (clean): shape math and host-side syncs are fine."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.jit
+def step(x, scale: float):
+    n = float(x.shape[0])  # shape access is trace-time
+    return jnp.sum(x) * scale / n
+
+
+def host_summary(batch):
+    # never reachable from a jit root — host code may sync freely
+    return float(np.asarray(batch).mean())

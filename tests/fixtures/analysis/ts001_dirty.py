@@ -1,0 +1,18 @@
+"""TS001 fixture: host syncs reachable from a jitted function."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def helper(x):
+    # reached from `step` below — np.asarray forces a device→host copy
+    return np.asarray(x)
+
+
+@jax.jit
+def step(x):
+    total = jnp.sum(x)
+    host = float(total)
+    ready = total.item()
+    return helper(x) + host + ready

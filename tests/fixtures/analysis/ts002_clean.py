@@ -1,0 +1,13 @@
+"""TS002 fixture (clean): branching on static config and shapes."""
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def normalize(x, method: str = "l2", eps: float = 1e-6):
+    if method == "l2":  # annotated str parameter — static
+        return x / (jnp.sqrt(jnp.sum(x * x)) + eps)
+    if x.shape[0] > 1:  # shape — trace-time Python int
+        return x / x.shape[0]
+    return jnp.where(x > 0, x, 0.0)  # data dependence stays in ops

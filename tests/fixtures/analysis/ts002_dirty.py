@@ -1,0 +1,12 @@
+"""TS002 fixture: Python control flow on traced values."""
+
+import jax
+
+
+@jax.jit
+def clip_positive(x):
+    if x.sum() > 0:
+        return x
+    while x.any():
+        x = x - 1
+    return -x

@@ -1,0 +1,21 @@
+"""TS003 fixture (clean): tree axis reduced through the sanctioned
+pairwise halving."""
+
+from jax.experimental import pallas as pl
+
+
+def _pairwise_tree_sum(per_tree):
+    n = per_tree.shape[1]
+    while n > 1:
+        half = n // 2
+        per_tree = per_tree[:, :half] + per_tree[:, half : 2 * half]
+        n = half
+    return per_tree[:, 0]
+
+
+def _kernel(x_ref, o_ref):
+    o_ref[...] = _pairwise_tree_sum(x_ref[...])
+
+
+def score(x, out_shape):
+    return pl.pallas_call(_kernel, out_shape=out_shape)(x)

@@ -1,0 +1,22 @@
+"""TS003 fixture: reassociating reductions inside a Pallas kernel."""
+
+import functools
+
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, o_ref):
+    vals = x_ref[...]
+    total = jnp.sum(vals, axis=1)  # bare sum over the tree axis
+    acc = jnp.zeros_like(total)
+    for t in range(4):
+        acc += vals[:, t]  # += accumulation loop
+    o_ref[...] = total + acc
+
+
+def score(x, out_shape):
+    return pl.pallas_call(
+        functools.partial(_kernel),
+        out_shape=out_shape,
+    )(x)

@@ -1,0 +1,12 @@
+"""TS004 fixture (clean): environment read once at module scope."""
+
+import os
+
+import jax
+
+SCALE_K = int(os.environ.get("SCALE_K", "4"))
+
+
+@jax.jit
+def scale(x):
+    return x * SCALE_K

@@ -1,0 +1,13 @@
+"""TS004 fixture: environment reads inside a jitted body."""
+
+import os
+
+import jax
+
+
+@jax.jit
+def scale(x):
+    k = int(os.environ.get("SCALE_K", "4"))
+    bias = int(os.getenv("BIAS", "0"))
+    limit = int(os.environ["LIMIT"])
+    return x * k + bias - limit

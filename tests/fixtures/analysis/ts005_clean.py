@@ -1,0 +1,36 @@
+"""TS005 fixture (clean): only the worker loop and the sanctioned
+lifecycle methods touch the engine."""
+
+
+def warmup_service(service):
+    return service
+
+
+class RankingService:
+    def rank_batch(self, X, mask):
+        return X, mask
+
+
+class ContinuousBatcher:
+    def __init__(self, service):
+        self.service = service
+        self.queue = []
+
+    def submit(self, query):
+        self.queue.append(query)  # enqueue only — the worker dequeues
+
+    def _run(self):
+        while self.queue:
+            self._flush()
+
+    def _flush(self):
+        batch = self.queue.pop()
+        return self.service.rank_batch(batch, None)
+
+
+class ServingTier:
+    def __init__(self, service):
+        self.batcher = ContinuousBatcher(service)
+
+    def start(self):
+        warmup_service(self.batcher.service)

@@ -1,0 +1,31 @@
+"""TS005 fixture: engine calls from client-facing serving methods."""
+
+
+def warmup_service(service):
+    return service
+
+
+class RankingService:
+    def rank_batch(self, X, mask):
+        return X, mask
+
+
+class ContinuousBatcher:
+    def __init__(self, service):
+        self.service = service
+
+    def submit(self, query):
+        # client thread touching the engine directly
+        return self.service.rank_batch(query, None)
+
+    def _run(self):
+        pass
+
+
+class ServingTier:
+    def __init__(self, service):
+        self.batcher = ContinuousBatcher(service)
+
+    def stop(self):
+        # warmup belongs in start(), before the worker exists
+        warmup_service(self.batcher.service)

@@ -1,0 +1,16 @@
+"""TS006 fixture: two transfer sites reachable from rank_batch."""
+
+import jax
+
+
+class RankingService:
+    def rank_batch(self, X, mask):
+        out = self._compute(X, mask)
+        stats = jax.device_get(out)
+        return stats, self._peek(out)
+
+    def _compute(self, X, mask):
+        return X
+
+    def _peek(self, out):
+        return out.item()  # second transfer on the hot path

@@ -1,0 +1,113 @@
+"""Tests for the tracer-safety analyzer (repro.analysis).
+
+Three layers: the fixture corpus (each rule has a known-dirty and a
+known-clean file), the suppression syntax, and the contract that the
+REAL ``src/repro`` tree is clean — that last test is what makes the
+analyzer a regression gate rather than a demo.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import run_paths
+
+FIXTURES = Path(__file__).resolve().parent / "fixtures" / "analysis"
+SRC_REPRO = Path(__file__).resolve().parent.parent / "src" / "repro"
+ALL_CODES = ("TS001", "TS002", "TS003", "TS004", "TS005", "TS006")
+
+EXPECTED_DIRTY_COUNTS = {
+    "TS001": 3,  # float(), .item(), np.asarray via helper
+    "TS002": 2,  # if + while on traced values
+    "TS003": 2,  # bare jnp.sum + "+=" loop
+    "TS004": 3,  # os.environ.get, os.getenv, os.environ[...]
+    "TS005": 2,  # batcher.submit engine call + tier.stop warmup
+    "TS006": 1,  # the second transfer site
+}
+
+
+def _codes(path: Path) -> set[str]:
+    return {f.code for f in run_paths([path])}
+
+
+@pytest.mark.parametrize("code", ALL_CODES)
+def test_dirty_fixture_flags_its_rule_and_only_it(code: str):
+    findings = run_paths([FIXTURES / f"{code.lower()}_dirty.py"])
+    assert {f.code for f in findings} == {code}
+    assert len(findings) == EXPECTED_DIRTY_COUNTS[code]
+    for f in findings:
+        assert f.line > 0
+        assert f.hint  # every finding carries its one-line fix
+        assert code in f.format()
+
+
+@pytest.mark.parametrize("code", ALL_CODES)
+def test_clean_fixture_is_clean(code: str):
+    assert _codes(FIXTURES / f"{code.lower()}_clean.py") == set()
+
+
+def test_suppression_comment_silences_findings():
+    # suppressed.py is ts001-dirty twice over, with both noqa placements
+    assert _codes(FIXTURES / "suppressed.py") == set()
+
+
+def test_suppression_is_code_specific():
+    # the same dirty file WITHOUT matching codes must still flag:
+    # selecting a different rule set proves noqa(TS001) does not blanket
+    findings = run_paths([FIXTURES / "ts001_dirty.py"], codes=["TS001"])
+    assert findings, "unsuppressed dirty fixture must flag"
+    findings = run_paths([FIXTURES / "suppressed.py"], codes=["TS001"])
+    assert findings == []
+
+
+def test_real_tree_is_clean():
+    findings = run_paths([SRC_REPRO])
+    assert findings == [], "\n".join(f.format() for f in findings)
+
+
+def _run_cli(*args: str) -> subprocess.CompletedProcess:
+    env = dict(os.environ)
+    src = str(SRC_REPRO.parent)
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    return subprocess.run(
+        [sys.executable, "-m", "repro.analysis", *args],
+        capture_output=True, text=True, env=env, timeout=120,
+    )
+
+
+def test_cli_exit_codes_and_json():
+    dirty = _run_cli(str(FIXTURES / "ts001_dirty.py"), "--format", "json")
+    assert dirty.returncode == 1
+    payload = json.loads(dirty.stdout)
+    assert all(f["code"] == "TS001" for f in payload)
+
+    clean = _run_cli(str(FIXTURES / "ts001_clean.py"))
+    assert clean.returncode == 0
+
+    rules = _run_cli("--list-rules")
+    assert rules.returncode == 0
+    for code in ALL_CODES:
+        assert code in rules.stdout
+
+
+def test_check_invariants_cli_entry():
+    tool = SRC_REPRO.parent.parent / "tools" / "check_invariants.py"
+    proc = subprocess.run(
+        [sys.executable, str(tool), str(FIXTURES / "ts006_dirty.py")],
+        capture_output=True, text=True, timeout=120,
+    )
+    assert proc.returncode == 1
+    assert "TS006" in proc.stdout
+
+
+def test_select_filters_rules():
+    findings = run_paths(
+        [FIXTURES / "ts001_dirty.py"], codes=["TS004"]
+    )
+    assert findings == []

@@ -1,0 +1,22 @@
+#!/usr/bin/env python
+"""CLI entry for the tracer-safety analyzer (CI `invariants` job).
+
+Equivalent to ``python -m repro.analysis`` but runnable from the repo
+root without PYTHONPATH plumbing — it inserts ``src/`` itself.  Exits
+nonzero on any unsuppressed finding.
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+
+sys.path.insert(
+    0,
+    os.path.join(os.path.dirname(os.path.abspath(__file__)), "..", "src"),
+)
+
+from repro.analysis import main  # noqa: E402
+
+if __name__ == "__main__":
+    sys.exit(main())
