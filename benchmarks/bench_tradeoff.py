@@ -4,20 +4,42 @@ Fig. 2: for each sentinel, sweep the LEAR confidence threshold (0.1–0.7)
 and the EPT proximity threshold (0.3–0.8); report (speedup, ΔNDCG@10).
 Fig. 3: best-sentinel LEAR vs best-sentinel EPT on both datasets, plus the
 dominance check (LEAR ≥ EPT speedup at matched quality).
+
+:func:`tradeoff_configs` extends the figures with the strategy-composition
+table: {LEAR, LEAR+query-exit, LEAR+reorder, both} run through the real
+progressive engine at matched NDCG@10, recording trees traversed and wall
+clock per configuration (the experiment-scale counterpart of the
+self-contained ``tradeoff`` section in ``bench_kernels.py``).
 """
 
 from __future__ import annotations
 
+import time
+
+import jax
 import jax.numpy as jnp
 
 from benchmarks.common import Experiment, get_experiment
-from repro.core.lear import augment_features
-from repro.core.strategies import ept_continue
+from repro.core.cascade import CascadeRanker
+from repro.core.lear import augment_features, train_lear
+from repro.core.strategies import QueryExitConfig, ept_continue
+from repro.forest.reorder import reordered_ensemble
 from repro.metrics.ranking import mean_ndcg
-from repro.metrics.speedup import speedup_vs_full
+from repro.metrics.speedup import (
+    speedup_vs_full,
+    trees_traversed_progressive,
+)
 
 LEAR_THRESHOLDS = (0.02, 0.05, 0.1, 0.2, 0.3, 0.4, 0.5, 0.6, 0.7)
 EPT_PS = (0.3, 0.4, 0.5, 0.6, 0.7, 0.8)
+QUERY_EXIT_MARGINS = (float("inf"), 0.5, 0.25, 0.1)
+# Stages before which query convergence is never checked: later stages see
+# deeper prefixes, so short queries can't exit vacuously on early scores.
+QUERY_EXIT_FROM_STAGES = (0, 1, 2)
+# The permuted prefixes shift the retrained classifiers' operating points,
+# so the reorder config sweeps its own threshold (matched NDCG, not
+# matched threshold).
+REORDER_THRESHOLDS = (0.1, 0.2, 0.3, 0.5)
 
 
 def sweep(exp: Experiment, split: str = "test"):
@@ -61,6 +83,142 @@ def best_at_quality(curve_pts, max_loss_pct: float = 0.05):
     if not ok:
         return None
     return max(ok, key=lambda p: p["speedup"])
+
+
+def _lear_strategy(clf, X, threshold):
+    """Per-stage engine strategy closing over the batch features."""
+    def strat(partial, alive):
+        aug = augment_features(X, partial, alive)
+        return clf.continue_mask(aug, alive, threshold=threshold)
+    return strat
+
+
+def tradeoff_configs(exp: Experiment, split: str = "test",
+                     threshold: float = 0.3, max_loss_pct: float = 0.25,
+                     iters: int = 5):
+    """Strategy-composition table at matched NDCG@10, on the real engine.
+
+    Runs {LEAR, LEAR+query-exit, LEAR+reorder, both} through
+    ``rank_progressive`` with the experiment's trained classifiers (the
+    reorder configs retrain them against the permuted prefixes) and
+    reports NDCG@10, trees traversed, and wall clock. Query-exit sweeps
+    (margin, from_stage) pairs whose margins always include ``inf``
+    (exact mode, scores bit-identical to the document-only run), the
+    reorder sweeps its own LEAR threshold, and both fall back to the
+    identity order, so every returned config matches the LEAR operating
+    point within ``max_loss_pct`` and never traverses more trees than it.
+    """
+    ds = exp.splits[split]
+    sentinels = list(exp.spec.sentinels)
+    T = exp.ranker.n_trees
+    X = jnp.asarray(ds.X)
+    mask = jnp.asarray(ds.mask)
+    labels = jnp.asarray(ds.labels)
+    Q, D, _F = ds.X.shape
+    cls_split = exp.splits["classifier"]
+
+    def retrained(ranker):
+        return {
+            s: train_lear(cls_split.X, cls_split.labels, cls_split.mask,
+                          ranker, sentinel=s, k=15)
+            for s in sentinels
+        }
+
+    def run(ranker, clfs, qe, tag, thr=threshold):
+        cascade = CascadeRanker(
+            ensemble=ranker, sentinel=sentinels[0],
+            strategy=_lear_strategy(clfs[sentinels[0]], X, thr),
+        )
+        strategies = [
+            _lear_strategy(clfs[s], X, thr) for s in sentinels
+        ]
+
+        def call():
+            return cascade.rank_progressive(
+                X, mask, sentinels=sentinels, capacities=Q * D,
+                strategies=strategies, mode="fused", query_exit=qe,
+            )
+
+        res = call()
+        best = float("inf")
+        for _ in range(iters):
+            t0 = time.perf_counter()
+            jax.block_until_ready(call().scores)
+            best = min(best, time.perf_counter() - t0)
+        return {
+            "order": tag,
+            "threshold": thr,
+            "query_exit_margin": None if qe is None else qe.margin,
+            "query_exit_from_stage": None if qe is None else qe.from_stage,
+            "ndcg@10": float(mean_ndcg(res.scores, labels, mask, 10)),
+            "trees": float(trees_traversed_progressive(
+                mask, res.stage_masks, sentinels, T,
+                classifier_trees=[clfs[s].n_trees for s in sentinels],
+            )),
+            "queries_exited": (
+                int(res.query_exited.sum())
+                if res.query_exited is not None else 0
+            ),
+            "wall_us": best * 1e6,
+        }
+
+    base = run(exp.ranker, exp.classifiers, None, "identity")
+    bar = base["ndcg@10"] * (1 - max_loss_pct / 100)
+
+    def best_of(cands):
+        ok = [c for c in cands if c["ndcg@10"] >= bar]
+        return min(ok, key=lambda c: c["trees"])   # inf margin ⇒ non-empty
+
+    from_stages = tuple(
+        fs for fs in QUERY_EXIT_FROM_STAGES if fs < len(sentinels)
+    )
+
+    def qe_sweep(ranker, clfs, tag, thr):
+        cands = [run(ranker, clfs,
+                     QueryExitConfig(k=10, margin=float("inf")), tag, thr)]
+        for m in QUERY_EXIT_MARGINS:
+            if m == float("inf"):
+                continue
+            for fs in from_stages:
+                cands.append(run(
+                    ranker, clfs,
+                    QueryExitConfig(k=10, margin=m, from_stage=fs),
+                    tag, thr,
+                ))
+        return cands
+
+    qe_best = best_of(
+        qe_sweep(exp.ranker, exp.classifiers, "identity", threshold)
+    )
+    QD = cls_split.X.shape[0] * cls_split.X.shape[1]
+    permuted, _order = reordered_ensemble(
+        exp.ranker, jnp.asarray(cls_split.X.reshape(QD, -1)),
+        method="greedy",
+    )
+    clfs_p = retrained(permuted)
+    re_best = best_of([base] + [
+        run(permuted, clfs_p, None, "greedy", t) for t in REORDER_THRESHOLDS
+    ])
+    both_ens, both_clfs = (
+        (permuted, clfs_p) if re_best["order"] == "greedy"
+        else (exp.ranker, exp.classifiers)
+    )
+    both_best = best_of(
+        qe_sweep(both_ens, both_clfs, re_best["order"], re_best["threshold"])
+    )
+
+    table = {}
+    for name, cand in (
+        ("lear", base), ("lear+query_exit", qe_best),
+        ("lear+reorder", re_best), ("lear+query_exit+reorder", both_best),
+    ):
+        table[name] = {
+            **cand,
+            "delta_pct": 100 * (cand["ndcg@10"] - base["ndcg@10"])
+            / base["ndcg@10"],
+            "trees_vs_lear": cand["trees"] / base["trees"],
+        }
+    return table
 
 
 def main(csv: bool = True):
@@ -109,6 +267,20 @@ def main(csv: bool = True):
         )
         print(f"fig3_{name}_lear_dominates,{dominated}/{len(ept_all)},"
               f"EPT operating points matched-or-beaten by LEAR on both axes")
+        # Strategy composition: {LEAR, +query-exit, +reorder, both} on the
+        # progressive engine at matched NDCG (see tradeoff_configs).
+        table = tradeoff_configs(exp)
+        results[name + "_configs"] = table
+        if csv:
+            for cfg, row in table.items():
+                print(
+                    f"tradeoff_{name}_{cfg},order={row['order']},"
+                    f"margin={row['query_exit_margin']},"
+                    f"ndcg@10={row['ndcg@10']:.4f},"
+                    f"delta_pct={row['delta_pct']:+.3f},"
+                    f"trees_vs_lear={row['trees_vs_lear']:.3f},"
+                    f"wall_us={row['wall_us']:.0f}"
+                )
     return results
 
 

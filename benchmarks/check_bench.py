@@ -14,7 +14,13 @@ Kernel bench (:func:`validate`):
 - the mode-pick contract holds (``pick_agrees`` and
   ``auto_bitexact_with_picked_branch`` true at every swept rate);
 - the kernel paths' exactness flags hold (``bitexact`` per leaf-gather
-  point, ``matches_argsort`` per blocked-rank point).
+  point, ``matches_argsort`` per blocked-rank point);
+- the ``tradeoff`` section (:func:`validate_tradeoff`) carries all four
+  configurations ({LEAR, +query-exit, +reorder, both}), each meeting the
+  matched-NDCG bar with positive finite trees/wall numbers, and no
+  enhanced config traverses MORE trees than document-only LEAR (the
+  margin sweep contains the exact ``inf`` mode and the reorder falls
+  back to identity, so ``trees_vs_lear ≤ 1`` must hold structurally).
 
 Serve bench (:func:`validate_serve`):
 
@@ -43,12 +49,47 @@ sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
 
 REQUIRED_SECTIONS = (
     "rows", "fused_vs_staged", "leaf_gather", "blocked_rank",
-    "launch_calibration",
+    "launch_calibration", "tradeoff",
+)
+
+TRADEOFF_CONFIGS = (
+    "lear", "lear+query_exit", "lear+reorder", "lear+query_exit+reorder",
 )
 
 
 def _positive_finite(x: object) -> bool:
     return isinstance(x, (int, float)) and math.isfinite(x) and x > 0
+
+
+def validate_tradeoff(td: dict) -> list[str]:
+    """Contract findings for the query-exit/reorder tradeoff section."""
+    problems: list[str] = []
+    configs = {c.get("name"): c for c in td.get("configs", [])}
+    for name in TRADEOFF_CONFIGS:
+        if name not in configs:
+            problems.append(f"tradeoff: missing config {name!r}")
+            continue
+        c = configs[name]
+        if not _positive_finite(c.get("wall_us")):
+            problems.append(f"tradeoff {name}: bad wall_us {c.get('wall_us')!r}")
+        if not _positive_finite(c.get("trees_traversed")):
+            problems.append(
+                f"tradeoff {name}: bad trees_traversed "
+                f"{c.get('trees_traversed')!r}"
+            )
+        ndcg = c.get("ndcg10")
+        if not (_positive_finite(ndcg) and ndcg <= 1.0):
+            problems.append(f"tradeoff {name}: bad ndcg10 {ndcg!r}")
+        if not c.get("meets_ndcg_bar"):
+            problems.append(f"tradeoff {name}: fails the matched-NDCG bar")
+        ratio = c.get("trees_vs_lear")
+        if not (_positive_finite(ratio) and ratio <= 1.0 + 1e-9):
+            problems.append(
+                f"tradeoff {name}: trees_vs_lear {ratio!r} not in (0, 1] — "
+                "an enhanced config must never traverse more than "
+                "document-only LEAR"
+            )
+    return problems
 
 
 def validate(payload: dict) -> list[str]:
@@ -107,6 +148,8 @@ def validate(payload: dict) -> list[str]:
     loh = payload["launch_calibration"].get("launch_overhead_trees")
     if not (isinstance(loh, (int, float)) and math.isfinite(loh) and loh >= 0):
         problems.append("launch_calibration: bad launch_overhead_trees")
+
+    problems += validate_tradeoff(payload["tradeoff"])
     return problems
 
 

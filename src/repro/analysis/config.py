@@ -41,6 +41,20 @@ TRACED_ROOT_SUFFIXES: tuple[str, ...] = (
 # pairwise halving → bit-exact across leaf-gather paths).
 TREE_SUM_ALLOWED: tuple[str, ...] = ("_pairwise_tree_sum",)
 
+# TS003 checks kernel scope PLUS everything reachable from these roots.
+# The tree-reordering path (``forest/reorder.py``) lives outside kernel
+# bodies but carries the same contract: a permuted ensemble is bit-exact
+# with identity ordering only while every tree-axis total between the
+# per-tree leaf values and a score goes through ``_pairwise_tree_sum``
+# (host-side float64 order *learning* is exempt by construction — it
+# never touches scores).  Matched as suffixes of the analyzer's
+# fully-qualified ids, same idiom as ``TRACED_ROOT_SUFFIXES``.
+TREE_SUM_EXTRA_ROOT_SUFFIXES: tuple[str, ...] = (
+    ":per_tree_contributions",
+    ":prefix_residual",
+    ":reorder_trees",
+)
+
 # --- TS005: thread discipline ------------------------------------------
 # serve/ classes whose methods face client threads, mapped to the ONLY
 # methods allowed to call into the engine.  ``ContinuousBatcher._run``

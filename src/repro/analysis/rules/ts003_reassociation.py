@@ -8,6 +8,13 @@ association order does not depend on tree count or padding.  A bare
 scope reduces in a different order and silently breaks the
 bit-exactness contract the parity tests pin.
 
+The same discipline covers the tree-reordering path: a permuted
+ensemble (``forest/reorder.py``) scores bit-exactly with identity
+ordering only while every tree-axis total it reaches goes through the
+sanctioned reducer, so the reorder entry points named by
+``config.TREE_SUM_EXTRA_ROOT_SUFFIXES`` (and everything they call)
+join the checked scope.
+
 Reductions that are provably order-free (one-hot row selection, integer
 adds) may be waived with ``# repro: noqa(TS003) -- <why>``.
 """
@@ -37,7 +44,21 @@ class ReassociationRule:
     def check(
         self, project: ProjectIndex, suppressions: Suppressions
     ) -> Iterator[Finding]:
-        for func in project.functions_in(project.kernel_scope):
+        # Scope = kernel bodies plus the tree-reordering path: the extra
+        # roots (config.TREE_SUM_EXTRA_ROOT_SUFFIXES) are matched by
+        # fully-qualified-id suffix and expanded through the call graph,
+        # so helpers a reorder entry point reaches are held to the same
+        # reduction discipline as kernel helpers.
+        extra_roots = {
+            fid
+            for fid in project.functions
+            if any(
+                fid.endswith(sfx)
+                for sfx in config.TREE_SUM_EXTRA_ROOT_SUFFIXES
+            )
+        }
+        scope = project.kernel_scope | project.reachable_from(extra_roots)
+        for func in project.functions_in(scope):
             if func.name in config.TREE_SUM_ALLOWED:
                 continue
             mod = project.modules[func.module]

@@ -20,7 +20,13 @@ ensembles, plus the heuristic baselines it is evaluated against.
   O(n log n) argsort reference it replaced.
 """
 
-from repro.core.strategies import ert_continue, ept_continue, ideal_continue
+from repro.core.strategies import (
+    QueryExitConfig,
+    ept_continue,
+    ert_continue,
+    ideal_continue,
+    query_converged,
+)
 from repro.core.features import augment_features
 from repro.core.lear import (
     LearClassifier,
@@ -35,9 +41,11 @@ from repro.core.compaction import (
 )
 
 __all__ = [
+    "QueryExitConfig",
     "ert_continue",
     "ept_continue",
     "ideal_continue",
+    "query_converged",
     "LearClassifier",
     "augment_features",
     "build_continue_labels",

@@ -97,6 +97,7 @@ from repro.core.compaction import (
     compact_indices_cumsum,
     compact_indices_cumsum_masked,
 )
+from repro.core.strategies import QueryExitConfig, query_converged
 from repro.forest.ensemble import TreeEnsemble, slice_trees
 from repro.forest.scoring import score_bitvector
 from repro.kernels.ops import (
@@ -136,6 +137,9 @@ class CascadeResult:
     mode: str | None = None            # progressive: "fused"|"staged"|"auto"
     picked_staged: jax.Array | None = None  # mode="auto": lazy device bool —
     #   which cond branch executed (True = staged); None for fixed modes
+    query_exited: jax.Array | None = None  # query_exit enabled: [Q] lazy bool
+    #   — queries whose remaining docs were removed by query-level exit
+    #   (converged top-k or no alive docs); None when the knob is off
 
 
 @dataclasses.dataclass
@@ -217,6 +221,8 @@ class CascadeRanker:
         stage_ema: jax.Array | None = None,
         have_ema: jax.Array | bool = True,
         launch_overhead_trees: float = 0.0,
+        query_exit: QueryExitConfig | None = None,
+        query_exit_rate: jax.Array | float = 0.0,
         **strategy_kwargs: object,
     ) -> CascadeResult:
         """Multi-sentinel engine, end-to-end jitted (one XLA computation).
@@ -252,6 +258,22 @@ class CascadeRanker:
         sentinel both modes are the same computation and bit-exact with
         :meth:`rank_compacted`; ``speedup`` / ``overflow`` stay lazy device
         scalars — the hot path never syncs.
+
+        ``query_exit`` (a :class:`repro.core.strategies.QueryExitConfig`)
+        enables query-level early exit: after each stage's document
+        decision, :func:`repro.core.strategies.query_converged` folds a
+        per-query "top-k stabilized" predicate into the alive mask — a
+        converged query's remaining documents skip every later stage and
+        the tail, and the tail launch itself moves under a ``lax.cond``
+        on the survivor count (counted as ``gated`` by the launch
+        counters; a batch whose queries all converged dispatches no tail
+        kernel). With ``margin=inf`` (the config default) the transform
+        is score-preserving and results stay bit-exact with
+        ``query_exit=None``. The result reports the per-query exit flags
+        as the lazy ``query_exited`` device array. ``query_exit_rate``
+        (traced scalar, ``mode="auto"`` only) is the tail-skip estimate
+        the in-program mode pick prices launches with — ship the
+        service's smoothed all-queries-exited indicator.
         """
         Q, D, F = X.shape
         sentinels = tuple(int(s) for s in sentinels)
@@ -299,12 +321,14 @@ class CascadeRanker:
             (n, strategy_kwargs[n]) for n in names if n not in traced_names
         )
 
+        assert query_exit is None or isinstance(query_exit, QueryExitConfig)
         if mode == "auto":
             assert S >= 2, "mode='auto' needs ≥2 sentinels (S=1: modes equal)"
             assert stage_ema is not None, "mode='auto' requires stage_ema"
             mode_ops = (
                 jnp.asarray(stage_ema, jnp.float32),
                 jnp.asarray(have_ema, bool),
+                jnp.asarray(query_exit_rate, jnp.float32),
             )
         else:
             mode_ops = ()
@@ -316,7 +340,8 @@ class CascadeRanker:
         key_capacities = capacities if mode != "fused" else capacities[-1:]
         key = (
             id(pf), sentinels, key_capacities, strategies, classifier_trees,
-            mode, float(launch_overhead_trees), traced_names, static_items,
+            mode, float(launch_overhead_trees), query_exit, traced_names,
+            static_items,
         )
         step = self._step_cache.get(key)
         if step is None:
@@ -324,6 +349,7 @@ class CascadeRanker:
                 pf, sentinels, capacities, strategies, classifier_trees,
                 mode, traced_names, dict(static_items), T,
                 launch_overhead_trees=float(launch_overhead_trees),
+                query_exit=query_exit,
             )
             self._step_cache[key] = step
             while len(self._step_cache) > _STEP_CACHE_MAX:
@@ -332,9 +358,8 @@ class CascadeRanker:
             self._step_cache.move_to_end(key)
 
         traced_vals = tuple(strategy_kwargs[n] for n in traced_names)
-        scores, alive, stage_masks, partials, overflow, sp, picked = step(
-            X, mask, traced_vals, mode_ops
-        )
+        (scores, alive, stage_masks, partials, overflow, sp, picked,
+         q_exited) = step(X, mask, traced_vals, mode_ops)
         return CascadeResult(
             scores=scores,
             continue_mask=alive,
@@ -344,6 +369,7 @@ class CascadeRanker:
             partials=partials,
             mode=mode,
             picked_staged=picked,  # lazy device bool (auto), else None
+            query_exited=q_exited if query_exit is not None else None,
         )
 
 
@@ -361,13 +387,15 @@ def _build_progressive_step(
     static_kwargs: dict,
     n_trees: int,
     launch_overhead_trees: float = 0.0,
+    query_exit: QueryExitConfig | None = None,
 ) -> Callable[..., tuple]:
     """Build the end-to-end jitted progressive step for one configuration.
 
     Everything static (buffers, sentinels, capacities, strategies, mode) is
     closed over; the returned callable takes ``(X, mask, traced_vals,
     mode_ops)`` — ``mode_ops`` is ``()`` for the fixed modes and
-    ``(stage_ema, have_ema)`` for ``mode="auto"`` — and compiles head →
+    ``(stage_ema, have_ema, query_exit_rate)`` for ``mode="auto"`` — and
+    compiles head →
     decisions → compaction → tail → scatter into one XLA computation.
     Launch counters fire while THIS function's body traces (see
     :func:`repro.kernels.ops._counted_pallas`), so a compiled step
@@ -390,16 +418,42 @@ def _build_progressive_step(
         # Tail launch on the compacted survivors of the last stage. In
         # fused mode only this compaction can drop tail scores, so only it
         # counts as overflow; staged mode accumulated per-stage overflow
-        # before reaching here.
+        # before reaching here. With query-level exit enabled the launch
+        # moves under a lax.cond on the survivor count (counted "gated"):
+        # a batch whose queries all converged dispatches no tail kernel.
         if not has_tail:
             return scores, overflow
         cap = capacities[-1]
         sel, n_cont = compact_indices_cumsum(alive.reshape(-1), cap)
-        x_sel = jnp.take(flat, sel, axis=0)
-        tail_sel = forest_score_range(pf, x_sel, seg_lo=S)
-        scores = _scatter_tail(scores, sel, tail_sel, n_cont)
+        if query_exit is None:
+            x_sel = jnp.take(flat, sel, axis=0)
+            tail_sel = forest_score_range(pf, x_sel, seg_lo=S)
+            scores = _scatter_tail(scores, sel, tail_sel, n_cont)
+        else:
+            def run_tail(s):
+                x_sel = jnp.take(flat, sel, axis=0)
+                tail_sel = forest_score_range(
+                    pf, x_sel, seg_lo=S, count_as="gated"
+                )
+                return _scatter_tail(s, sel, tail_sel, n_cont)
+
+            scores = jax.lax.cond(
+                n_cont > 0, run_tail, lambda s: s, scores
+            )
         overflow = overflow + jnp.maximum(n_cont - cap, 0)
         return scores, overflow
+
+    def apply_query_exit(stage_idx: int, prefix, alive, exited):
+        # Fold the per-query convergence predicate into the alive mask:
+        # once a query converges, none of its documents may re-enter
+        # (exit flags accumulate like the nested per-doc stage masks).
+        if query_exit is None or stage_idx < query_exit.from_stage:
+            return alive, exited
+        conv = query_converged(
+            prefix, alive, k=query_exit.k, margin=query_exit.margin
+        )
+        exited = exited | conv
+        return alive & ~exited[:, None], exited
 
     def fused_body(flat, mask, skw):
         # One launch over the head trees: prefix score of every document
@@ -408,6 +462,7 @@ def _build_progressive_step(
         # count, less work).
         Q, D = mask.shape
         alive = mask
+        exited = jnp.zeros((Q,), bool)
         stage_masks = []
         if S == 1:
             prefixes = [forest_score_range(pf, flat, 0, 1).reshape(Q, D)]
@@ -425,13 +480,14 @@ def _build_progressive_step(
         for k in range(S):
             cont = strategies[k](prefixes[k], alive, **skw)
             alive = alive & cont
+            alive, exited = apply_query_exit(k, prefixes[k], alive, exited)
             stage_masks.append(alive)
             if k + 1 < S:
                 scores = jnp.where(alive, prefixes[k + 1], scores)
         scores, overflow = final_tail(flat, scores, alive, jnp.int32(0))
         return (
             scores, alive, tuple(stage_masks),
-            jnp.stack(prefixes, axis=-1), overflow,
+            jnp.stack(prefixes, axis=-1), overflow, exited,
         )
 
     def staged_body(flat, mask, skw):
@@ -440,6 +496,7 @@ def _build_progressive_step(
         # overflow accounting.
         Q, D = mask.shape
         alive = mask
+        exited = jnp.zeros((Q,), bool)
         stage_masks = []
         overflow = jnp.int32(0)
         prefix = forest_score_range(pf, flat, 0, 1).reshape(Q, D)
@@ -447,6 +504,7 @@ def _build_progressive_step(
         for k in range(S):
             cont = strategies[k](prefix, alive, **skw)
             alive = alive & cont
+            alive, exited = apply_query_exit(k, prefix, alive, exited)
             if k + 1 < S:
                 cap = capacities[k]
                 sel, n_cont, within = compact_indices_cumsum_masked(
@@ -466,7 +524,7 @@ def _build_progressive_step(
         scores, overflow = final_tail(flat, prefix, alive, overflow)
         return (
             scores, alive, tuple(stage_masks),
-            jnp.stack(prefixes, axis=-1), overflow,
+            jnp.stack(prefixes, axis=-1), overflow, exited,
         )
 
     @jax.jit
@@ -485,12 +543,13 @@ def _build_progressive_step(
             # On-device mode pick: price both modes from the traced
             # survivor estimate and run the cheaper branch. Both bodies
             # trace here (cond stages both); one executes per batch.
-            stage_ema, have_ema = mode_ops
+            stage_ema, have_ema, qe_rate = mode_ops
             fused_cost, staged_cost = progressive_cost_model_device(
                 Q * D, stage_ema, sentinels, n_trees,
                 launch_overhead_trees=launch_overhead_trees,
                 stage_capacities=capacities,
                 block_b=ENGINE_BLOCK_B,
+                query_exit_rate=qe_rate,
             )
             picked = jnp.logical_and(have_ema, staged_cost < fused_cost)
             out = jax.lax.cond(
@@ -498,12 +557,15 @@ def _build_progressive_step(
                 lambda: staged_body(flat, mask, skw),
                 lambda: fused_body(flat, mask, skw),
             )
-        scores, alive, stage_masks, partials, overflow = out
+        scores, alive, stage_masks, partials, overflow, exited = out
         sp = speedup_progressive(
             mask, list(stage_masks), sentinels, n_trees,
             list(classifier_trees),
         )
-        return scores, alive, stage_masks, partials, overflow, sp, picked
+        return (
+            scores, alive, stage_masks, partials, overflow, sp, picked,
+            exited,
+        )
 
     return step
 

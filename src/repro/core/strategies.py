@@ -13,12 +13,87 @@ exited documents hold stale prefixes. All strategies below qualify.
 
 from __future__ import annotations
 
+import dataclasses
+import math
+
 import jax
 import jax.numpy as jnp
 
 from repro.metrics.ranking import rank_from_scores
 
 NEG = -1e30
+
+
+@dataclasses.dataclass(frozen=True)
+class QueryExitConfig:
+    """Static configuration of query-level early exit (arXiv 2004.14641).
+
+    Document-level strategies exit *documents*; this knob exits whole
+    *queries* once their top-``k`` can no longer change. Checked after
+    each sentinel stage (from ``from_stage`` on): a converged query's
+    remaining documents are removed from the alive mask, so they skip
+    every later stage and the tail — and when ALL queries converge the
+    tail kernel launch itself is skipped on device (the gated tail).
+
+    ``margin`` picks the regime:
+
+    - ``inf`` (default): *exact* — a query exits only when it has no
+      alive documents left (every doc already exited at the document
+      level). Skipping its tail work is then score-preserving: results
+      are bit-exact with ``query_exit=None``.
+    - finite: *approximate* — a query additionally exits when its
+      partial top-``k`` is margin-stable (see :func:`query_converged`).
+      Exited queries keep partial scores for all documents, trading
+      bounded NDCG loss for tail work, exactly like the document-level
+      threshold trades it.
+
+    Frozen + hashable: the config is part of the compiled step's static
+    cache key.
+    """
+
+    k: int = 10
+    margin: float = math.inf
+    from_stage: int = 0
+
+    def __post_init__(self) -> None:
+        assert self.k >= 1, self.k
+        assert self.margin >= 0.0, self.margin
+        assert self.from_stage >= 0, self.from_stage
+
+
+def query_converged(
+    partial: jax.Array, alive: jax.Array, k: int, margin: float
+) -> jax.Array:
+    """Per-query "top-k stabilized" predicate → ``[Q]`` bool.
+
+    Built on the same machinery as :func:`ept_continue` (masked partial
+    scores, ``lax.top_k`` over the candidate axis) but aggregated per
+    query. With ``margin=inf`` a query converges only once it has zero
+    alive documents. With finite ``margin`` a query also converges when
+    its current top-``k`` set is stable: every alive document outside
+    the top-``k`` trails the ``k``-th best alive partial score by MORE
+    than ``margin`` (vacuously true when at most ``k`` documents are
+    alive — no challenger exists). Ties between the ``k``-th score and
+    the best challenger never converge (the difference is 0, never
+    ``> margin``) — conservative under ties.
+
+    ``k`` is clamped to the padded candidate count ``D`` (``k >= D``
+    means no challenger can exist, so any finite margin converges every
+    query that still has alive docs). Mask-invariant: ``partial`` is
+    read only where ``alive`` is set.
+    """
+    n_alive = alive.sum(axis=-1)
+    if math.isinf(margin):
+        return n_alive == 0
+    D = partial.shape[-1]
+    kk = min(int(k), D)
+    if kk >= D:
+        return n_alive >= 0  # no challenger possible: always converged
+    masked = jnp.where(alive, partial, NEG)
+    top = jax.lax.top_k(masked, kk + 1)[0]
+    kth, challenger = top[..., kk - 1], top[..., kk]
+    stable = (kth - challenger) > margin
+    return (n_alive <= kk) | stable
 
 
 def ert_continue(partial: jax.Array, mask: jax.Array, k_s: int) -> jax.Array:

@@ -11,6 +11,9 @@ This package provides:
 - :mod:`repro.forest.gbdt` — histogram-based, level-wise GBDT trainer in JAX
   (L2 / logistic / LambdaRank objectives, per-instance weights).
 - :mod:`repro.forest.lambdamart` — NDCG lambda gradients for λ-MART.
+- :mod:`repro.forest.reorder` — learned tree reordering (QWYC-style):
+  permute trees so partial prefix sums converge early, making every
+  exit policy cheaper at matched quality.
 """
 
 from repro.forest.ensemble import TreeEnsemble, slice_trees, concat_ensembles
@@ -21,6 +24,11 @@ from repro.forest.scoring import (
     partial_scores,
 )
 from repro.forest.binning import quantile_bins, apply_bins
+from repro.forest.reorder import (
+    learn_order,
+    reorder_trees,
+    reordered_ensemble,
+)
 from repro.forest.gbdt import GBDTParams, train_gbdt, train_lambdamart
 
 __all__ = [
@@ -31,6 +39,9 @@ __all__ = [
     "score_level",
     "score_numpy_oracle",
     "partial_scores",
+    "learn_order",
+    "reorder_trees",
+    "reordered_ensemble",
     "quantile_bins",
     "apply_bins",
     "GBDTParams",

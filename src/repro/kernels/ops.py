@@ -42,8 +42,10 @@ because no new launch is staged into it. This is what lets the whole
 progressive cascade step (segmented head → stage decisions → compaction →
 tail → scatter) compile into ONE XLA computation while the 1-head-launch
 contract stays testable: tests trace a fresh step, read
-:func:`launch_counts` (split ``plain`` vs ``segmented``), and assert the
-counts do not move on cached re-executions.
+:func:`launch_counts` (split ``plain`` / ``segmented`` / ``gated`` — the
+last for launches staged behind a run-time skip condition, e.g. the
+query-exit gated tail), and assert the counts do not move on cached
+re-executions.
 
 Trace-time vs run-time, under ``lax.cond``: the counters describe the
 launches *staged into* a computation, not the launches a particular batch
@@ -132,17 +134,25 @@ def resolve_leaf_gather(n_leaves: int) -> str:
     axes (after power-of-two padding), MXU contraction for wide ones."""
     return "select" if _next_pow2(n_leaves) <= LEAF_SELECT_MAX else "mxu"
 
-_LAUNCH_COUNTS = {"plain": 0, "segmented": 0}
+_LAUNCH_COUNTS = {"plain": 0, "segmented": 0, "gated": 0}
 
 
 def reset_launch_counts() -> None:
-    """Zero both counters (typically right before tracing a fresh step)."""
-    _LAUNCH_COUNTS["plain"] = 0
-    _LAUNCH_COUNTS["segmented"] = 0
+    """Zero all counters (typically right before tracing a fresh step)."""
+    for kind in _LAUNCH_COUNTS:
+        _LAUNCH_COUNTS[kind] = 0
 
 
 def launch_counts() -> dict[str, int]:
-    """Launches STAGED since the last reset, keyed ``plain``/``segmented``.
+    """Launches STAGED since the last reset, keyed ``plain`` /
+    ``segmented`` / ``gated``.
+
+    ``gated`` counts launches staged behind a run-time skip condition:
+    with query-level exit enabled, the progressive tail launch sits
+    under a ``lax.cond`` on the survivor count, so a batch whose queries
+    all converged dispatches no tail kernel at all. Like the other two
+    counters this is TRACE-time accounting — the gate's run-time
+    outcome shows up in the trees-traversed metric, not here.
 
     Trace-time accounting: a cached re-execution of a compiled step adds
     zero; a ``lax.cond`` with kernel calls in both branches adds both
@@ -347,21 +357,26 @@ def forest_score_range(
     *,
     block_b: int = ENGINE_BLOCK_B,
     interpret: bool | None = None,
+    count_as: str = "plain",
 ) -> jax.Array:
     """Score ``X: [B, F]`` through segments ``[seg_lo, seg_hi)`` — 1 launch.
 
     ``base_score`` is added only when the range starts at segment 0
     (mirroring :func:`repro.forest.ensemble.slice_trees` semantics).
+    ``count_as`` picks the launch-accounting bucket: ``"plain"`` for an
+    unconditional launch, ``"gated"`` when the caller stages this launch
+    behind a run-time skip condition (the query-exit gated tail).
     """
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     seg_hi = pf.n_segments if seg_hi is None else seg_hi
     assert 0 <= seg_lo < seg_hi <= pf.n_segments, (seg_lo, seg_hi)
+    assert count_as in ("plain", "gated"), count_as
     B = X.shape[0]
     x, block_b = _prep_x(X, block_b)
 
     scores = _counted_pallas(
-        "plain", forest_score_pallas,
+        count_as, forest_score_pallas,
         x, pf.feature, pf.threshold, pf.mask_lo, pf.mask_hi, pf.leaf_value,
         block_b=block_b,
         block_t=pf.block_t,

@@ -128,9 +128,21 @@ def progressive_cost_model(
     launch_overhead_trees: float = 0.0,
     stage_capacities: Sequence[int] | None = None,
     block_b: int = 1,
+    query_exit_rate: float = 0.0,
 ) -> float:
     """Estimated device cost of one progressive batch, in tree-traversal
     equivalents, for picking fused vs per-stage-tail execution.
+
+    ``query_exit_rate`` is the estimated probability that query-level
+    exit empties the batch before the tail (the service's EMA of the
+    all-queries-converged indicator). It discounts ONLY the tail
+    launch's overhead: the tail *work* term already shrinks through the
+    survivor estimates (a fully-exited batch reports zero last-stage
+    survivors into the EMA), but the launch overhead is paid per
+    dispatch, and the gated tail skips the dispatch itself. The discount
+    is symmetric across modes (both run the same gated tail), so it
+    never flips the pick by itself — it keeps the absolute costs honest
+    for operators reading them.
 
     ``stage_survivors[k]`` is the (expected) survivor count after stage
     ``k``'s decision. The fused head scores every document through all
@@ -167,10 +179,12 @@ def progressive_cost_model(
     #   per-launch overhead — finite, and identical tail for both modes
     surv = _sane_survivors(stage_survivors, n_docs)
     has_tail = sentinels[-1] < n_trees
+    qe = min(max(float(query_exit_rate), 0.0), 1.0)
+    tail_launch = (1.0 - qe) if has_tail else 0.0
     tail = surv[-1] * (n_trees - sentinels[-1])
     if mode == "fused":
         head = n_docs * sentinels[-1]
-        launches = 1 + (1 if has_tail else 0)
+        launches = 1 + tail_launch
     else:
         caps = (
             list(stage_capacities)
@@ -187,7 +201,7 @@ def progressive_cost_model(
         head = n_docs * sentinels[0] + sum(
             surv[k] * (sentinels[k + 1] - sentinels[k]) for k in range(S - 1)
         )
-        launches = S + (1 if has_tail else 0)
+        launches = S + tail_launch
     return float(head + tail + launch_overhead_trees * launches)
 
 
@@ -199,9 +213,15 @@ def progressive_cost_model_device(
     launch_overhead_trees: float = 0.0,
     stage_capacities: Sequence[int] | None = None,
     block_b: int = 1,
+    query_exit_rate: jax.Array | float = 0.0,
 ) -> tuple[jax.Array, jax.Array]:
     """Traced mirror of :func:`progressive_cost_model` for the IN-PROGRAM
     mode pick: returns ``(fused_cost, staged_cost)`` as f32 device scalars.
+
+    ``query_exit_rate`` may be a TRACED scalar (the service ships its
+    tail-skip EMA next to ``stage_ema`` at submit time) — like the host
+    model it discounts only the tail launch's overhead, identically in
+    both modes.
 
     Same arithmetic, same units (doc·tree traversals), same staged pricing
     (block-rounded survivors clipped at capacity) — only the survivor
@@ -227,11 +247,13 @@ def progressive_cost_model_device(
     )
     surv = jnp.clip(surv, 0.0, float(n_docs))
     has_tail = sentinels[-1] < n_trees
+    qe = jnp.clip(jnp.asarray(query_exit_rate, jnp.float32), 0.0, 1.0)
+    tail_launch = (1.0 - qe) if has_tail else jnp.float32(0.0)
     tail = surv[-1] * float(n_trees - sentinels[-1])
     fused = (
         float(n_docs * sentinels[-1])
         + tail
-        + launch_overhead_trees * (1 + (1 if has_tail else 0))
+        + launch_overhead_trees * (1.0 + tail_launch)
     )
     caps = (
         list(stage_capacities) if stage_capacities is not None
@@ -252,7 +274,7 @@ def progressive_cost_model_device(
         float(n_docs * sentinels[0])
         + (s_surv[: S - 1] * deltas).sum()
         + tail
-        + launch_overhead_trees * (S + (1 if has_tail else 0))
+        + launch_overhead_trees * (float(S) + tail_launch)
     )
     return (
         jnp.asarray(fused, jnp.float32),

@@ -60,6 +60,7 @@ if typing.TYPE_CHECKING:  # annotation-only: avoids a serve-package cycle
 
 from repro.core.cascade import CascadeRanker, bucket_capacity
 from repro.core.lear import LearClassifier, augment_features
+from repro.core.strategies import QueryExitConfig
 from repro.forest.ensemble import TreeEnsemble
 from repro.kernels.ops import ENGINE_BLOCK_B
 from repro.metrics.speedup import (
@@ -84,6 +85,8 @@ class _BucketAdaptState:
 
     peaks: list[int] | None = None  # running max survivors per stage
     ema: list[float] | None = None  # smoothed survivors per stage
+    tail_skip: float | None = None  # smoothed P(batch skipped the gated
+    #   tail launch) — feeds the cost model's query_exit_rate discount
 
 
 @dataclasses.dataclass
@@ -97,6 +100,7 @@ class ServiceStats:
     trees_full_equiv: float = 0.0
     batches_fused: int = 0
     batches_staged: int = 0
+    queries_exited: int = 0  # query-level exit fired (query_exit enabled)
 
     @property
     def speedup(self) -> float:
@@ -105,6 +109,10 @@ class ServiceStats:
     @property
     def continue_rate(self) -> float:
         return self.docs_continued / max(self.docs, 1)
+
+    @property
+    def query_exit_rate(self) -> float:
+        return self.queries_exited / max(self.queries, 1)
 
 
 class RankingService:
@@ -129,6 +137,7 @@ class RankingService:
         execution_mode: str = "auto",
         launch_overhead_trees: float | str = "auto",
         survivor_ema: float = 0.3,
+        query_exit: QueryExitConfig | None = None,
     ) -> None:
         assert execution_mode in ("auto", "fused", "staged"), execution_mode
         # The capacity ratchet needs strictly-positive headroom: in staged
@@ -152,6 +161,11 @@ class RankingService:
             launch_overhead_trees = calibrate_launch_overhead_trees()
         self.launch_overhead_trees = float(launch_overhead_trees)
         self.survivor_ema = survivor_ema
+        # Query-level exit config (None = document-level LEAR only). Part
+        # of the compiled step's static key; the per-bucket tail-skip EMA
+        # it produces feeds the auto-mode cost model as a traced operand.
+        assert query_exit is None or isinstance(query_exit, QueryExitConfig)
+        self.query_exit = query_exit
         self.stats = ServiceStats()
         # Adaptive state is PER padded batch shape (capacity bucket): each
         # (Q, D) the service has seen owns its survivor peaks and EMA.
@@ -284,10 +298,21 @@ class RankingService:
                 launch_overhead_trees=self.launch_overhead_trees,
                 stage_capacities=capacities,
                 block_b=ENGINE_BLOCK_B,
+                query_exit_rate=self._query_exit_rate_estimate(),
             )
             for m in ("fused", "staged")
         }
         return "staged" if cost["staged"] < cost["fused"] else "fused"
+
+    def _query_exit_rate_estimate(self) -> float:
+        """Smoothed tail-skip probability for the ACTIVE bucket.
+
+        0.0 while query exit is off (no discount) or before the bucket's
+        first batch (cold start must not assume the tail gets skipped).
+        """
+        if self.query_exit is None:
+            return 0.0
+        return self._active_state().tail_skip or 0.0
 
     def rank_batch(
         self,
@@ -333,6 +358,9 @@ class RankingService:
                     stage_ema=jnp.asarray(ema, jnp.float32),
                     have_ema=self._stage_ema is not None,
                     launch_overhead_trees=self.launch_overhead_trees,
+                    query_exit_rate=jnp.asarray(
+                        self._query_exit_rate_estimate(), jnp.float32
+                    ),
                 )
         result = self.cascade.rank_progressive(
             X, mask,
@@ -341,6 +369,7 @@ class RankingService:
             strategies=self.stage_strategies,
             classifier_trees=[c.n_trees for c in self.stage_classifiers],
             mode=mode,
+            query_exit=self.query_exit,
             features=X,
             **extra,
         )
@@ -359,8 +388,13 @@ class RankingService:
             if result.picked_staged is not None
             else mode == "staged"
         )
+        q_exited = (
+            result.query_exited.sum()
+            if result.query_exited is not None
+            else jnp.int32(0)
+        )
         (top_idx, scores, survivors, traversed, overflow, batch_docs,
-         picked_staged) = jax.device_get((
+         picked_staged, q_exited) = jax.device_get((
             top_idx,
             result.scores,
             jnp.stack([m.sum() for m in result.stage_masks]),
@@ -370,6 +404,7 @@ class RankingService:
             result.overflow,
             mask.sum(),
             picked_staged,
+            q_exited,
         ))
         # Adapt: running max sizes the buckets, the EMA feeds the cost
         # model. Peaks and EMA seed independently — warmup pre-seeds peaks
@@ -389,6 +424,15 @@ class RankingService:
                 (1 - a) * e + a * float(n)
                 for e, n in zip(state.ema, survivors)
             ]
+        if self.query_exit is not None:
+            # Zero final-stage survivors ⟺ the gated tail launch was
+            # skipped this batch; its smoothed rate is what the cost
+            # model discounts the tail launch term by next submit.
+            skipped = 1.0 if int(survivors[-1]) == 0 else 0.0
+            if state.tail_skip is None:
+                state.tail_skip = skipped
+            else:
+                state.tail_skip = (1 - a) * state.tail_skip + a * skipped
 
         s = self.stats
         s.batches += 1
@@ -398,6 +442,7 @@ class RankingService:
         s.docs += int(batch_docs)
         s.docs_continued += int(survivors[-1])
         s.overflow_docs += int(overflow)
+        s.queries_exited += int(q_exited)
         s.trees_traversed += float(traversed)
         s.trees_full_equiv += int(batch_docs) * T
 

@@ -113,6 +113,8 @@ class ServingTier:
                 "continue_rate": svc.continue_rate,
                 "batches_fused": svc.batches_fused,
                 "batches_staged": svc.batches_staged,
+                "queries_exited": svc.queries_exited,
+                "query_exit_rate": svc.query_exit_rate,
             },
             "warmup_seconds": (
                 self.warmup_report.total_seconds if self.warmup_report else 0.0

@@ -19,3 +19,9 @@ def _kernel(x_ref, o_ref):
 
 def score(x, out_shape):
     return pl.pallas_call(_kernel, out_shape=out_shape)(x)
+
+
+def prefix_residual(per_tree, order):
+    # Reorder-path entry point: the permuted tree axis still reduces
+    # through the sanctioned pairwise halving.
+    return _pairwise_tree_sum(per_tree[:, order])

@@ -20,3 +20,11 @@ def score(x, out_shape):
         functools.partial(_kernel),
         out_shape=out_shape,
     )(x)
+
+
+def prefix_residual(per_tree, order):
+    # Reorder-path entry point (TREE_SUM_EXTRA_ROOT_SUFFIXES): reduces
+    # the PERMUTED tree axis with a bare sum — reassociation hazard even
+    # though no pallas_call is in sight.
+    permuted = per_tree[:, order]
+    return permuted.sum(axis=1)

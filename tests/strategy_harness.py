@@ -1,0 +1,190 @@
+"""Strategy conformance harness — shared oracle + contract helpers.
+
+The query-exit and reorder suites both need the same scaffolding: a
+deterministic problem generator, a from-scratch numpy replay of the
+progressive cascade (prefixes from the ``partial_scores`` oracle, stage
+decisions and query-level exit replayed on host), cross-mode
+equivalence runs, and the launch-count contract table. Keeping them
+here pins ONE definition of "conformant" that every engine
+configuration ({fused, staged, auto} × query-exit on/off × reorder
+on/off) is held to.
+
+Not a test module: no ``test_`` functions live here.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.cascade import CascadeRanker
+from repro.core.strategies import (
+    QueryExitConfig,
+    ept_continue,
+    query_converged,
+)
+from repro.forest.ensemble import TreeEnsemble, random_ensemble
+from repro.forest.scoring import partial_scores
+from repro.kernels import ops
+
+# One strategy family for the whole harness: EPT with a mid proximity
+# threshold exercises partial-score-dependent exits without training.
+STRATEGY_KWARGS = dict(k_s=5, p=0.5)
+
+
+def make_problem(seed: int, Q: int = 4, D: int = 24, F: int = 16,
+                 n_trees: int = 60, depth: int = 4):
+    """Deterministic (ensemble, X, mask) triple for conformance runs."""
+    ens = random_ensemble(seed, n_trees=n_trees, depth=depth, n_features=F)
+    rng = np.random.default_rng(seed)
+    X = jnp.asarray(rng.normal(size=(Q, D, F)).astype(np.float32))
+    mask = jnp.asarray(rng.random((Q, D)) < 0.9)
+    return ens, X, mask
+
+
+def make_ranker(ens: TreeEnsemble, sentinel: int = 10) -> CascadeRanker:
+    return CascadeRanker(
+        ensemble=ens, sentinel=sentinel, strategy=ept_continue
+    )
+
+
+def run_mode(ranker: CascadeRanker, X, mask, sentinels, mode: str,
+             query_exit: QueryExitConfig | None = None):
+    """One engine run; auto mode gets a fixed survivor estimate."""
+    kw = dict(STRATEGY_KWARGS)
+    if mode == "auto":
+        S = len(sentinels)
+        kw.update(
+            stage_ema=jnp.linspace(0.6, 0.2, S) * mask.size,
+            have_ema=True,
+        )
+    return ranker.rank_progressive(
+        X, mask, sentinels=sentinels, mode=mode, query_exit=query_exit, **kw
+    )
+
+
+def run_all_modes(ranker, X, mask, sentinels,
+                  query_exit: QueryExitConfig | None = None) -> dict:
+    """Run {fused, staged, auto}; assert they agree bit-for-bit.
+
+    Cross-mode bit-exactness holds on non-overflow batches (the harness
+    problems are sized so capacities never clip) — the engine's core
+    conformance contract, with or without query-level exit.
+    """
+    results = {
+        m: run_mode(ranker, X, mask, sentinels, m, query_exit)
+        for m in ("fused", "staged", "auto")
+    }
+    ref = results["fused"]
+    for m in ("staged", "auto"):
+        got = results[m]
+        np.testing.assert_array_equal(
+            np.asarray(ref.scores), np.asarray(got.scores),
+            err_msg=f"mode={m} scores diverge from fused",
+        )
+        np.testing.assert_array_equal(
+            np.asarray(ref.continue_mask), np.asarray(got.continue_mask),
+            err_msg=f"mode={m} final alive mask diverges from fused",
+        )
+        if query_exit is not None:
+            np.testing.assert_array_equal(
+                np.asarray(ref.query_exited), np.asarray(got.query_exited),
+                err_msg=f"mode={m} query_exited diverges from fused",
+            )
+    return results
+
+
+def oracle_progressive(ens: TreeEnsemble, X, mask, sentinels,
+                       query_exit: QueryExitConfig | None = None):
+    """From-scratch numpy replay of the progressive cascade.
+
+    Prefix scores come from the pure ``partial_scores`` oracle (NOT the
+    engine's kernel), stage decisions and query-level exit are replayed
+    on host with the same predicate functions the engine traces.
+    Returns ``(scores, stage_masks, exited)``. Scores agree with the
+    engine up to reassociation (compare with allclose); masks and exit
+    flags agree exactly.
+    """
+    Q, D, F = X.shape
+    flat = X.reshape(Q * D, F)
+    prefixes = [
+        np.asarray(partial_scores(ens, flat, s)[0]).reshape(Q, D)
+        for s in sentinels
+    ]
+    head, tail = partial_scores(ens, flat, sentinels[-1])
+    full = np.asarray(head + tail).reshape(Q, D)
+
+    alive = np.asarray(mask).copy()
+    exited = np.zeros(Q, bool)
+    stage_masks = []
+    scores = prefixes[0].copy()
+    for k in range(len(sentinels)):
+        cont = np.asarray(ept_continue(
+            jnp.asarray(prefixes[k]), jnp.asarray(alive), **STRATEGY_KWARGS
+        ))
+        alive = alive & cont
+        if query_exit is not None and k >= query_exit.from_stage:
+            conv = np.asarray(query_converged(
+                jnp.asarray(prefixes[k]), jnp.asarray(alive),
+                k=query_exit.k, margin=query_exit.margin,
+            ))
+            exited = exited | conv
+            alive = alive & ~exited[:, None]
+        stage_masks.append(alive.copy())
+        if k + 1 < len(sentinels):
+            scores = np.where(alive, prefixes[k + 1], scores)
+    if sentinels[-1] < ens.n_trees:
+        scores = np.where(alive, full, scores)
+    return scores, stage_masks, exited
+
+
+def assert_matches_oracle(result, ens, X, mask, sentinels,
+                          query_exit: QueryExitConfig | None = None):
+    """Engine result vs the numpy replay: masks/flags exact, scores close."""
+    scores, stage_masks, exited = oracle_progressive(
+        ens, X, mask, sentinels, query_exit
+    )
+    for k, m in enumerate(stage_masks):
+        np.testing.assert_array_equal(
+            m, np.asarray(result.stage_masks[k]),
+            err_msg=f"stage {k} alive mask diverges from oracle",
+        )
+    if query_exit is not None:
+        np.testing.assert_array_equal(exited, np.asarray(result.query_exited))
+    np.testing.assert_allclose(
+        np.asarray(result.scores), scores, rtol=1e-5, atol=1e-5
+    )
+
+
+def expected_launches(mode: str, S: int, has_tail: bool,
+                      query_exit_on: bool) -> dict:
+    """The trace-time launch-count contract for one configuration.
+
+    Without query exit the tail is unconditional; with it the tail
+    launch sits behind a run-time ``lax.cond`` and counts as "gated".
+    ``mode="auto"`` traces BOTH branch bodies into one program, so its
+    plan is the sum of the fused and staged plans.
+    """
+    tail = 1 if has_tail else 0
+    gated = tail if query_exit_on else 0
+    plain_tail = 0 if query_exit_on else tail
+    fused_seg = 1 if S > 1 else 0       # S=1 head degenerates to plain
+    fused_plain = (0 if S > 1 else 1) + plain_tail
+    staged_plain = S + plain_tail
+    if mode == "fused":
+        return {"segmented": fused_seg, "plain": fused_plain, "gated": gated}
+    if mode == "staged":
+        return {"segmented": 0, "plain": staged_plain, "gated": gated}
+    return {
+        "segmented": fused_seg,
+        "plain": fused_plain + staged_plain,
+        "gated": 2 * gated,
+    }
+
+
+def measured_launches(ranker, X, mask, sentinels, mode: str,
+                      query_exit: QueryExitConfig | None = None) -> dict:
+    """Trace-time launch counts staged by ONE fresh-step run."""
+    ops.reset_launch_counts()
+    run_mode(ranker, X, mask, sentinels, mode, query_exit)
+    return ops.launch_counts()

@@ -25,7 +25,7 @@ ALL_CODES = ("TS001", "TS002", "TS003", "TS004", "TS005", "TS006")
 EXPECTED_DIRTY_COUNTS = {
     "TS001": 3,  # float(), .item(), np.asarray via helper
     "TS002": 2,  # if + while on traced values
-    "TS003": 2,  # bare jnp.sum + "+=" loop
+    "TS003": 3,  # bare jnp.sum + "+=" loop + reorder-root bare .sum()
     "TS004": 3,  # os.environ.get, os.getenv, os.environ[...]
     "TS005": 2,  # batcher.submit engine call + tier.stop warmup
     "TS006": 1,  # the second transfer site

@@ -1,0 +1,101 @@
+"""Smoke coverage for the bench entry points ``check_bench.py`` never runs.
+
+``benchmarks/check_bench.py`` exercises ``bench_kernels`` and
+``bench_serve`` tiny in CI, but ``bench_table1`` needs the fully trained
+experiment and (deliberately) has no smoke-scale mode. This module pins
+that state explicitly: the :func:`smoke` gate must raise
+``NotImplementedError`` (the test then SKIPS, visibly, instead of the
+bench silently never being imported), and the moment someone implements
+it the same test starts enforcing the Table-1 row schema.
+
+Also pins the ``check_bench`` validator itself on hand-built payloads —
+the ``tradeoff`` section contract in particular — without paying for a
+bench run.
+"""
+
+from __future__ import annotations
+
+import importlib
+import sys
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+def _bench_module(name: str):
+    """Import ``benchmarks.<name>`` with the repo root importable."""
+    root = str(REPO)
+    if root not in sys.path:
+        sys.path.insert(0, root)
+    return importlib.import_module(f"benchmarks.{name}")
+
+
+def test_bench_table1_smoke_gate():
+    """bench_table1.smoke() is explicitly NotImplemented; if that ever
+    changes, the returned rows must follow the Table-1 schema."""
+    bt = _bench_module("bench_table1")
+    try:
+        rows = bt.smoke()
+    except NotImplementedError as exc:
+        assert "trained experiment" in str(exc)
+        pytest.skip(f"bench_table1 smoke mode not implemented: {exc}")
+    assert rows, "smoke() implemented but returned no rows"
+    assert rows[0]["method"] == "Full"
+    for row in rows:
+        assert {"method", "ndcg@10", "delta_pct", "speedup"} <= row.keys()
+
+
+def test_bench_table1_full_entry_points_exist():
+    """The real entry points keep their signatures (the nightly lane and
+    README instructions call them by name)."""
+    bt = _bench_module("bench_table1")
+    assert callable(bt.run) and callable(bt.main)
+
+
+def _minimal_tradeoff_section() -> dict:
+    config = {
+        "name": "lear", "ndcg10": 0.9, "delta_pct": 0.0,
+        "trees_traversed": 1000.0, "trees_vs_lear": 1.0,
+        "wall_us": 10.0, "meets_ndcg_bar": True,
+    }
+    configs = [dict(config)]
+    for name in ("lear+query_exit", "lear+reorder", "lear+query_exit+reorder"):
+        configs.append({**config, "name": name, "trees_vs_lear": 0.8})
+    return {"configs": configs, "ndcg_full": 0.91, "ndcg_bar_delta_pct": 0.5}
+
+
+def test_check_bench_requires_tradeoff_section():
+    cb = _bench_module("check_bench")
+    assert "tradeoff" in cb.REQUIRED_SECTIONS
+    problems = cb.validate({s: {} for s in cb.REQUIRED_SECTIONS if s != "tradeoff"})
+    assert any("tradeoff" in p for p in problems)
+
+
+@pytest.mark.parametrize(
+    "mutate, fragment",
+    [
+        (lambda td: td["configs"].pop(), "missing config"),
+        (lambda td: td["configs"][1].update(trees_vs_lear=1.2),
+         "trees_vs_lear"),
+        (lambda td: td["configs"][2].update(meets_ndcg_bar=False),
+         "NDCG bar"),
+        (lambda td: td["configs"][0].update(wall_us=float("nan")),
+         "wall_us"),
+        (lambda td: td["configs"][3].update(trees_traversed=0.0),
+         "trees_traversed"),
+    ],
+)
+def test_check_bench_tradeoff_contract_violations(mutate, fragment):
+    """Each tradeoff-section contract violation produces a finding."""
+    cb = _bench_module("check_bench")
+    td = _minimal_tradeoff_section()
+    mutate(td)
+    problems = cb.validate_tradeoff(td)
+    assert any(fragment in p for p in problems), problems
+
+
+def test_check_bench_tradeoff_accepts_valid_section():
+    cb = _bench_module("check_bench")
+    assert cb.validate_tradeoff(_minimal_tradeoff_section()) == []

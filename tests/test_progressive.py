@@ -185,7 +185,7 @@ def test_progressive_s3_launch_budget():
     run("staged")
     staged_counts = ops.launch_counts()
     # Stage-0 head + per-stage tails for stages 1..S-1 + final tail = S+1.
-    assert staged_counts == {"plain": 4, "segmented": 0}, staged_counts
+    assert staged_counts == {"plain": 4, "segmented": 0, "gated": 0}, staged_counts
     run("staged")
     assert ops.launch_counts() == staged_counts, ops.launch_counts()
 
@@ -236,7 +236,7 @@ def test_progressive_sentinel_at_ensemble_end():
     result = cascade.rank_progressive(X, mask, sentinels=[16, 32], capacities=64)
     jax.block_until_ready(result.scores)
     counts = ops.launch_counts()
-    assert counts == {"plain": 0, "segmented": 1}, counts
+    assert counts == {"plain": 0, "segmented": 1, "gated": 0}, counts
     full, _ = partial_scores(ens, X.reshape(Q * D, F), ens.n_trees)
     survivors = np.asarray(result.continue_mask)
     np.testing.assert_allclose(
@@ -444,7 +444,7 @@ def test_auto_mode_launch_counters_stable_under_cond():
     )
     jax.block_until_ready(res.scores)
     counts = ops.launch_counts()
-    assert counts == {"segmented": 1, "plain": 5}, counts
+    assert counts == {"segmented": 1, "plain": 5, "gated": 0}, counts
     # Branch flip on the cached step (have_ema=False forces the fused
     # cold-start branch — a traced operand): no re-trace, no counter move.
     res2 = cascade.rank_progressive(

@@ -1,0 +1,299 @@
+"""Query-level early exit: conformance, contracts, and properties.
+
+Pinned by the strategy conformance harness (tests/strategy_harness.py):
+
+- ``margin=inf`` (exact regime) is SCORE-PRESERVING: bit-exact with
+  ``query_exit=None`` in every execution mode;
+- finite margin (approximate regime): queries that did NOT exit stay
+  bit-exact with the query-exit-off run, exited queries keep partials;
+- the engine agrees with a from-scratch numpy replay of the cascade
+  (stage masks and exit flags exactly, scores to reassociation);
+- fused ≡ staged ≡ auto with query exit on, off, and per margin regime;
+- the launch-count contract: the tail launch moves under the run-time
+  gate (counted "gated") exactly when query exit is enabled, and cached
+  step re-executions move no counters;
+- ``query_converged`` edge semantics: the no-challenger rule, tie
+  conservatism, k clamped to D, and the ``margin=inf`` ⇔ zero-alive
+  equivalence (randomized hypothesis sweeps of the same properties
+  live in tests/test_strategies_property.py);
+- the serving tier: ``RankingService(query_exit=...)`` keeps margin=inf
+  responses bit-exact, counts exited queries, and feeds the tail-skip
+  EMA into the mode-pick cost model.
+"""
+
+import math
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.strategies import QueryExitConfig, query_converged
+from strategy_harness import (
+    assert_matches_oracle,
+    expected_launches,
+    make_problem,
+    make_ranker,
+    measured_launches,
+    run_all_modes,
+    run_mode,
+)
+
+SENTINELS = (10, 20, 30)
+
+
+def test_query_exit_config_validates():
+    with pytest.raises(AssertionError):
+        QueryExitConfig(k=0)
+    with pytest.raises(AssertionError):
+        QueryExitConfig(margin=-1.0)
+    with pytest.raises(AssertionError):
+        QueryExitConfig(from_stage=-1)
+    assert QueryExitConfig() == QueryExitConfig(k=10, margin=math.inf)
+    assert hash(QueryExitConfig(k=3)) is not None  # static cache key
+
+
+@pytest.mark.parametrize("mode", ["fused", "staged", "auto"])
+def test_margin_inf_is_score_preserving(mode):
+    """Exact regime: only zero-alive queries exit, so skipping their tail
+    work cannot change any score — bit-exact with the knob off."""
+    ens, X, mask = make_problem(11)
+    r = make_ranker(ens)
+    base = run_mode(r, X, mask, SENTINELS, mode)
+    qe = run_mode(r, X, mask, SENTINELS, mode,
+                  query_exit=QueryExitConfig(k=3))
+    np.testing.assert_array_equal(
+        np.asarray(base.scores), np.asarray(qe.scores)
+    )
+    np.testing.assert_array_equal(
+        np.asarray(base.continue_mask), np.asarray(qe.continue_mask)
+    )
+    assert base.query_exited is None
+    assert qe.query_exited.shape == (X.shape[0],)
+
+
+@pytest.mark.parametrize(
+    "query_exit",
+    [None, QueryExitConfig(k=3), QueryExitConfig(k=3, margin=0.1),
+     QueryExitConfig(k=3, margin=0.1, from_stage=1)],
+    ids=["off", "inf", "margin0.1", "from_stage1"],
+)
+def test_all_modes_agree(query_exit):
+    """fused ≡ staged ≡ auto, for every query-exit regime."""
+    ens, X, mask = make_problem(12)
+    run_all_modes(make_ranker(ens), X, mask, SENTINELS, query_exit)
+
+
+@pytest.mark.parametrize(
+    "query_exit",
+    [None, QueryExitConfig(k=3), QueryExitConfig(k=3, margin=0.1),
+     QueryExitConfig(k=3, margin=0.1, from_stage=1)],
+    ids=["off", "inf", "margin0.1", "from_stage1"],
+)
+def test_engine_matches_numpy_replay(query_exit):
+    """Stage masks and exit flags agree EXACTLY with the from-scratch
+    oracle; scores agree to reassociation."""
+    ens, X, mask = make_problem(13)
+    r = make_ranker(ens)
+    result = run_mode(r, X, mask, SENTINELS, "fused", query_exit)
+    assert_matches_oracle(result, ens, X, mask, SENTINELS, query_exit)
+
+
+def test_finite_margin_nonexited_queries_bitexact():
+    """Approximate regime damage is CONTAINED: a query that did not take
+    the query-level exit scores bit-exactly as with the knob off."""
+    ens, X, mask = make_problem(14)
+    r = make_ranker(ens)
+    base = run_mode(r, X, mask, SENTINELS, "fused")
+    qe = run_mode(r, X, mask, SENTINELS, "fused",
+                  query_exit=QueryExitConfig(k=3, margin=0.05))
+    exited = np.asarray(qe.query_exited)
+    kept = ~exited
+    assert kept.any(), "problem must leave some queries un-exited"
+    np.testing.assert_array_equal(
+        np.asarray(base.scores)[kept], np.asarray(qe.scores)[kept]
+    )
+
+
+def test_exited_query_docs_leave_alive_mask():
+    """From its exit stage on, an exited query contributes no alive docs
+    (its remaining work is actually skipped, not just flagged)."""
+    ens, X, mask = make_problem(15)
+    r = make_ranker(ens)
+    qe = run_mode(r, X, mask, SENTINELS, "fused",
+                  query_exit=QueryExitConfig(k=3, margin=0.1))
+    exited = np.asarray(qe.query_exited)
+    assert exited.any(), "problem must exit at least one query"
+    final = np.asarray(qe.stage_masks[-1])
+    assert not final[exited].any()
+
+
+def test_degenerate_margin_exits_everything_after_stage0():
+    """k ≥ D with finite margin: no challenger can exist, every query
+    converges at stage 0 and ALL scores stay at the first prefix — the
+    run-time tail gate demonstrably skipped the tail computation."""
+    ens, X, mask = make_problem(16)
+    D = X.shape[1]
+    r = make_ranker(ens)
+    qe = run_mode(r, X, mask, SENTINELS, "fused",
+                  query_exit=QueryExitConfig(k=D, margin=0.0))
+    assert np.asarray(qe.query_exited).all()
+    from repro.forest.scoring import partial_scores
+    Q, _, F = X.shape
+    prefix0 = np.asarray(
+        partial_scores(ens, X.reshape(Q * D, F), SENTINELS[0])[0]
+    ).reshape(Q, D)
+    np.testing.assert_allclose(
+        np.asarray(qe.scores), prefix0, rtol=1e-5, atol=1e-5
+    )
+
+
+@pytest.mark.parametrize("mode", ["fused", "staged", "auto"])
+@pytest.mark.parametrize("qe_on", [False, True], ids=["qe_off", "qe_on"])
+def test_launch_contract(mode, qe_on):
+    """Trace-time plan: the tail counts "gated" exactly when query exit
+    is on; auto's plan is the sum of both branch plans. Re-running the
+    cached step moves NO counters."""
+    ens, X, mask = make_problem(17)
+    r = make_ranker(ens)  # fresh ranker: empty step cache
+    query_exit = QueryExitConfig(k=3, margin=0.1) if qe_on else None
+    counts = measured_launches(r, X, mask, SENTINELS, mode, query_exit)
+    assert counts == expected_launches(
+        mode, S=len(SENTINELS), has_tail=True, query_exit_on=qe_on
+    ), (mode, qe_on, counts)
+    again = measured_launches(r, X, mask, SENTINELS, mode, query_exit)
+    assert again == {"plain": 0, "segmented": 0, "gated": 0}, again
+
+
+def test_no_tail_configuration_has_no_gate():
+    """Sentinel at T: nothing to gate — no gated launch even with query
+    exit enabled, and scores still match the off run bit-for-bit."""
+    ens, X, mask = make_problem(18)
+    sentinels = (10, 20, ens.n_trees)
+    r = make_ranker(ens)
+    counts = measured_launches(
+        r, X, mask, sentinels, "fused", QueryExitConfig(k=3, margin=0.1)
+    )
+    assert counts == expected_launches(
+        "fused", S=3, has_tail=False, query_exit_on=True
+    ), counts
+    assert counts["gated"] == 0
+
+
+def test_query_exit_is_part_of_step_cache_key():
+    """Toggling the knob on one ranker compiles distinct steps — results
+    for the off-config stay correct after the on-config ran."""
+    ens, X, mask = make_problem(19)
+    r = make_ranker(ens)
+    before = run_mode(r, X, mask, SENTINELS, "fused")
+    run_mode(r, X, mask, SENTINELS, "fused", QueryExitConfig(k=2, margin=0.0))
+    after = run_mode(r, X, mask, SENTINELS, "fused")
+    np.testing.assert_array_equal(
+        np.asarray(before.scores), np.asarray(after.scores)
+    )
+    assert after.query_exited is None
+
+
+# --- query_converged unit properties (deterministic edges) -------------
+
+
+def test_converged_inf_margin_is_zero_alive():
+    partial = jnp.asarray([[1.0, 2.0], [3.0, 4.0]])
+    alive = jnp.asarray([[False, False], [True, False]])
+    got = query_converged(partial, alive, k=1, margin=math.inf)
+    np.testing.assert_array_equal(np.asarray(got), [True, False])
+
+
+def test_converged_no_challenger_rule():
+    # n_alive <= k: vacuously converged under any finite margin.
+    partial = jnp.asarray([[5.0, 1.0, 0.0]])
+    alive = jnp.asarray([[True, True, False]])
+    assert bool(query_converged(partial, alive, k=2, margin=1e9)[0])
+
+
+def test_converged_tie_is_conservative():
+    # kth == challenger: difference 0 is never > margin — not converged.
+    partial = jnp.asarray([[2.0, 2.0, 2.0]])
+    alive = jnp.ones((1, 3), bool)
+    assert not bool(query_converged(partial, alive, k=1, margin=0.0)[0])
+    # A strict gap larger than the margin converges.
+    partial = jnp.asarray([[2.0, 0.5, 0.4]])
+    assert bool(query_converged(partial, alive, k=1, margin=1.0)[0])
+
+
+def test_converged_k_clamped_to_d():
+    partial = jnp.asarray([[1.0, 2.0]])
+    alive = jnp.ones((1, 2), bool)
+    assert bool(query_converged(partial, alive, k=7, margin=0.0)[0])
+    assert not bool(query_converged(partial, alive, k=7, margin=math.inf)[0])
+
+
+# Hypothesis-based properties (ragged masks, ties, k ≥ D sweeps) live in
+# tests/test_strategies_property.py so this module still runs where
+# hypothesis is not installed.
+
+# --- serving tier ------------------------------------------------------
+
+
+def _service(query_exit=None, execution_mode="auto"):
+    from repro.core.lear import LearClassifier
+    from repro.forest.ensemble import random_ensemble
+    from repro.serve.ranking_service import RankingService
+
+    ens = random_ensemble(0, n_trees=64, depth=4, n_features=12)
+    clfs = [
+        LearClassifier(
+            forest=random_ensemble(100 + i, n_trees=10, depth=3,
+                                   n_features=16),
+            sentinel=s,
+        )
+        for i, s in enumerate((8, 28))
+    ]
+    svc = RankingService(
+        ens, clfs[0], threshold=0.4, extra_classifiers=clfs[1:],
+        execution_mode=execution_mode, launch_overhead_trees=50.0,
+        query_exit=query_exit,
+    )
+    gate = lambda p, m, features=None: m & (features[..., 0] > 0.0)
+    svc.stage_strategies = [gate] * len(svc.sentinels)
+    return svc
+
+
+def _gated_batch(rng, Q, D, F, survive_frac):
+    X = rng.normal(size=(Q, D, F)).astype(np.float32)
+    flags = np.zeros((Q, D), np.float32) - 1.0
+    flags[:, : int(round(survive_frac * D))] = 1.0
+    X[..., 0] = flags
+    return jnp.asarray(X), jnp.ones((Q, D), bool)
+
+
+def test_service_query_exit_margin_inf_bitexact_and_counted():
+    """Service-level conformance: margin=inf responses are bit-exact with
+    the knob off; an all-exit batch is counted in the stats and drives
+    the tail-skip EMA the cost model reads."""
+    rng = np.random.default_rng(2)
+    base = _service()
+    qe = _service(query_exit=QueryExitConfig(k=5))
+    Q, D, F = 2, 64, 12
+    batches = [_gated_batch(rng, Q, D, F, f) for f in (0.5, 0.0, 0.3)]
+    for X, m in batches:
+        _, s0 = base.rank_batch(X, m)
+        _, s1 = qe.rank_batch(X, m)
+        np.testing.assert_array_equal(np.asarray(s0), np.asarray(s1))
+    assert base.stats.queries_exited == 0
+    assert qe.stats.queries_exited == Q          # the all-exit batch
+    assert qe.stats.query_exit_rate == pytest.approx(Q / (3 * Q))
+    assert 0.0 < qe._active_state().tail_skip < 1.0
+    assert base._query_exit_rate_estimate() == 0.0
+    assert qe._query_exit_rate_estimate() == qe._active_state().tail_skip
+    qe._pick_mode(Q * D)  # host mirror prices with the rate — must not raise
+
+
+def test_tier_stats_expose_query_exit():
+    from repro.serve.tier import ServingTier
+
+    svc = _service(query_exit=QueryExitConfig(k=5))
+    tier = ServingTier(svc, n_features=12, warmup=False,
+                       persistent_cache=False)
+    got = tier.stats()["service"]
+    assert got["queries_exited"] == 0
+    assert got["query_exit_rate"] == 0.0

@@ -1,0 +1,209 @@
+"""Learned tree reordering: invariance, ordering quality, and cascade
+conformance on the permuted ensemble.
+
+Pinned by the strategy conformance harness (tests/strategy_harness.py):
+
+- identity permutation is BIT-exact through every scoring path;
+- arbitrary permutations agree with the source ensemble up to
+  reassociation of the tree-axis reduction (the ``_pairwise_tree_sum``
+  tolerance), full-traversal and kernel paths alike;
+- ``reorder_trees`` validates its permutation and never mutates the
+  source ensemble (its padded-buffer cache stays independent);
+- greedy residual-fit order beats boosting order on prefix convergence
+  (fixed seed), and both learned orders are true permutations;
+- the progressive engine is conformant ON the reordered ensemble:
+  fused ≡ staged ≡ auto, oracle replay agreement, and the combined
+  configuration (reorder + query-level exit) stays score-preserving at
+  ``margin=inf``.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.strategies import QueryExitConfig
+from repro.forest.ensemble import random_ensemble
+from repro.forest.reorder import (
+    full_from_contributions,
+    greedy_order,
+    learn_order,
+    per_tree_contributions,
+    prefix_residual,
+    reorder_trees,
+    reordered_ensemble,
+    variance_order,
+)
+from repro.forest.scoring import score_bitvector, score_numpy_oracle
+from repro.kernels import ops
+from strategy_harness import (
+    assert_matches_oracle,
+    make_problem,
+    make_ranker,
+    run_all_modes,
+    run_mode,
+)
+
+SENTINELS = (10, 20, 30)
+
+
+def _fixture(seed=3, B=200, T=64, F=16):
+    ens = random_ensemble(seed, n_trees=T, depth=5, n_features=F)
+    rng = np.random.default_rng(seed)
+    Xv = jnp.asarray(rng.standard_normal((B, F)).astype(np.float32))
+    X = jnp.asarray(rng.standard_normal((80, F)).astype(np.float32))
+    return ens, Xv, X
+
+
+def test_identity_reorder_is_bitexact():
+    ens, _, X = _fixture()
+    same = reorder_trees(ens, np.arange(ens.n_trees))
+    np.testing.assert_array_equal(
+        np.asarray(score_bitvector(ens, X)),
+        np.asarray(score_bitvector(same, X)),
+    )
+    np.testing.assert_array_equal(
+        np.asarray(ops.forest_score(ens, X, interpret=True)),
+        np.asarray(ops.forest_score(same, X, interpret=True)),
+    )
+
+
+@pytest.mark.parametrize("perm_seed", [0, 1])
+def test_arbitrary_permutation_within_tree_sum_tolerance(perm_seed):
+    """Permutation invariance of the additive model: any tree order
+    scores the same documents to reassociation tolerance — on the pure
+    path, the kernel path, and the numpy oracle."""
+    ens, _, X = _fixture()
+    perm = np.random.default_rng(perm_seed).permutation(ens.n_trees)
+    permuted = reorder_trees(ens, perm)
+    ref = np.asarray(score_bitvector(ens, X))
+    np.testing.assert_allclose(
+        np.asarray(score_bitvector(permuted, X)), ref,
+        rtol=1e-5, atol=1e-5,
+    )
+    np.testing.assert_allclose(
+        np.asarray(ops.forest_score(permuted, X, interpret=True)), ref,
+        rtol=1e-4, atol=1e-4,
+    )
+    np.testing.assert_allclose(
+        score_numpy_oracle(permuted, np.asarray(X)), ref,
+        rtol=1e-5, atol=1e-5,
+    )
+
+
+def test_contributions_compose_to_full_score():
+    """per_tree_contributions + the sanctioned reducer reproduce the
+    reference score — the decomposition the order learner fits."""
+    ens, Xv, _ = _fixture()
+    contrib = per_tree_contributions(ens, Xv)
+    assert contrib.shape == (Xv.shape[0], ens.n_trees)
+    np.testing.assert_allclose(
+        np.asarray(full_from_contributions(ens, contrib)),
+        np.asarray(score_bitvector(ens, Xv)),
+        rtol=1e-5, atol=1e-5,
+    )
+
+
+def test_reorder_rejects_non_permutations():
+    ens, _, _ = _fixture()
+    with pytest.raises(AssertionError):
+        reorder_trees(ens, np.zeros(ens.n_trees, np.int64))  # repeats
+    with pytest.raises(AssertionError):
+        reorder_trees(ens, np.arange(ens.n_trees - 1))       # wrong length
+
+
+def test_reorder_does_not_mutate_source():
+    """The permuted ensemble is a NEW instance; the source (and its
+    padded-buffer cache identity) is untouched."""
+    ens, _, X = _fixture()
+    before = np.asarray(score_bitvector(ens, X)).copy()
+    pf_before = ops.padded_forest(ens, boundaries=(10, ens.n_trees))
+    permuted = reorder_trees(
+        ens, np.random.default_rng(0).permutation(ens.n_trees)
+    )
+    assert permuted is not ens
+    np.testing.assert_array_equal(
+        np.asarray(score_bitvector(ens, X)), before
+    )
+    # Same boundaries, same instance → the source's cache still serves;
+    # the permuted instance pads its own layout.
+    assert ops.padded_forest(ens, boundaries=(10, ens.n_trees)) is pf_before
+    pf_perm = ops.padded_forest(permuted, boundaries=(10, ens.n_trees))
+    assert pf_perm is not pf_before
+
+
+def test_greedy_beats_boosting_order_on_prefix_convergence():
+    """The point of the whole exercise: after the same number of trees,
+    the greedy order's partial sum is closer to the full score than
+    boosting order — at every quartile prefix."""
+    ens, Xv, _ = _fixture()
+    contrib = np.asarray(per_tree_contributions(ens, Xv))
+    T = ens.n_trees
+    identity = np.arange(T)
+    greedy = greedy_order(contrib)
+    r_id = prefix_residual(contrib, identity)
+    r_gr = prefix_residual(contrib, greedy)
+    for frac in (0.25, 0.5, 0.75):
+        m = int(T * frac)
+        assert r_gr[m] <= r_id[m], (frac, r_gr[m], r_id[m])
+    # Both residual curves end at zero (the full sum is order-free).
+    assert r_gr[-1] == pytest.approx(0.0, abs=1e-9)
+    assert r_id[-1] == pytest.approx(0.0, abs=1e-9)
+
+
+def test_learned_orders_are_permutations():
+    ens, Xv, _ = _fixture()
+    contrib = np.asarray(per_tree_contributions(ens, Xv))
+    T = ens.n_trees
+    for order in (
+        greedy_order(contrib),
+        variance_order(contrib),
+        learn_order(ens, Xv, method="greedy"),
+        learn_order(ens, Xv, method="variance"),
+        learn_order(ens, Xv, method="identity"),
+        learn_order(ens, Xv, method="greedy", max_docs=50),  # subsample
+    ):
+        np.testing.assert_array_equal(np.sort(order), np.arange(T))
+    with pytest.raises(AssertionError):
+        learn_order(ens, Xv, method="nope")
+
+
+def test_learn_order_is_deterministic():
+    ens, Xv, _ = _fixture()
+    a = learn_order(ens, Xv, method="greedy")
+    b = learn_order(ens, Xv, method="greedy")
+    np.testing.assert_array_equal(a, b)
+
+
+@pytest.mark.parametrize(
+    "query_exit", [None, QueryExitConfig(k=3), QueryExitConfig(k=3, margin=0.1)],
+    ids=["off", "inf", "margin0.1"],
+)
+def test_cascade_conformance_on_reordered_ensemble(query_exit):
+    """The engine treats a permuted ensemble like any other: all three
+    modes agree bit-for-bit and the numpy replay (run on the permuted
+    ensemble) matches — with query exit off, exact, and approximate."""
+    ens, X, mask = make_problem(21)
+    Q, D, F = X.shape
+    permuted, order = reordered_ensemble(
+        ens, X.reshape(Q * D, F), method="greedy"
+    )
+    r = make_ranker(permuted)
+    results = run_all_modes(r, X, mask, SENTINELS, query_exit)
+    assert_matches_oracle(
+        results["fused"], permuted, X, mask, SENTINELS, query_exit
+    )
+
+
+def test_reorder_plus_query_exit_margin_inf_is_score_preserving():
+    """The combined configuration: on the SAME permuted ensemble,
+    enabling exact query exit changes no score."""
+    ens, X, mask = make_problem(22)
+    Q, D, F = X.shape
+    permuted, _ = reordered_ensemble(ens, X.reshape(Q * D, F))
+    r = make_ranker(permuted)
+    base = run_mode(r, X, mask, SENTINELS, "fused")
+    qe = run_mode(r, X, mask, SENTINELS, "fused",
+                  query_exit=QueryExitConfig(k=3))
+    np.testing.assert_array_equal(
+        np.asarray(base.scores), np.asarray(qe.scores)
+    )

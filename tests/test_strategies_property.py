@@ -1,0 +1,204 @@
+"""Property-based tests (hypothesis) for the early-exit strategy family.
+
+Randomized sweeps of the edge geometry the deterministic suites pin
+pointwise: all-masked query rows, ``k_s ≥ D`` clamps, heavy score ties,
+and single-document queries — for ``ert_continue`` / ``ept_continue`` /
+``ideal_continue`` and the query-level ``query_converged`` predicate.
+
+Module skips cleanly where hypothesis is not installed (the CI fast
+lane has it; minimal local environments may not).
+"""
+
+import math
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core.strategies import (  # noqa: E402
+    ept_continue,
+    ert_continue,
+    ideal_continue,
+    query_converged,
+)
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def _problem(Q, D, alive_rate, ties, seed):
+    rng = np.random.default_rng(seed)
+    partial = rng.normal(size=(Q, D)).astype(np.float32)
+    if ties:
+        partial = np.round(partial)  # collapses scores onto few values
+    mask = rng.random((Q, D)) < alive_rate
+    return partial, mask, rng
+
+
+@given(
+    Q=st.integers(1, 5),
+    D=st.integers(1, 24),
+    k_s=st.integers(1, 40),
+    alive_rate=st.floats(0.0, 1.0),
+    ties=st.booleans(),
+    seed=st.integers(0, 2**16),
+)
+@settings(**SETTINGS)
+def test_ert_mask_and_clamp_properties(Q, D, k_s, alive_rate, ties, seed):
+    """ERT never resurrects masked docs; k_s ≥ D keeps every masked doc
+    (ranks are always < D); all-masked rows stay empty; per query at
+    most min(k_s, n_alive) docs continue."""
+    partial, mask, _ = _problem(Q, D, alive_rate, ties, seed)
+    cont = np.asarray(
+        ert_continue(jnp.asarray(partial), jnp.asarray(mask), k_s=k_s)
+    )
+    assert not (cont & ~mask).any()
+    if k_s >= D:
+        np.testing.assert_array_equal(cont, mask)
+    per_query = cont.sum(axis=1)
+    n_alive = mask.sum(axis=1)
+    assert (per_query <= np.minimum(k_s, n_alive)).all()
+    assert (per_query[n_alive == 0] == 0).all()
+
+
+@given(
+    Q=st.integers(1, 5),
+    D=st.integers(1, 24),
+    k_s=st.integers(1, 40),
+    p=st.floats(0.0, 5.0),
+    alive_rate=st.floats(0.0, 1.0),
+    ties=st.booleans(),
+    seed=st.integers(0, 2**16),
+)
+@settings(**SETTINGS)
+def test_ept_mask_tie_and_threshold_properties(
+    Q, D, k_s, p, alive_rate, ties, seed
+):
+    """EPT keeps exactly the alive docs with score ≥ σ_{k_s} − p (ties at
+    the threshold INCLUDED — ≥, not >), never resurrects masked docs,
+    and is mask-invariant (garbage at masked positions is ignored)."""
+    partial, mask, rng = _problem(Q, D, alive_rate, ties, seed)
+    cont = np.asarray(
+        ept_continue(jnp.asarray(partial), jnp.asarray(mask), k_s=k_s, p=p)
+    )
+    assert not (cont & ~mask).any()
+    # Reference semantics in numpy (kth best ALIVE score, clamped k).
+    NEG = -1e30
+    masked = np.where(mask, partial, NEG)
+    kk = min(k_s, D)
+    kth = np.sort(masked, axis=1)[:, ::-1][:, kk - 1]
+    expect = mask & (partial >= (kth - p)[:, None])
+    np.testing.assert_array_equal(cont, expect)
+    # Mask-invariance: trash the masked positions, decision unchanged.
+    trashed = partial.copy()
+    trashed[~mask] = rng.normal(size=int((~mask).sum())) * 1e6
+    again = np.asarray(
+        ept_continue(jnp.asarray(trashed), jnp.asarray(mask), k_s=k_s, p=p)
+    )
+    np.testing.assert_array_equal(cont, again)
+
+
+@given(
+    Q=st.integers(1, 4),
+    D=st.integers(1, 12),
+    k=st.integers(1, 15),
+    alive_rate=st.floats(0.0, 1.0),
+    seed=st.integers(0, 2**16),
+)
+@settings(**SETTINGS)
+def test_ideal_oracle_properties(Q, D, k, alive_rate, seed):
+    """EE_ideal returns a per-query cut in [0, D], never resurrects
+    masked docs, and the merged ranking at its cut reaches full-ensemble
+    NDCG@k (the oracle's defining property)."""
+    from repro.metrics.ranking import ndcg_at_k
+
+    rng = np.random.default_rng(seed)
+    partial = jnp.asarray(rng.normal(size=(Q, D)).astype(np.float32))
+    full = partial + jnp.asarray(rng.normal(size=(Q, D)).astype(np.float32))
+    labels = jnp.asarray(rng.integers(0, 5, size=(Q, D)).astype(np.float32))
+    mask = jnp.asarray(rng.random((Q, D)) < alive_rate)
+    cont, cut = ideal_continue(partial, full, labels, mask, k=k)
+    cont, cut = np.asarray(cont), np.asarray(cut)
+    assert ((0 <= cut) & (cut <= D)).all()
+    assert not (cont & ~np.asarray(mask)).any()
+    merged = jnp.where(jnp.asarray(cont), full, partial)
+    got = np.asarray(ndcg_at_k(merged, labels, mask, k))
+    ref = np.asarray(ndcg_at_k(full, labels, mask, k))
+    assert (got >= ref - 1e-6).all()
+    # All-masked rows: no doc continues.
+    empty = ~np.asarray(mask).any(axis=1)
+    assert not cont[empty].any()
+
+
+@given(
+    Q=st.integers(1, 5),
+    D=st.integers(1, 24),
+    k=st.integers(1, 30),
+    margin=st.floats(0.0, 4.0),
+    alive_rate=st.floats(0.0, 1.0),
+    ties=st.booleans(),
+    seed=st.integers(0, 2**16),
+)
+@settings(**SETTINGS)
+def test_query_converged_mask_invariance(
+    Q, D, k, margin, alive_rate, ties, seed
+):
+    """Garbage at non-alive positions must not change the predicate —
+    the invariance staged execution (stale prefixes on exited docs)
+    depends on."""
+    partial, alive, rng = _problem(Q, D, alive_rate, ties, seed)
+    trashed = partial.copy()
+    trashed[~alive] = rng.normal(size=int((~alive).sum())) * 1e6
+    a = query_converged(jnp.asarray(partial), jnp.asarray(alive), k, margin)
+    b = query_converged(jnp.asarray(trashed), jnp.asarray(alive), k, margin)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@given(
+    Q=st.integers(1, 4),
+    D=st.integers(1, 16),
+    k=st.integers(1, 20),
+    m_lo=st.floats(0.0, 2.0),
+    m_hi=st.floats(0.0, 2.0),
+    seed=st.integers(0, 2**16),
+)
+@settings(**SETTINGS)
+def test_query_converged_margin_monotonicity(Q, D, k, m_lo, m_hi, seed):
+    """A harder (larger) margin converges a subset of what an easier one
+    converges; margin=inf converges a subset of any finite margin."""
+    lo, hi = sorted((m_lo, m_hi))
+    rng = np.random.default_rng(seed)
+    partial = jnp.asarray(rng.normal(size=(Q, D)).astype(np.float32))
+    alive = jnp.asarray(rng.random((Q, D)) < 0.7)
+    easy = np.asarray(query_converged(partial, alive, k, lo))
+    hard = np.asarray(query_converged(partial, alive, k, hi))
+    inf = np.asarray(query_converged(partial, alive, k, math.inf))
+    assert not (hard & ~easy).any()
+    assert not (inf & ~hard).any()
+
+
+@given(
+    D=st.integers(1, 16),
+    k=st.integers(1, 20),
+    margin=st.floats(0.0, 4.0),
+    seed=st.integers(0, 2**16),
+)
+@settings(**SETTINGS)
+def test_query_converged_empty_and_single_doc_rows(D, k, margin, seed):
+    """All-masked rows always converge (even at margin=inf); a single
+    alive doc converges under any finite margin (no challenger) but not
+    at margin=inf (it is still alive)."""
+    rng = np.random.default_rng(seed)
+    partial = jnp.asarray(rng.normal(size=(2, D)).astype(np.float32))
+    alive = np.zeros((2, D), bool)
+    alive[1, rng.integers(D)] = True
+    got_inf = np.asarray(
+        query_converged(partial, jnp.asarray(alive), k, math.inf)
+    )
+    got_fin = np.asarray(
+        query_converged(partial, jnp.asarray(alive), k, margin)
+    )
+    assert got_inf[0] and got_fin[0]          # empty row
+    assert not got_inf[1] and got_fin[1]      # single alive doc
