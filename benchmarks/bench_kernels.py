@@ -12,7 +12,10 @@ execution modes across continue rates and records the crossover the
 serving cost model should sit near; the ``leaf_gather`` section sweeps the
 kernel's three leaf-value resolution paths (one-hot / select tree / MXU
 contraction) across leaf counts; the ``blocked_rank`` section sweeps the
-direct vs blocked sort-free per-query ranking across candidate counts.
+direct vs blocked sort-free per-query ranking across candidate counts;
+the ``hybrid`` section runs the dense-stage-0 cascade (distilled proxy
+gate) against the all-trees cascade at matched NDCG@10 and records the
+trees-traversed reduction.
 
 Besides the CSV on stdout, results are written machine-readable to
 ``BENCH_kernels.json`` at the repo root so the perf trajectory is tracked
@@ -32,6 +35,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.cascade import CascadeRanker, bucket_capacity
+from repro.core.stage import EngineConfig
 from repro.core.compaction import compact_indices_argsort, compact_indices_cumsum
 from repro.core.features import (
     RANK_BLOCKED_MIN_D,
@@ -163,7 +167,7 @@ def _bench_cascade(rows, smoke=False):
                     x, m, capacity=c
                 ).scores,
                 lambda x, m=mask, c=cap: cascade.rank_progressive(
-                    x, m, sentinels=[sentinel], capacities=c
+                    x, m, EngineConfig.trees([sentinel], capacities=c)
                 ).scores,
             ],
             X, iters=2 if smoke else 16,
@@ -211,11 +215,11 @@ def _bench_multi_sentinel(rows, smoke=False):
     strategies = [
         (lambda p, m, k=k: ert_continue(p, m, k_s=k)) for k in (26, 13, 6)
     ]
+    cfg_s3 = EngineConfig.trees(
+        sentinels, tuple(strategies), capacities=512
+    )
     t_prog3 = _time(
-        lambda x: cascade.rank_progressive(
-            x, mask, sentinels=list(sentinels), capacities=512,
-            strategies=strategies,
-        ).scores,
+        lambda x: cascade.rank_progressive(x, mask, cfg_s3).scores,
         X, iters=2 if smoke else 5,
     )
     rows.append(("cascade_progressive_s3", t_prog3,
@@ -275,11 +279,16 @@ def _bench_fused_vs_staged(rows, extra, smoke=False):
             (lambda p, m, k=k_s: ert_continue(p, m, k_s=k)) for _ in sentinels
         ]
         cap = bucket_capacity(int(Q * k_s * 1.25), Q * D)
+        def cfg(mode, loh=0.0, s=tuple(strategies), c=cap):
+            return EngineConfig.trees(
+                sentinels, s, capacities=c, mode=mode,
+                launch_overhead_trees=loh,
+            )
+
         t_fused, t_staged = _time_group(
             [
-                lambda x, m=mode: cascade.rank_progressive(
-                    x, mask, sentinels=sentinels, capacities=cap,
-                    strategies=strategies, mode=m,
+                lambda x, c=cfg(mode): cascade.rank_progressive(
+                    x, mask, c
                 ).scores
                 for mode in ("fused", "staged")
             ],
@@ -289,10 +298,8 @@ def _bench_fused_vs_staged(rows, extra, smoke=False):
         # and bit-exactness with the picked branch's dedicated run.
         ema = [rate * Q * D] * len(sentinels)
         auto = cascade.rank_progressive(
-            X, mask, sentinels=sentinels, capacities=cap,
-            strategies=strategies, mode="auto",
+            X, mask, cfg("auto", loh),
             stage_ema=jnp.asarray(ema, jnp.float32),
-            launch_overhead_trees=loh,
         )
         device_pick = "staged" if bool(auto.picked_staged) else "fused"
         # block_b must match what the in-program pick was traced with
@@ -307,10 +314,7 @@ def _bench_fused_vs_staged(rows, extra, smoke=False):
             for m in ("fused", "staged")
         }
         host_pick = "staged" if cost["staged"] < cost["fused"] else "fused"
-        picked_ref = cascade.rank_progressive(
-            X, mask, sentinels=sentinels, capacities=cap,
-            strategies=strategies, mode=device_pick,
-        )
+        picked_ref = cascade.rank_progressive(X, mask, cfg(device_pick))
         exact = bool(
             (np.asarray(auto.scores) == np.asarray(picked_ref.scores)).all()
         )
@@ -538,11 +542,13 @@ def _bench_tradeoff(rows, extra, smoke=False):
         )
         strategies = [lear_strategy(classifiers[s], thr) for s in sentinels]
 
+        config = EngineConfig.trees(
+            sentinels, tuple(strategies), capacities=Q * D,
+            mode="fused", query_exit=qe,
+        )
+
         def call():
-            return cascade.rank_progressive(
-                Xj, mj, sentinels=sentinels, capacities=Q * D,
-                strategies=strategies, mode="fused", query_exit=qe,
-            )
+            return cascade.rank_progressive(Xj, mj, config)
 
         res = call()
         exited = (
@@ -680,6 +686,164 @@ def _bench_tradeoff(rows, extra, smoke=False):
     }
 
 
+def _bench_hybrid(rows, extra, smoke=False):
+    """Hybrid dense-stage-0 cascade vs the all-trees cascade, matched NDCG.
+
+    Distills the dense proxy from the bench ensemble itself
+    (:func:`repro.train.distill.distill_dense_scorer`), gates with
+    ``dense_keep_fraction`` at swept keep fractions, and runs BOTH
+    configurations through the same progressive engine with identical
+    tree-stage strategies. The recorded config is the cheapest keep
+    fraction whose NDCG@10 stays within ``ndcg_bar_pct`` of the all-trees
+    run; its trees-traversed ratio (dense evaluations charged at
+    ``DenseStage.cost_trees`` tree-equivalents per doc) must come in
+    below 1 — that reduction is the hybrid headline ``check_bench.py``
+    validates."""
+    import functools
+
+    from repro.core.stage import DenseStage, EngineConfig
+    from repro.core.strategies import dense_keep_fraction
+    from repro.metrics.ranking import mean_ndcg
+    from repro.metrics.speedup import trees_traversed_progressive
+    from repro.train.distill import distill_dense_scorer
+
+    rng = np.random.default_rng(7)
+    Q, D, F = (8, 32, 16) if smoke else (24, 64, 24)
+    QT = 16 if smoke else 48                  # distillation queries
+    n_trees = 64 if smoke else 160
+    sentinels = [16, 32] if smoke else [40, 80]
+    steps = 120 if smoke else 400
+    bar_pct = 1.0 if smoke else 0.5           # tiny eval sets are noisy
+    keep_fracs = (0.9, 0.75, 0.5, 0.35)
+    iters = 2 if smoke else 8
+    ens = random_ensemble(7, n_trees=n_trees, depth=4, n_features=F)
+
+    def make_batch(q):
+        X = rng.normal(size=(q, D, F)).astype(np.float32)
+        n_docs = rng.integers(8, D + 1, size=q)   # ragged candidate lists
+        mask = np.arange(D)[None, :] < n_docs[:, None]
+        full = np.asarray(
+            forest_score(ens, jnp.asarray(X.reshape(q * D, F)))
+        ).reshape(q, D)
+        noisy = full + 0.5 * full.std() * rng.normal(size=full.shape)
+        ranks = np.asarray(rank_from_scores(
+            jnp.asarray(noisy.astype(np.float32)), jnp.asarray(mask)
+        ))
+        labels = (np.clip(4 - ranks // 4, 0, 4) * mask).astype(np.float32)
+        return X, labels, mask
+
+    Xt, _, mt = make_batch(QT)
+    X, labels, mask = make_batch(Q)
+    Xj, mj, yj = jnp.asarray(X), jnp.asarray(mask), jnp.asarray(labels)
+
+    distilled = distill_dense_scorer(
+        ens, Xt, mt, steps=steps, lr=3e-3, seed=7, log_every=0
+    )
+
+    # Identical tree-stage strategies on both sides: rank-threshold exits
+    # keeping the top ~40% / ~20% of candidates per stage.
+    strategies = tuple(
+        (lambda p, m, k=max(1, int(f * D)): ert_continue(p, m, k_s=k))
+        for f in (0.4, 0.2)[: len(sentinels)]
+    )
+    cascade = CascadeRanker(
+        ensemble=ens, sentinel=sentinels[0], strategy=strategies[0]
+    )
+    cfg_all = EngineConfig.trees(
+        sentinels, strategies, capacities=Q * D, mode="fused"
+    )
+
+    def run(cfg):
+        res = cascade.rank_progressive(Xj, mj, cfg)
+        acct_sents: tuple = tuple(sentinels)
+        acct_costs: tuple = (0.0,) * len(sentinels)
+        if cfg.dense is not None:
+            acct_sents = (0, *acct_sents)
+            acct_costs = (float(cfg.dense.cost_trees), *acct_costs)
+        trees = float(trees_traversed_progressive(
+            mj, res.stage_masks, acct_sents, n_trees, list(acct_costs)
+        ))
+        ndcg = float(mean_ndcg(res.scores, yj, mj, 10))
+        return res, trees, ndcg
+
+    _, trees_all, ndcg_all = run(cfg_all)
+    bar = ndcg_all * (1 - bar_pct / 100)
+
+    sweep, picked = [], None
+    for kf in keep_fracs:
+        stage = DenseStage(
+            scorer=distilled.scorer,
+            policy=functools.partial(dense_keep_fraction, keep_frac=kf),
+        )
+        cfg = EngineConfig.hybrid(
+            stage, sentinels, strategies, capacities=Q * D, mode="fused"
+        )
+        _, trees, ndcg = run(cfg)
+        point = {
+            "keep_frac": kf,
+            "ndcg10": round(ndcg, 4),
+            "trees_traversed": trees,
+            "trees_vs_all_trees": round(trees / trees_all, 4),
+            "meets_ndcg_bar": bool(ndcg >= bar - 1e-12),
+        }
+        sweep.append(point)
+        if point["meets_ndcg_bar"] and (
+            picked is None or trees < picked[1]
+        ):
+            picked = (cfg, trees, point)
+    assert picked is not None, (
+        "no keep fraction met the matched-NDCG bar", sweep
+    )
+    cfg_hyb, _, point = picked
+
+    t_all, t_hyb = _time_group(
+        [
+            lambda x, c=cfg_all: cascade.rank_progressive(x, mj, c).scores,
+            lambda x, c=cfg_hyb: cascade.rank_progressive(x, mj, c).scores,
+        ],
+        Xj, iters=iters,
+    )
+    rows.append(("hybrid_all_trees", t_all,
+                 f"trees={n_trees},docs={int(mask.sum())},"
+                 f"ndcg10={ndcg_all:.4f}"))
+    rows.append(("hybrid_dense_stage0", t_hyb,
+                 f"keep_frac={point['keep_frac']},"
+                 f"trees_vs_all_trees={point['trees_vs_all_trees']:.3f},"
+                 f"vs_all_trees_wall={t_all / max(t_hyb, 1e-9):.2f}x"))
+
+    extra["hybrid"] = {
+        "queries": Q,
+        "docs": int(mask.sum()),
+        "n_trees": n_trees,
+        "sentinels": sentinels,
+        "dense_cost_trees": float(cfg_hyb.dense.cost_trees),
+        "ndcg_bar_pct": bar_pct,
+        "distill": {
+            "steps": steps,
+            "teacher_rmse": round(distilled.teacher_rmse, 4),
+            "pair_accuracy": round(distilled.pair_accuracy, 4),
+        },
+        "all_trees": {
+            "ndcg10": round(ndcg_all, 4),
+            "trees_traversed": trees_all,
+            "wall_us": round(t_all, 1),
+        },
+        "dense_stage0": {
+            **point,
+            "delta_pct_vs_all_trees": round(
+                100 * (point["ndcg10"] - ndcg_all) / ndcg_all, 3
+            ),
+            "wall_us": round(t_hyb, 1),
+        },
+        "sweep": sweep,
+        "note": ("dense_stage0 is the cheapest swept keep fraction whose "
+                 "NDCG@10 stays within ndcg_bar_pct of the all-trees run; "
+                 "trees_vs_all_trees < 1 means the dense gate (charged at "
+                 "dense_cost_trees tree-equivalents per candidate) pays "
+                 "for itself in pruned tree traversals"),
+    }
+
+
 def main(csv: bool = True, json_path: str = JSON_PATH, smoke: bool = False):
     rows = []
     extra = {}
@@ -690,6 +854,7 @@ def main(csv: bool = True, json_path: str = JSON_PATH, smoke: bool = False):
     _bench_leaf_gather(rows, extra, smoke)
     _bench_blocked_rank(rows, extra, smoke)
     _bench_tradeoff(rows, extra, smoke)
+    _bench_hybrid(rows, extra, smoke)
 
     if csv:
         for name, us, derived in rows:

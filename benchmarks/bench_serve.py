@@ -42,8 +42,8 @@ import jax.numpy as jnp
 from repro.core.lear import LearClassifier
 from repro.forest.ensemble import random_ensemble
 from repro.serve.batching import BucketPolicy
-from repro.serve.ranking_service import RankingService
-from repro.serve.tier import ServingTier
+from repro.serve.ranking_service import RankingService, ServiceConfig
+from repro.serve.tier import ServingTier, TierConfig
 from repro.serve.warmup import warmup_service
 
 JSON_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_serve.json")
@@ -66,8 +66,12 @@ def _make_service(n_trees: int, seed: int = 0) -> RankingService:
         for i, s in enumerate(SENTINELS)
     ]
     return RankingService(
-        ens, clfs[0], threshold=0.4, extra_classifiers=clfs[1:],
-        execution_mode="auto", launch_overhead_trees="auto",
+        ens, clfs[0],
+        ServiceConfig(
+            threshold=0.4, execution_mode="auto",
+            launch_overhead_trees="auto",
+        ),
+        extra_classifiers=clfs[1:],
     )
 
 
@@ -198,8 +202,9 @@ def main(json_path: str = JSON_PATH, smoke: bool = False) -> dict:
 
     svc = _make_service(n_trees)
     tier = ServingTier(
-        svc, N_FEATURES, doc_counts=(hi,), policy=policy,
-        warmup=True, persistent_cache=True,
+        svc, N_FEATURES,
+        TierConfig(doc_counts=(hi,), warmup=True, persistent_cache=True),
+        policy=policy,
     )
     t0 = time.perf_counter()
     tier.start()

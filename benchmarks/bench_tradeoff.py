@@ -22,6 +22,7 @@ import jax.numpy as jnp
 from benchmarks.common import Experiment, get_experiment
 from repro.core.cascade import CascadeRanker
 from repro.core.lear import augment_features, train_lear
+from repro.core.stage import EngineConfig
 from repro.core.strategies import QueryExitConfig, ept_continue
 from repro.forest.reorder import reordered_ensemble
 from repro.metrics.ranking import mean_ndcg
@@ -133,11 +134,13 @@ def tradeoff_configs(exp: Experiment, split: str = "test",
             _lear_strategy(clfs[s], X, thr) for s in sentinels
         ]
 
+        config = EngineConfig.trees(
+            sentinels, tuple(strategies), capacities=Q * D,
+            mode="fused", query_exit=qe,
+        )
+
         def call():
-            return cascade.rank_progressive(
-                X, mask, sentinels=sentinels, capacities=Q * D,
-                strategies=strategies, mode="fused", query_exit=qe,
-            )
+            return cascade.rank_progressive(X, mask, config)
 
         res = call()
         best = float("inf")

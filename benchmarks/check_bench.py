@@ -20,7 +20,13 @@ Kernel bench (:func:`validate`):
   matched-NDCG bar with positive finite trees/wall numbers, and no
   enhanced config traverses MORE trees than document-only LEAR (the
   margin sweep contains the exact ``inf`` mode and the reorder falls
-  back to identity, so ``trees_vs_lear ≤ 1`` must hold structurally).
+  back to identity, so ``trees_vs_lear ≤ 1`` must hold structurally);
+- the ``hybrid`` section (:func:`validate_hybrid`) compares the
+  dense-stage-0 cascade against the all-trees cascade: the recorded
+  config meets the matched-NDCG bar, its trees-traversed ratio is
+  strictly below 1 (the distilled gate pays for itself), both timings
+  are positive and finite, and the distillation actually fit
+  (pair accuracy above chance).
 
 Serve bench (:func:`validate_serve`):
 
@@ -49,7 +55,7 @@ sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
 
 REQUIRED_SECTIONS = (
     "rows", "fused_vs_staged", "leaf_gather", "blocked_rank",
-    "launch_calibration", "tradeoff",
+    "launch_calibration", "tradeoff", "hybrid",
 )
 
 TRADEOFF_CONFIGS = (
@@ -89,6 +95,44 @@ def validate_tradeoff(td: dict) -> list[str]:
                 "an enhanced config must never traverse more than "
                 "document-only LEAR"
             )
+    return problems
+
+
+def validate_hybrid(hy: dict) -> list[str]:
+    """Contract findings for the hybrid dense-stage-0 section."""
+    problems: list[str] = []
+    for side in ("all_trees", "dense_stage0"):
+        c = hy.get(side)
+        if not isinstance(c, dict):
+            problems.append(f"hybrid: missing config {side!r}")
+            continue
+        if not _positive_finite(c.get("wall_us")):
+            problems.append(f"hybrid {side}: bad wall_us {c.get('wall_us')!r}")
+        if not _positive_finite(c.get("trees_traversed")):
+            problems.append(
+                f"hybrid {side}: bad trees_traversed "
+                f"{c.get('trees_traversed')!r}"
+            )
+        ndcg = c.get("ndcg10")
+        if not (_positive_finite(ndcg) and ndcg <= 1.0):
+            problems.append(f"hybrid {side}: bad ndcg10 {ndcg!r}")
+    ds = hy.get("dense_stage0", {})
+    if isinstance(ds, dict):
+        if not ds.get("meets_ndcg_bar"):
+            problems.append("hybrid dense_stage0: fails the matched-NDCG bar")
+        ratio = ds.get("trees_vs_all_trees")
+        if not (_positive_finite(ratio) and ratio < 1.0):
+            problems.append(
+                f"hybrid dense_stage0: trees_vs_all_trees {ratio!r} not in "
+                "(0, 1) — the dense gate must traverse strictly fewer "
+                "tree-equivalents than the all-trees cascade"
+            )
+    acc = hy.get("distill", {}).get("pair_accuracy")
+    if not (_positive_finite(acc) and 0.5 < acc <= 1.0):
+        problems.append(
+            f"hybrid distill: pair_accuracy {acc!r} not in (0.5, 1] — "
+            "the distilled proxy did not learn the teacher's order"
+        )
     return problems
 
 
@@ -150,6 +194,7 @@ def validate(payload: dict) -> list[str]:
         problems.append("launch_calibration: bad launch_overhead_trees")
 
     problems += validate_tradeoff(payload["tradeoff"])
+    problems += validate_hybrid(payload["hybrid"])
     return problems
 
 

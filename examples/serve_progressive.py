@@ -25,7 +25,7 @@ from repro.core.lear import train_lear
 from repro.data.synthetic import make_letor_dataset
 from repro.forest.gbdt import GBDTParams, train_lambdamart
 from repro.serve.calibration import calibrate_launch_overhead_trees
-from repro.serve.ranking_service import RankingService
+from repro.serve.ranking_service import RankingService, ServiceConfig
 
 
 def _shifted_batches(ds, rng, batch_queries, n_batches, sparse_first):
@@ -86,9 +86,13 @@ def main(smoke: bool = False):
 
     # 2. The service: auto execution mode = on-device fused/staged pick.
     service = RankingService(
-        ranker, clf_a, extra_classifiers=[clf_b], threshold=0.3,
-        execution_mode="auto", launch_overhead_trees=overhead,
-        capacity_headroom=1.25, survivor_ema=0.5, top_k=10,
+        ranker, clf_a,
+        ServiceConfig(
+            threshold=0.3, execution_mode="auto",
+            launch_overhead_trees=overhead, capacity_headroom=1.25,
+            survivor_ema=0.5, top_k=10,
+        ),
+        extra_classifiers=[clf_b],
     )
 
     # 3. Shifting traffic: sparse-survivor batches first, dense after.

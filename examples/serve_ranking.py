@@ -18,7 +18,7 @@ from repro.data.pipeline import QueryBatcher
 from repro.data.synthetic import make_letor_dataset
 from repro.forest.gbdt import GBDTParams, train_lambdamart
 from repro.metrics.ranking import mean_ndcg
-from repro.serve.ranking_service import RankingService
+from repro.serve.ranking_service import RankingService, ServiceConfig
 
 ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "serve_demo")
 
@@ -37,7 +37,7 @@ def main():
     clf = train_lear(cls_split.X, cls_split.labels, cls_split.mask, ranker,
                      sentinel=6, k=15)
 
-    service = RankingService(ranker, clf, threshold=0.3)
+    service = RankingService(ranker, clf, ServiceConfig(threshold=0.3))
     batcher = QueryBatcher(n_queries=test.n_queries, batch_queries=8)
 
     print("serving 6 batches of 8 queries...")

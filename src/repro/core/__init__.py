@@ -11,21 +11,34 @@ ensembles, plus the heuristic baselines it is evaluated against.
   pipeline (sort-free per-query ranking, min/max segment reductions,
   score normalization) shared by LEAR training and the compiled serving
   step.
+- :mod:`repro.core.stage` — cascade stages as first-class values: the
+  :class:`CascadeStage` protocol, :class:`TreeStage` /
+  :class:`DenseStage` implementations, and the frozen
+  :class:`EngineConfig` that configures one progressive step (and doubles
+  as its jit cache key).
 - :mod:`repro.core.cascade` — the execution engine: sentinel-partitioned
   ensemble traversal with batch compaction (the TPU realization of
   document-level early exit), including the multi-sentinel progressive
   engine (fused segmented-head, per-stage-tail, and the combined
-  ``mode="auto"`` program with an on-device fused/staged pick).
+  ``mode="auto"`` program with an on-device fused/staged pick) and its
+  hybrid dense-stage-0 variant.
 - :mod:`repro.core.compaction` — O(n) cumsum survivor compaction plus the
   O(n log n) argsort reference it replaced.
 """
 
 from repro.core.strategies import (
     QueryExitConfig,
+    dense_keep_fraction,
     ept_continue,
     ert_continue,
     ideal_continue,
     query_converged,
+)
+from repro.core.stage import (
+    CascadeStage,
+    DenseStage,
+    EngineConfig,
+    TreeStage,
 )
 from repro.core.features import augment_features
 from repro.core.lear import (
@@ -41,9 +54,14 @@ from repro.core.compaction import (
 )
 
 __all__ = [
+    "CascadeStage",
+    "TreeStage",
+    "DenseStage",
+    "EngineConfig",
     "QueryExitConfig",
     "ert_continue",
     "ept_continue",
+    "dense_keep_fraction",
     "ideal_continue",
     "query_converged",
     "LearClassifier",

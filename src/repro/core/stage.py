@@ -1,0 +1,313 @@
+"""Cascade stages as first-class values: the CascadeStage/EngineConfig API.
+
+The progressive engine used to describe a cascade as parallel keyword
+sequences (``sentinels=…, strategies=…, classifier_trees=…``) threaded
+through :meth:`repro.core.cascade.CascadeRanker.rank_progressive` — which
+hard-wired "a stage is a tree prefix". This module makes the stage itself
+the unit of configuration:
+
+- :class:`TreeStage` — today's sentinel-segmented Pallas tree prefix,
+  unchanged numerics: *scorer* = the shared segmented forest kernel up to
+  ``sentinel``, *exit policy* = any strategy callable (``None`` defers to
+  the ranker's default, e.g. the wrapped LEAR classifier),
+  *capacity* = the compacted survivor bound.
+- :class:`DenseStage` — a genuinely different scorer type: a small
+  distilled dense model (one MXU matmul over the whole ``[Q·D, F]`` block,
+  see :mod:`repro.models.dense_scorer`) whose policy prunes the easy
+  majority before any tree is touched. Allowed only as stage 0; the tree
+  stages then run on the dense-compacted survivor block.
+- :class:`EngineConfig` — the frozen, hashable bundle of the stage list
+  plus the engine knobs (``mode``, ``leaf_gather``, ``block_t``,
+  ``capacities``, ``launch_overhead_trees``, ``query_exit``). It doubles
+  as the jit-step LRU cache key: equal configs (same stage structure,
+  same callables by identity) reuse the same compiled step.
+
+Hashing contract: every stage dataclass is frozen and hashes structurally
+over its fields; callable fields (strategies, scorers, policies) hash by
+identity, so reusing the same callable object across calls is what keeps
+the step cache hot — exactly the discipline the kwargs API already
+required for ``strategies``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import typing
+from collections.abc import Callable, Sequence
+
+import jax
+
+from repro.core.strategies import QueryExitConfig
+from repro.models.dense_scorer import DENSE_COST_TREES
+
+#: Exit-policy signature shared by every stage: ``(partial_scores [Q, D],
+#: alive [Q, D], **strategy_kwargs) -> continue mask [Q, D]``. Policies
+#: must be pure, jittable, and mask-invariant (read ``partial`` only where
+#: ``alive`` is set).
+Strategy = Callable[..., jax.Array]
+
+#: Dense scorer signature: ``[B, F] float32 -> [B]`` scores, pure and
+#: jittable (parameters are closed over and traced as constants).
+DenseScorer = Callable[[jax.Array], jax.Array]
+
+MODES = ("fused", "staged", "auto")
+
+
+@typing.runtime_checkable
+class CascadeStage(typing.Protocol):
+    """One stage of the progressive cascade: scorer + exit policy + capacity.
+
+    A stage scores the documents it is given, applies its exit policy to
+    decide which survive, and bounds the compacted survivor block handed
+    to the next stage with ``capacity`` (``None`` defers to
+    :class:`EngineConfig` / the engine's bucket default). ``stage_cost_trees``
+    is the per-document accounting charge of running the stage's *policy
+    or scorer* in the paper's currency (doc·tree traversals) — LEAR's
+    10-tree classifier forest for a :class:`TreeStage`, the MXU-discounted
+    matmul FLOPs for a :class:`DenseStage`.
+    """
+
+    capacity: int | None
+
+    @property
+    def stage_cost_trees(self) -> float:
+        """Per-document accounting charge, in tree-traversal equivalents."""
+        ...
+
+
+@dataclasses.dataclass(frozen=True)
+class TreeStage:
+    """A sentinel-segmented tree-prefix stage (today's cascade stage).
+
+    ``sentinel`` is the tree index the stage scores up to; ``strategy``
+    (``None`` → the ranker's default strategy) decides which documents
+    continue; ``classifier_trees`` is the per-document accounting cost of
+    that decision (``None`` → the ranker's default). ``capacity`` bounds
+    this stage's compacted survivor block (``None`` → the config-level
+    ``capacities`` entry, else the engine's bucket default).
+    """
+
+    sentinel: int
+    strategy: Strategy | None = None
+    capacity: int | None = None
+    classifier_trees: float | None = None
+
+    def __post_init__(self) -> None:
+        assert self.sentinel > 0, self.sentinel
+        assert self.capacity is None or self.capacity > 0, self.capacity
+
+    @property
+    def stage_cost_trees(self) -> float:
+        return float(self.classifier_trees or 0.0)
+
+
+@dataclasses.dataclass(frozen=True)
+class DenseStage:
+    """A dense (non-tree) scorer stage — stage 0 of the hybrid cascade.
+
+    ``scorer`` maps the flat ``[B, F]`` feature block to ``[B]`` scores in
+    one shot (one MXU matmul for the distilled MLP of
+    :mod:`repro.models.dense_scorer`); ``policy`` is the stage's exit
+    policy over the resulting ``[Q, D]`` score grid (e.g.
+    :func:`repro.core.strategies.dense_keep_fraction`). Unlike tree
+    strategies, the policy is called as ``policy(scores, mask)`` with NO
+    engine strategy kwargs — close knobs over it
+    (``functools.partial(dense_keep_fraction, keep_frac=0.3)``) and keep
+    ONE closure per configuration so the step cache stays hot. Documents
+    the policy exits keep the dense score as their final score — the
+    distilled model stands in for the ensemble on the easy majority.
+
+    ``cost_trees`` prices one dense evaluation in doc·tree equivalents
+    for the accounting and the mode-pick cost models (see
+    ``REPRO_DENSE_COST_TREES`` in :mod:`repro.models.dense_scorer`: the
+    matmul runs on the MXU, so it is charged far below its raw FLOP
+    parity with the VPU tree kernel). ``capacity`` bounds the compacted
+    survivor block the tree stages run on — in the hybrid engine it is a
+    REAL kernel block bound in both execution modes.
+    """
+
+    scorer: DenseScorer
+    policy: Strategy
+    capacity: int | None = None
+    cost_trees: float = float(DENSE_COST_TREES)
+
+    def __post_init__(self) -> None:
+        assert self.capacity is None or self.capacity > 0, self.capacity
+        assert self.cost_trees >= 0.0, self.cost_trees
+
+    @property
+    def stage_cost_trees(self) -> float:
+        return float(self.cost_trees)
+
+
+def _as_capacities(
+    capacities: Sequence[int] | int | None,
+) -> tuple[int, ...] | int | None:
+    if capacities is None or isinstance(capacities, int):
+        return capacities
+    return tuple(int(c) for c in capacities)
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    """Frozen, hashable configuration of one progressive-engine step.
+
+    Collapses ``rank_progressive``'s former keyword sprawl into one value
+    that (a) fully describes the computation and (b) doubles as the
+    jit-step LRU cache key. ``stages`` is the ordered stage list — at
+    most one :class:`DenseStage`, and only at position 0; every other
+    entry a :class:`TreeStage` with strictly increasing sentinels.
+
+    ``capacities`` (optional) is the config-level survivor-capacity
+    override: an int broadcasts to every stage, a sequence must have one
+    entry per stage (dense stage included). A stage's own ``capacity``
+    field wins over the config entry; ``None`` everywhere derives the
+    bound from :func:`repro.core.cascade.bucket_capacity`. The remaining
+    fields are the engine knobs with their historical defaults.
+
+    Traced per-call operands (``stage_ema``, ``have_ema``,
+    ``query_exit_rate``, strategy kwargs) deliberately stay OUT of the
+    config: they vary per batch without re-tracing.
+    """
+
+    stages: tuple[CascadeStage, ...]
+    mode: str = "fused"
+    leaf_gather: str = "auto"
+    block_t: int = 16
+    capacities: tuple[int, ...] | int | None = None
+    launch_overhead_trees: float = 0.0
+    query_exit: QueryExitConfig | None = None
+
+    def __post_init__(self) -> None:
+        object.__setattr__(self, "stages", tuple(self.stages))
+        object.__setattr__(
+            self, "capacities", _as_capacities(self.capacities)
+        )
+        object.__setattr__(
+            self, "launch_overhead_trees", float(self.launch_overhead_trees)
+        )
+        assert self.mode in MODES, self.mode
+        assert len(self.stages) >= 1, "EngineConfig needs at least one stage"
+        for i, st in enumerate(self.stages):
+            if isinstance(st, DenseStage):
+                assert i == 0, "DenseStage is only supported as stage 0"
+            else:
+                assert isinstance(st, TreeStage), (i, st)
+        sents = self.sentinels
+        assert len(sents) >= 1, "EngineConfig needs at least one TreeStage"
+        assert list(sents) == sorted(set(sents)), sents
+        if isinstance(self.capacities, tuple):
+            assert len(self.capacities) == len(self.stages), (
+                "capacities must have one entry per stage",
+                self.capacities, len(self.stages),
+            )
+        assert self.query_exit is None or isinstance(
+            self.query_exit, QueryExitConfig
+        )
+
+    # -- structure accessors -------------------------------------------------
+
+    @property
+    def dense(self) -> DenseStage | None:
+        """The dense stage-0 gate, or ``None`` for an all-trees cascade."""
+        first = self.stages[0]
+        return first if isinstance(first, DenseStage) else None
+
+    @property
+    def tree_stages(self) -> tuple[TreeStage, ...]:
+        return tuple(
+            st for st in self.stages if isinstance(st, TreeStage)
+        )
+
+    @property
+    def sentinels(self) -> tuple[int, ...]:
+        return tuple(st.sentinel for st in self.tree_stages)
+
+    @property
+    def n_stages(self) -> int:
+        return len(self.stages)
+
+    # -- constructors --------------------------------------------------------
+
+    @classmethod
+    def trees(
+        cls,
+        sentinels: Sequence[int],
+        strategies: Sequence[Strategy | None] | Strategy | None = None,
+        *,
+        classifier_trees: Sequence[float] | float | None = None,
+        capacities: Sequence[int] | int | None = None,
+        mode: str = "fused",
+        leaf_gather: str = "auto",
+        block_t: int = 16,
+        launch_overhead_trees: float = 0.0,
+        query_exit: QueryExitConfig | None = None,
+    ) -> EngineConfig:
+        """All-trees cascade from parallel sequences (the migration path
+        from the deprecated kwargs API: same arguments, one config out)."""
+        sents = tuple(int(s) for s in sentinels)
+        S = len(sents)
+        if strategies is None or callable(strategies):
+            strategies = (strategies,) * S
+        if classifier_trees is None or isinstance(
+            classifier_trees, (int, float)
+        ):
+            classifier_trees = (classifier_trees,) * S
+        assert len(strategies) == S, (len(strategies), S)
+        assert len(classifier_trees) == S, (len(classifier_trees), S)
+        stages = tuple(
+            TreeStage(
+                sentinel=s,
+                strategy=strategies[k],
+                classifier_trees=(
+                    None if classifier_trees[k] is None
+                    else float(classifier_trees[k])
+                ),
+            )
+            for k, s in enumerate(sents)
+        )
+        return cls(
+            stages=stages,
+            mode=mode,
+            leaf_gather=leaf_gather,
+            block_t=block_t,
+            capacities=_as_capacities(capacities),
+            launch_overhead_trees=launch_overhead_trees,
+            query_exit=query_exit,
+        )
+
+    @classmethod
+    def hybrid(
+        cls,
+        dense: DenseStage,
+        sentinels: Sequence[int],
+        strategies: Sequence[Strategy | None] | Strategy | None = None,
+        *,
+        classifier_trees: Sequence[float] | float | None = None,
+        capacities: Sequence[int] | int | None = None,
+        mode: str = "fused",
+        leaf_gather: str = "auto",
+        block_t: int = 16,
+        launch_overhead_trees: float = 0.0,
+        query_exit: QueryExitConfig | None = None,
+    ) -> EngineConfig:
+        """Dense stage 0 + tree stages from parallel sequences.
+
+        ``capacities`` here covers the TREE stages (matching
+        :meth:`trees`); the dense survivor bound rides on
+        ``dense.capacity`` (``None`` → the engine's bucket default).
+        """
+        base = cls.trees(
+            sentinels, strategies,
+            classifier_trees=classifier_trees,
+            mode=mode, leaf_gather=leaf_gather, block_t=block_t,
+            launch_overhead_trees=launch_overhead_trees,
+            query_exit=query_exit,
+        )
+        caps = _as_capacities(capacities)
+        if isinstance(caps, tuple):
+            dense_cap = dense.capacity if dense.capacity is not None else caps[-1]
+            caps = (dense_cap, *caps)
+        return dataclasses.replace(
+            base, stages=(dense, *base.stages), capacities=caps
+        )

@@ -106,6 +106,31 @@ def ert_continue(partial: jax.Array, mask: jax.Array, k_s: int) -> jax.Array:
     return mask & (ranks < k_s)
 
 
+def dense_keep_fraction(
+    partial: jax.Array, mask: jax.Array, keep_frac: float = 0.25
+) -> jax.Array:
+    """Dense-gate policy: keep the top ``⌈keep_frac · n_alive⌉`` per query.
+
+    The natural operating point for a distilled stage-0 scorer: its scores
+    are only a *proxy* for the ensemble, so the gate keeps a fixed
+    fraction of each query's candidates (rank-based, like
+    :func:`ert_continue`) rather than thresholding raw proxy scores —
+    the survivor count, and therefore the dense stage's capacity
+    planning, stays predictable regardless of the proxy's calibration.
+    Scaling with ``n_alive`` (not the padded ``D``) keeps short queries
+    from flooding the survivor block with padding. ``keep_frac`` is
+    clamped to ``[0, 1]``; a query with any alive document always keeps
+    at least its top-1 (``ceil`` of a positive fraction ≥ 1), so the
+    dense stage can never silently zero out a live query.
+    Mask-invariant: ranks are computed from masked scores only.
+    """
+    frac = min(max(float(keep_frac), 0.0), 1.0)
+    ranks = rank_from_scores(partial, mask)
+    n_alive = mask.sum(axis=-1, keepdims=True)
+    keep = jnp.ceil(frac * n_alive).astype(jnp.int32)
+    return mask & (ranks < keep)
+
+
 def ept_continue(partial: jax.Array, mask: jax.Array, k_s: int, p: float) -> jax.Array:
     """EE Using Proximity Thresholds: keep docs with score ≥ σ_{k_s} − p.
 

@@ -91,7 +91,7 @@ def trees_traversed_progressive(
     stage_masks: Sequence[jax.Array],
     sentinels: Sequence[int],
     n_trees: int,
-    classifier_trees: int | Sequence[int] = 0,
+    classifier_trees: float | Sequence[float] = 0,
 ) -> jnp.ndarray:
     """Multi-sentinel generalization of :func:`trees_traversed`.
 
@@ -99,12 +99,19 @@ def trees_traversed_progressive(
     decision at ``sentinels[k]``; ``mask`` is the request mask. A document
     exiting at stage ``k`` costs ``sentinels[k-1]`` trees plus one
     classifier evaluation per stage it reached; survivors of the last stage
-    cost the full ``n_trees``. ``classifier_trees`` is an int (same cost at
-    every stage) or a per-stage sequence for heterogeneous classifiers.
+    cost the full ``n_trees``. ``classifier_trees`` is a scalar (same cost
+    at every stage) or a per-stage sequence for heterogeneous classifiers;
+    fractional costs express non-tree stage work in tree equivalents.
     With one sentinel this reduces exactly to :func:`trees_traversed`.
+
+    Hybrid cascades account through the same formula with the dense gate
+    spliced in as a zero-sentinel stage: ``sentinels = (0, *tree_sents)``
+    and ``classifier_trees = (dense_cost_trees, *tree_costs)`` charges
+    every candidate one dense evaluation and no trees, then charges the
+    first tree sentinel only on the dense survivors.
     """
     S = len(sentinels)
-    if isinstance(classifier_trees, int):
+    if isinstance(classifier_trees, (int, float)):
         classifier_trees = [classifier_trees] * S
     assert len(classifier_trees) == S
     alive = mask
@@ -129,9 +136,22 @@ def progressive_cost_model(
     stage_capacities: Sequence[int] | None = None,
     block_b: int = 1,
     query_exit_rate: float = 0.0,
+    dense_cost_trees: float = 0.0,
+    dense_stage: bool = False,
 ) -> float:
     """Estimated device cost of one progressive batch, in tree-traversal
     equivalents, for picking fused vs per-stage-tail execution.
+
+    ``dense_stage=True`` prices a hybrid cascade (dense gate at stage 0):
+    ``stage_survivors`` and ``stage_capacities`` then carry one leading
+    entry for the dense stage (``len == len(sentinels) + 1``, capacities
+    required), every candidate is charged ``dense_cost_trees``, and BOTH
+    modes' tree-head terms are priced at the dense survivor capacity —
+    the tree kernels score the full dense-compacted block regardless of
+    how many survivors occupy it, and the dense matmul itself adds no
+    launch, so the launch terms are unchanged. The dense term is
+    symmetric across modes (it can never flip the pick); it keeps the
+    absolute costs honest.
 
     ``query_exit_rate`` is the estimated probability that query-level
     exit empties the batch before the tail (the service's EMA of the
@@ -174,23 +194,31 @@ def progressive_cost_model(
     """
     S = len(sentinels)
     assert mode in ("fused", "staged"), mode
-    assert len(stage_survivors) == S
+    n_stages = S + 1 if dense_stage else S
+    assert len(stage_survivors) == n_stages
     n_docs = max(float(n_docs), 0.0)   # empty batch: costs reduce to the
     #   per-launch overhead — finite, and identical tail for both modes
     surv = _sane_survivors(stage_survivors, n_docs)
+    caps = list(stage_capacities) if stage_capacities is not None else None
+    dense_term = 0.0
+    if dense_stage:
+        assert caps is not None and len(caps) == n_stages, caps
+        dense_term = n_docs * float(dense_cost_trees)
+        head_docs = float(caps[0])   # the tree kernels score the whole
+        #   dense-compacted block, not just its occupied rows
+        caps, surv = caps[1:], surv[1:]
+    else:
+        head_docs = n_docs
     has_tail = sentinels[-1] < n_trees
     qe = min(max(float(query_exit_rate), 0.0), 1.0)
     tail_launch = (1.0 - qe) if has_tail else 0.0
     tail = surv[-1] * (n_trees - sentinels[-1])
     if mode == "fused":
-        head = n_docs * sentinels[-1]
+        head = head_docs * sentinels[-1]
         launches = 1 + tail_launch
     else:
-        caps = (
-            list(stage_capacities)
-            if stage_capacities is not None
-            else [n_docs] * S
-        )
+        if caps is None:
+            caps = [n_docs] * S
         assert len(caps) == S
         if block_b > 1:
             surv = [
@@ -198,11 +226,11 @@ def progressive_cost_model(
                 for c, s in zip(caps, surv)
             ]
         surv = [min(float(c), float(s)) for c, s in zip(caps, surv)]
-        head = n_docs * sentinels[0] + sum(
+        head = head_docs * sentinels[0] + sum(
             surv[k] * (sentinels[k + 1] - sentinels[k]) for k in range(S - 1)
         )
         launches = S + tail_launch
-    return float(head + tail + launch_overhead_trees * launches)
+    return float(dense_term + head + tail + launch_overhead_trees * launches)
 
 
 def progressive_cost_model_device(
@@ -214,9 +242,16 @@ def progressive_cost_model_device(
     stage_capacities: Sequence[int] | None = None,
     block_b: int = 1,
     query_exit_rate: jax.Array | float = 0.0,
+    dense_cost_trees: float = 0.0,
+    dense_stage: bool = False,
 ) -> tuple[jax.Array, jax.Array]:
     """Traced mirror of :func:`progressive_cost_model` for the IN-PROGRAM
     mode pick: returns ``(fused_cost, staged_cost)`` as f32 device scalars.
+
+    ``dense_stage`` follows the host model's hybrid convention:
+    ``stage_survivors``/``stage_capacities`` carry a leading dense entry,
+    the tree heads are priced at the dense capacity, and the (symmetric)
+    dense term is added to both returned costs.
 
     ``query_exit_rate`` may be a TRACED scalar (the service ships its
     tail-skip EMA next to ``stage_ema`` at submit time) — like the host
@@ -236,7 +271,10 @@ def progressive_cost_model_device(
     divergence points).
     """
     S = len(sentinels)
-    assert stage_survivors.shape == (S,), (stage_survivors.shape, S)
+    n_stages = S + 1 if dense_stage else S
+    assert stage_survivors.shape == (n_stages,), (
+        stage_survivors.shape, n_stages
+    )
     n_docs = max(int(n_docs), 0)
     # Same sanitization as the host model (_sane_survivors): NaN → 0,
     # ±inf/out-of-range → clamped, so the traced costs are always finite
@@ -246,19 +284,27 @@ def progressive_cost_model_device(
         nan=0.0, posinf=float(n_docs), neginf=0.0,
     )
     surv = jnp.clip(surv, 0.0, float(n_docs))
+    caps = list(stage_capacities) if stage_capacities is not None else None
+    dense_term = 0.0
+    if dense_stage:
+        assert caps is not None and len(caps) == n_stages, caps
+        dense_term = n_docs * dense_cost_trees
+        head_docs = 1.0 * caps[0]   # static config int → python float
+        caps, surv = caps[1:], surv[1:]
+    else:
+        head_docs = 1.0 * n_docs
     has_tail = sentinels[-1] < n_trees
     qe = jnp.clip(jnp.asarray(query_exit_rate, jnp.float32), 0.0, 1.0)
     tail_launch = (1.0 - qe) if has_tail else jnp.float32(0.0)
     tail = surv[-1] * float(n_trees - sentinels[-1])
     fused = (
-        float(n_docs * sentinels[-1])
+        dense_term
+        + head_docs * float(sentinels[-1])
         + tail
         + launch_overhead_trees * (1.0 + tail_launch)
     )
-    caps = (
-        list(stage_capacities) if stage_capacities is not None
-        else [n_docs] * S
-    )
+    if caps is None:
+        caps = [n_docs] * S
     assert len(caps) == S
     s_surv = surv
     if block_b > 1:
@@ -271,7 +317,8 @@ def progressive_cost_model_device(
         [sentinels[k + 1] - sentinels[k] for k in range(S - 1)], jnp.float32
     )
     staged = (
-        float(n_docs * sentinels[0])
+        dense_term
+        + head_docs * float(sentinels[0])
         + (s_surv[: S - 1] * deltas).sum()
         + tail
         + launch_overhead_trees * (float(S) + tail_launch)
@@ -287,7 +334,7 @@ def speedup_progressive(
     stage_masks: Sequence[jax.Array],
     sentinels: Sequence[int],
     n_trees: int,
-    classifier_trees: int | Sequence[int] = 0,
+    classifier_trees: float | Sequence[float] = 0,
 ) -> jnp.ndarray:
     """Lazy device scalar (no host sync) — ``float()`` it in a stats path."""
     full = mask.sum() * n_trees

@@ -4,4 +4,22 @@ LM transformers (scan-over-layers, GQA, optional qk-norm/QKV-bias/MoE):
 qwen2.5-14b, minitron-4b, qwen3-4b, deepseek-moe-16b, llama4-maverick.
 GNN: nequip (E(3)-equivariant tensor products). RecSys: bert4rec, din,
 deepfm, dlrm-rm2 (EmbeddingBag built from take + segment_sum).
+
+Cascade-facing: :mod:`repro.models.dense_scorer` — the distilled dense
+stage-0 scorer of the hybrid cascade (DLRM ``dot_interact`` idiom over
+projected LTR features; trained by :mod:`repro.train.distill`).
 """
+
+from repro.models.dense_scorer import (
+    DENSE_COST_TREES,
+    dense_score,
+    init_dense_scorer,
+    make_dense_scorer,
+)
+
+__all__ = [
+    "DENSE_COST_TREES",
+    "dense_score",
+    "init_dense_scorer",
+    "make_dense_scorer",
+]

@@ -1,0 +1,128 @@
+"""Distilled dense stage-0 scorer for the hybrid cascade.
+
+A deliberately tiny model (KB-scale parameters) whose one job is to stand
+in for the GBDT ensemble on the *easy majority* of documents: the hybrid
+engine (:class:`repro.core.stage.DenseStage`) scores the entire flat
+``[Q·D, F]`` candidate block through it in one shot, the gate policy
+(:func:`repro.core.strategies.dense_keep_fraction`) keeps the contested
+head, and only those survivors ever touch a tree. Architecture borrows
+the DLRM ``dot_interact`` idiom (:mod:`repro.models.recsys`): a single
+projection matmul lifts the raw LTR feature vector into ``n_vec`` small
+embedding vectors, the pairwise upper-triangle dots capture second-order
+feature interactions at negligible FLOP cost, and a two-layer MLP head
+maps ``[projection ‖ interactions]`` to one score. Everything is plain
+XLA — the hybrid engine's launch-accounting contract depends on the dense
+stage dispatching NO Pallas kernel.
+
+Sizing knobs are env-overridable through the one sanctioned chokepoint
+(:func:`repro.kernels.ops.env_int`) and read at import, matching the rest
+of the kernel-facing constants (see ``tests/test_env_overrides.py``):
+
+- ``REPRO_DENSE_N_VEC`` (default 4): interaction vectors per document.
+- ``REPRO_DENSE_VEC_DIM`` (default 16): dimension of each vector.
+- ``REPRO_DENSE_HIDDEN`` (default 32): MLP head width.
+- ``REPRO_DENSE_COST_TREES`` (default 4): accounting price of ONE dense
+  evaluation in doc·tree-traversal equivalents. The raw FLOP count is
+  far higher than 4 trees' worth of node visits, but the matmul runs on
+  the MXU while the tree kernel is VPU gather/compare bound — pricing at
+  FLOP parity would make the cost models reject exactly the trade the
+  hybrid exists to exploit. Calibrate against wall clock the same way
+  ``launch_overhead_trees`` is.
+
+Params are a flat dict pytree (jittable, optimizer-transformable by
+:mod:`repro.train.optimizer`); :func:`make_dense_scorer` closes a trained
+pytree over :func:`dense_score` to produce the stable-identity
+``[B, F] → [B]`` callable a :class:`~repro.core.stage.DenseStage` wants —
+reuse ONE closure per trained model or the engine's step cache re-traces.
+"""
+
+from __future__ import annotations
+
+from collections.abc import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.ops import env_int
+from repro.models.recsys import _mlp_init
+
+DENSE_N_VEC = env_int("REPRO_DENSE_N_VEC", 4, minimum=2)
+DENSE_VEC_DIM = env_int("REPRO_DENSE_VEC_DIM", 16)
+DENSE_HIDDEN = env_int("REPRO_DENSE_HIDDEN", 32)
+DENSE_COST_TREES = env_int("REPRO_DENSE_COST_TREES", 4)
+
+#: Trained parameter pytree of the dense scorer (flat dict of arrays).
+DenseParams = dict
+
+
+def dot_interact(vecs: jax.Array) -> jax.Array:
+    """``[B, n, d]`` → upper-triangle pairwise dots ``[B, n(n−1)/2]``.
+
+    The DLRM interaction (see ``repro.models.recsys._dot_interaction``):
+    one einsum builds the full Gram matrix, the static ``triu_indices``
+    gather keeps each unordered pair once. ``n`` is static, so the
+    gather indices are trace-time constants.
+    """
+    n = vecs.shape[1]
+    z = jnp.einsum("bnd,bmd->bnm", vecs, vecs)
+    iu, ju = np.triu_indices(n, k=1)
+    return z[:, iu, ju]
+
+
+def init_dense_scorer(
+    key: jax.Array,
+    n_features: int,
+    n_vec: int = DENSE_N_VEC,
+    vec_dim: int = DENSE_VEC_DIM,
+    hidden: int = DENSE_HIDDEN,
+) -> DenseParams:
+    """Initialize the scorer pytree for ``n_features``-dim LTR vectors.
+
+    The projection is stored ``[F, n_vec, vec_dim]`` so :func:`dense_score`
+    can recover the vector split from the param shapes alone — the pytree
+    stays all-array (no static ints smuggled through optimizer maps).
+    """
+    k_proj, k_head = jax.random.split(key)
+    n_pairs = n_vec * (n_vec - 1) // 2
+    head_in = n_vec * vec_dim + n_pairs
+    proj = (
+        jax.random.normal(k_proj, (n_features, n_vec, vec_dim), jnp.float32)
+        * n_features**-0.5
+    )
+    # The projection bias exists so affine input transforms (the feature
+    # whitening the distiller trains under) can be folded INTO the params:
+    # the deployed scorer then consumes raw features — see
+    # repro.train.distill.
+    pb = jnp.zeros((n_vec, vec_dim), jnp.float32)
+    (w1, b1), (w2, b2) = _mlp_init(k_head, (head_in, hidden, 1))
+    return {"proj": proj, "pb": pb, "w1": w1, "b1": b1, "w2": w2, "b2": b2}
+
+
+def dense_score(params: DenseParams, x: jax.Array) -> jax.Array:
+    """Score a flat feature block: ``[B, F]`` → ``[B]`` float32.
+
+    One MXU contraction lifts every document into its interaction
+    vectors; the head MLP sees the flattened vectors plus their pairwise
+    dots. Pure function of ``(params, x)`` — safe to trace into the
+    progressive step (the engine closes params over it as constants).
+    """
+    vecs = jnp.einsum("bf,fnd->bnd", x, params["proj"]) + params["pb"]
+    flat = vecs.reshape(vecs.shape[0], -1)
+    feats = jnp.concatenate([flat, dot_interact(vecs)], axis=-1)
+    h = jax.nn.relu(feats @ params["w1"] + params["b1"])
+    return (h @ params["w2"] + params["b2"])[..., 0]
+
+
+def make_dense_scorer(params: DenseParams) -> Callable[[jax.Array], jax.Array]:
+    """Close ``params`` over :func:`dense_score` → the ``[B, F] → [B]``
+    scorer callable a :class:`repro.core.stage.DenseStage` takes.
+
+    The returned closure's *identity* is part of the engine's step-cache
+    key (callables hash by ``id``): build it once per trained model and
+    reuse it across batches, exactly like strategy callables.
+    """
+    def scorer(x: jax.Array) -> jax.Array:
+        return dense_score(params, x)
+
+    return scorer

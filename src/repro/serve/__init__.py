@@ -1,8 +1,12 @@
 from repro.serve.batching import BucketPolicy, ContinuousBatcher
 from repro.serve.lm_serve import generate
 from repro.serve.placement import ServePlacement
-from repro.serve.ranking_service import RankingService, ServiceStats
-from repro.serve.tier import ServingTier
+from repro.serve.ranking_service import (
+    RankingService,
+    ServiceConfig,
+    ServiceStats,
+)
+from repro.serve.tier import ServingTier, TierConfig
 from repro.serve.warmup import enable_persistent_cache, warmup_service
 
 __all__ = [
@@ -10,8 +14,10 @@ __all__ = [
     "ContinuousBatcher",
     "RankingService",
     "ServePlacement",
+    "ServiceConfig",
     "ServiceStats",
     "ServingTier",
+    "TierConfig",
     "enable_persistent_cache",
     "generate",
     "warmup_service",

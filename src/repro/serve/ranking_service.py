@@ -48,6 +48,7 @@ from __future__ import annotations
 
 import dataclasses
 import typing
+import warnings
 from collections.abc import Callable, Sequence
 
 import jax
@@ -60,6 +61,7 @@ if typing.TYPE_CHECKING:  # annotation-only: avoids a serve-package cycle
 
 from repro.core.cascade import CascadeRanker, bucket_capacity
 from repro.core.lear import LearClassifier, augment_features
+from repro.core.stage import DenseStage, EngineConfig, TreeStage
 from repro.core.strategies import QueryExitConfig
 from repro.forest.ensemble import TreeEnsemble
 from repro.kernels.ops import ENGINE_BLOCK_B
@@ -68,6 +70,61 @@ from repro.metrics.speedup import (
     trees_traversed_progressive,
 )
 from repro.serve.calibration import calibrate_launch_overhead_trees
+
+_DEPRECATED_SERVICE_MSG = (
+    "repro.serve.ranking_service.RankingService: keyword configuration "
+    "(threshold=…, execution_mode=…, …) is deprecated; pass a "
+    "ServiceConfig as the third argument. The shim builds the equivalent "
+    "config and will be removed in a future release."
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class ServiceConfig:
+    """Frozen bundle of every :class:`RankingService` tuning knob.
+
+    The serving mirror of :class:`repro.core.stage.EngineConfig`: one
+    hashable value instead of nine constructor keywords. The model inputs
+    (ensemble, classifiers) stay direct constructor arguments — they are
+    the *data* being served, not its configuration.
+
+    ``dense_stage`` (a :class:`repro.core.stage.DenseStage`) turns the
+    service into the HYBRID cascade: the dense gate becomes stage 0 of
+    every compiled step, survivor adaptation (peaks/EMA/capacities) grows
+    a leading dense entry, and accounting charges ``dense.cost_trees``
+    per candidate instead of tree traversals for dense-exited documents.
+    Set ``dense_stage.capacity`` to pin the dense survivor block;
+    ``None`` lets the per-bucket ratchet manage it like any tree stage.
+    """
+
+    threshold: float = 0.5
+    capacity_headroom: float = 1.25
+    top_k: int = 10
+    use_kernel_classifier: bool = True
+    execution_mode: str = "auto"
+    launch_overhead_trees: float | str = "auto"
+    survivor_ema: float = 0.3
+    query_exit: QueryExitConfig | None = None
+    dense_stage: DenseStage | None = None
+
+    def __post_init__(self) -> None:
+        assert self.execution_mode in ("auto", "fused", "staged"), (
+            self.execution_mode
+        )
+        # The capacity ratchet needs strictly-positive headroom: in staged
+        # mode observed survivor peaks are clipped AT the current bucket (a
+        # power of two), so only peak × headroom > bucket can round up to
+        # the next bucket — with headroom <= 1 capacity would never grow
+        # and an undersized stage would silently overflow forever.
+        assert self.capacity_headroom > 1.0, self.capacity_headroom
+        assert self.top_k >= 1, self.top_k
+        assert 0.0 < self.survivor_ema <= 1.0, self.survivor_ema
+        assert self.query_exit is None or isinstance(
+            self.query_exit, QueryExitConfig
+        )
+        assert self.dense_stage is None or isinstance(
+            self.dense_stage, DenseStage
+        )
 
 
 @dataclasses.dataclass
@@ -129,43 +186,69 @@ class RankingService:
         self,
         ensemble: TreeEnsemble,
         classifier: LearClassifier,
-        threshold: float = 0.5,
-        capacity_headroom: float = 1.25,
-        top_k: int = 10,
+        config: ServiceConfig | None = None,
         extra_classifiers: Sequence[LearClassifier] = (),
-        use_kernel_classifier: bool = True,
-        execution_mode: str = "auto",
-        launch_overhead_trees: float | str = "auto",
-        survivor_ema: float = 0.3,
+        *,
+        threshold: float | None = None,
+        capacity_headroom: float | None = None,
+        top_k: int | None = None,
+        use_kernel_classifier: bool | None = None,
+        execution_mode: str | None = None,
+        launch_overhead_trees: float | str | None = None,
+        survivor_ema: float | None = None,
         query_exit: QueryExitConfig | None = None,
     ) -> None:
-        assert execution_mode in ("auto", "fused", "staged"), execution_mode
-        # The capacity ratchet needs strictly-positive headroom: in staged
-        # mode observed survivor peaks are clipped AT the current bucket (a
-        # power of two), so only peak × headroom > bucket can round up to
-        # the next bucket — with headroom <= 1 capacity would never grow
-        # and an undersized stage would silently overflow forever.
-        assert capacity_headroom > 1.0, capacity_headroom
+        if config is not None and not isinstance(config, ServiceConfig):
+            # Legacy POSITIONAL call: RankingService(ens, clf, 0.3, …)
+            assert threshold is None, (config, threshold)
+            config, threshold = None, float(config)
+        legacy = {
+            name: value
+            for name, value in (
+                ("threshold", threshold),
+                ("capacity_headroom", capacity_headroom),
+                ("top_k", top_k),
+                ("use_kernel_classifier", use_kernel_classifier),
+                ("execution_mode", execution_mode),
+                ("launch_overhead_trees", launch_overhead_trees),
+                ("survivor_ema", survivor_ema),
+                ("query_exit", query_exit),
+            )
+            if value is not None
+        }
+        if config is None:
+            if legacy:
+                warnings.warn(
+                    _DEPRECATED_SERVICE_MSG, DeprecationWarning, stacklevel=2
+                )
+            config = ServiceConfig(**legacy)
+        elif legacy:
+            raise TypeError(
+                "RankingService: pass configuration via ServiceConfig OR "
+                f"the deprecated keywords, not both (got {sorted(legacy)})"
+            )
+        self.config = config
         self.ensemble = ensemble
         self.classifier = classifier
-        self.threshold = threshold
-        self.headroom = capacity_headroom
-        self.top_k = top_k
-        self.use_kernel_classifier = use_kernel_classifier
-        self.execution_mode = execution_mode
+        self.threshold = config.threshold
+        self.headroom = config.capacity_headroom
+        self.top_k = config.top_k
+        self.use_kernel_classifier = config.use_kernel_classifier
+        self.execution_mode = config.execution_mode
         # Price of one extra kernel launch + gather/scatter HBM round trip,
         # in doc·tree equivalents — the cost model's only tunable. "auto"
         # measures it at startup (short timing probe, cached per process)
         # instead of trusting a machine-independent constant.
-        if launch_overhead_trees == "auto":
-            launch_overhead_trees = calibrate_launch_overhead_trees()
-        self.launch_overhead_trees = float(launch_overhead_trees)
-        self.survivor_ema = survivor_ema
+        loh = config.launch_overhead_trees
+        if loh == "auto":
+            loh = calibrate_launch_overhead_trees()
+        self.launch_overhead_trees = float(loh)
+        self.survivor_ema = config.survivor_ema
         # Query-level exit config (None = document-level LEAR only). Part
         # of the compiled step's static key; the per-bucket tail-skip EMA
         # it produces feeds the auto-mode cost model as a traced operand.
-        assert query_exit is None or isinstance(query_exit, QueryExitConfig)
-        self.query_exit = query_exit
+        self.query_exit = config.query_exit
+        self.dense_stage = config.dense_stage
         self.stats = ServiceStats()
         # Adaptive state is PER padded batch shape (capacity bucket): each
         # (Q, D) the service has seen owns its survivor peaks and EMA.
@@ -182,6 +265,26 @@ class RankingService:
             "stage sentinels must be distinct", self.sentinels
         )
         self.stage_strategies = [self._make_strategy(c) for c in stages]
+
+        # Stage tuples are cached on the strategy identities (see
+        # _engine_stage_tuple); the accounting view is fixed at
+        # construction. For a hybrid service the dense gate is a
+        # zero-sentinel stage charging cost_trees per candidate.
+        self._stages_cache: tuple[tuple, tuple] | None = None
+        if self.dense_stage is not None:
+            self._acct_sentinels = (0, *self.sentinels)
+            self._acct_classifier_trees = (
+                float(self.dense_stage.cost_trees),
+                *(float(c.n_trees) for c in stages),
+            )
+        else:
+            self._acct_sentinels = self.sentinels
+            self._acct_classifier_trees = tuple(
+                float(c.n_trees) for c in stages
+            )
+        self.n_stages = len(self.sentinels) + (
+            1 if self.dense_stage is not None else 0
+        )
 
         self.cascade = CascadeRanker(
             ensemble=ensemble,
@@ -221,6 +324,32 @@ class RankingService:
     def _stage_ema(self, value: list[float] | None) -> None:
         self._active_state().ema = value
 
+    def _engine_stage_tuple(self) -> tuple:
+        """The EngineConfig stage list, rebuilt only when the strategy
+        callables change (tests swap ``stage_strategies`` in place).
+
+        Caching on the strategy identities keeps the per-batch
+        EngineConfigs structurally equal — the TreeStage objects (and the
+        closures inside, which hash by identity) are the SAME objects
+        every batch, so the engine's compiled-step cache stays hot.
+        """
+        strategies = tuple(self.stage_strategies)
+        if self._stages_cache is None or self._stages_cache[0] != strategies:
+            tree_stages = tuple(
+                TreeStage(
+                    sentinel=c.sentinel,
+                    strategy=strat,
+                    classifier_trees=float(c.n_trees),
+                )
+                for c, strat in zip(self.stage_classifiers, strategies)
+            )
+            stages = (
+                (self.dense_stage, *tree_stages)
+                if self.dense_stage is not None else tree_stages
+            )
+            self._stages_cache = (strategies, stages)
+        return self._stages_cache[1]
+
     def _make_strategy(self, clf: LearClassifier) -> Callable[..., jax.Array]:
         # NOTE: the strategy is traced into the cached jitted cascade step,
         # so ``self.threshold`` is baked in at trace time — construct a new
@@ -258,13 +387,22 @@ class RankingService:
         """
         cold = self._cold_start_estimate(n_docs)
         if self._stage_peaks is None:
-            want = [cold] * len(self.sentinels)
+            want = [cold] * self.n_stages
         else:
             want = [
                 max(cold, int(peak * self.headroom))
                 for peak in self._stage_peaks
             ]
-        return [bucket_capacity(w, n_docs) for w in want]
+        caps = [bucket_capacity(w, n_docs) for w in want]
+        if (
+            self.dense_stage is not None
+            and self.dense_stage.capacity is not None
+        ):
+            # A pinned dense capacity overrides the ratchet (the engine's
+            # stage.capacity precedence would anyway); mirroring it here
+            # keeps the host cost model pricing the real block size.
+            caps[0] = min(int(self.dense_stage.capacity), n_docs)
+        return caps
 
     def _pick_mode(
         self, n_docs: int, capacities: Sequence[int] | None = None
@@ -292,6 +430,7 @@ class RankingService:
         if capacities is None:
             capacities = self._pick_capacities(n_docs)
         T = self.ensemble.n_trees
+        dense = self.dense_stage
         cost = {
             m: progressive_cost_model(
                 n_docs, self._stage_ema, self.sentinels, T, m,
@@ -299,6 +438,10 @@ class RankingService:
                 stage_capacities=capacities,
                 block_b=ENGINE_BLOCK_B,
                 query_exit_rate=self._query_exit_rate_estimate(),
+                dense_cost_trees=(
+                    float(dense.cost_trees) if dense is not None else 0.0
+                ),
+                dense_stage=dense is not None,
             )
             for m in ("fused", "staged")
         }
@@ -351,27 +494,25 @@ class RankingService:
             else:
                 # Ship the survivor estimate at submit; the pick happens
                 # inside the compiled step. Cold start (no observed rates
-                # yet): have_ema=False forces the fused branch.
-                S = len(self.sentinels)
-                ema = self._stage_ema or [float(n_docs)] * S
+                # yet): have_ema=False forces the fused branch. The EMA
+                # covers ALL stages (dense entry first for hybrid).
+                ema = self._stage_ema or [float(n_docs)] * self.n_stages
                 extra = dict(
                     stage_ema=jnp.asarray(ema, jnp.float32),
                     have_ema=self._stage_ema is not None,
-                    launch_overhead_trees=self.launch_overhead_trees,
                     query_exit_rate=jnp.asarray(
                         self._query_exit_rate_estimate(), jnp.float32
                     ),
                 )
-        result = self.cascade.rank_progressive(
-            X, mask,
-            sentinels=self.sentinels,
-            capacities=capacities,
-            strategies=self.stage_strategies,
-            classifier_trees=[c.n_trees for c in self.stage_classifiers],
+        engine_config = EngineConfig(
+            stages=self._engine_stage_tuple(),
             mode=mode,
+            capacities=tuple(capacities),
+            launch_overhead_trees=self.launch_overhead_trees,
             query_exit=self.query_exit,
-            features=X,
-            **extra,
+        )
+        result = self.cascade.rank_progressive(
+            X, mask, engine_config, features=X, **extra,
         )
         # Top-k is the response (clamped to the candidate count — a small
         # query block must not crash top_k).
@@ -382,7 +523,6 @@ class RankingService:
         # stats (per-stage survivors, cost metric, overflow, doc count,
         # picked branch) — no other host sync anywhere on this path.
         T = self.ensemble.n_trees
-        clf_trees = [c.n_trees for c in self.stage_classifiers]
         picked_staged = (
             result.picked_staged
             if result.picked_staged is not None
@@ -399,7 +539,8 @@ class RankingService:
             result.scores,
             jnp.stack([m.sum() for m in result.stage_masks]),
             trees_traversed_progressive(
-                mask, result.stage_masks, self.sentinels, T, clf_trees
+                mask, result.stage_masks, self._acct_sentinels, T,
+                list(self._acct_classifier_trees),
             ),
             result.overflow,
             mask.sum(),

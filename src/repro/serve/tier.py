@@ -20,7 +20,9 @@ impossible.
 
 from __future__ import annotations
 
+import dataclasses
 import typing
+import warnings
 from collections.abc import Sequence
 from concurrent.futures import Future
 
@@ -37,27 +39,84 @@ from repro.serve.warmup import (
     warmup_service,
 )
 
+_DEPRECATED_TIER_MSG = (
+    "repro.serve.tier.ServingTier: keyword configuration (doc_counts=…, "
+    "warmup=…, …) is deprecated; pass a TierConfig as the third argument. "
+    "The shim builds the equivalent config and will be removed in a "
+    "future release."
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class TierConfig:
+    """Frozen bundle of the :class:`ServingTier` deployment knobs.
+
+    The tier-level mirror of :class:`repro.serve.ranking_service.ServiceConfig`
+    — what to warm, whether to warm, and where compiled artifacts persist.
+    ``policy`` and ``placement`` stay direct constructor arguments: they
+    are live objects (thread-owning batcher policy, device mesh), not
+    declarative configuration.
+    """
+
+    doc_counts: tuple[int, ...] = (64,)
+    warmup: bool = True
+    persistent_cache: bool = True
+    cache_dir: str | None = None
+
+    def __post_init__(self) -> None:
+        object.__setattr__(
+            self, "doc_counts", tuple(int(d) for d in self.doc_counts)
+        )
+        assert len(self.doc_counts) >= 1, "need at least one doc count"
+
 
 class ServingTier:
     def __init__(
         self,
         service: RankingService,
         n_features: int,
-        doc_counts: Sequence[int] = (64,),
+        config: TierConfig | None = None,
         policy: BucketPolicy | None = None,
         placement: ServePlacement | None = None,
-        warmup: bool = True,
-        persistent_cache: bool = True,
+        *,
+        doc_counts: Sequence[int] | None = None,
+        warmup: bool | None = None,
+        persistent_cache: bool | None = None,
         cache_dir: str | None = None,
     ) -> None:
+        if config is not None and not isinstance(config, TierConfig):
+            # Legacy POSITIONAL call: ServingTier(svc, F, (64, 256), …)
+            assert doc_counts is None, (config, doc_counts)
+            config, doc_counts = None, tuple(config)
+        legacy = {
+            name: value
+            for name, value in (
+                ("doc_counts", doc_counts), ("warmup", warmup),
+                ("persistent_cache", persistent_cache),
+                ("cache_dir", cache_dir),
+            )
+            if value is not None
+        }
+        if config is None:
+            if legacy:
+                warnings.warn(
+                    _DEPRECATED_TIER_MSG, DeprecationWarning, stacklevel=2
+                )
+            config = TierConfig(**legacy)
+        elif legacy:
+            raise TypeError(
+                "ServingTier: pass configuration via TierConfig OR the "
+                f"deprecated keywords, not both (got {sorted(legacy)})"
+            )
+        self.config = config
         self.service = service
         self.n_features = int(n_features)
         self.policy = policy or BucketPolicy()
         self.placement = placement or single_device()
-        self.doc_counts = tuple(doc_counts)
-        self.do_warmup = warmup
-        self.persistent_cache = persistent_cache
-        self.cache_dir = cache_dir
+        self.doc_counts = config.doc_counts
+        self.do_warmup = config.warmup
+        self.persistent_cache = config.persistent_cache
+        self.cache_dir = config.cache_dir
         self.warmup_report: WarmupReport | None = None
         self.batcher = ContinuousBatcher(
             service, self.n_features, self.policy, placement=self.placement

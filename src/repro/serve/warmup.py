@@ -96,23 +96,33 @@ def warmup_service(
     fingerprints are wiped — stats reset, EMAs cleared (real traffic
     starts with the honest cold-start fused default) — but the seeded
     peaks are KEPT: they are the no-overflow guarantee.
+
+    Stage counts come from ``service.n_stages`` (ALL stages, dense gate
+    included): a hybrid service's peaks/EMA carry the leading dense
+    entry, and because the dense matmul is traced into the same jitted
+    step as the tree launches, this one synthetic batch AOT-compiles the
+    dense branch too — no separate dense warmup pass exists or is needed.
     """
-    S = len(service.sentinels)
+    n_stages = service.n_stages
     report = WarmupReport(buckets=[], seconds_per_bucket={})
     for Q, D in buckets:
         t0 = time.perf_counter()
         state = service.bucket_state(Q, D)
         if state.peaks is None:
             seed = max(1, min(int(seed_peak_frac * Q * D), Q * D))
-            state.peaks = [seed] * S
+            state.peaks = [seed] * n_stages
         X = jnp.zeros((Q, D, n_features), jnp.float32)
         mask = jnp.ones((Q, D), bool)
         # Extreme EMAs steer the device pick to each branch in turn (the
         # cost model prices zero survivors as maximally staged-friendly
         # and full survival as fused-friendly).
-        ema_probes = [[0.0] * S]
-        if run_both_branches and service.execution_mode == "auto" and S > 1:
-            ema_probes.append([float(Q * D)] * S)
+        ema_probes = [[0.0] * n_stages]
+        if (
+            run_both_branches
+            and service.execution_mode == "auto"
+            and len(service.sentinels) > 1
+        ):
+            ema_probes.append([float(Q * D)] * n_stages)
         for ema in ema_probes:
             state.ema = ema
             service.rank_batch(X, mask, placement=placement)

@@ -1,9 +1,13 @@
 from repro.train.optimizer import Optimizer, adamw, adafactor, adagrad_rowwise, get_optimizer
 from repro.train.trainer import TrainState, make_train_step
 from repro.train.checkpoint import save_checkpoint, restore_checkpoint, latest_step
+from repro.train.distill import DistillResult, distill_dense_scorer, teacher_scores
 from repro.train.elastic import remesh
 
 __all__ = [
+    "DistillResult",
+    "distill_dense_scorer",
+    "teacher_scores",
     "Optimizer",
     "adamw",
     "adafactor",

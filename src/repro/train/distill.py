@@ -1,0 +1,168 @@
+"""Distill the GBDT ensemble into the dense stage-0 scorer.
+
+The teacher is the ensemble itself: its exact scores on training data
+(:func:`repro.forest.scoring.score_bitvector` — the bit-exact reference
+path, no kernel in the loop) supervise the tiny
+:mod:`repro.models.dense_scorer` MLP. Two loss terms, following the
+distillation line of related work (arXiv 2202.10728, 2305.08680):
+
+- **MSE** on the RAW teacher score scale. This matters beyond
+  conditioning: documents the dense gate exits keep the dense score as
+  their *final* score, so the student's outputs must live on the
+  ensemble's scale or the merged ranking (dense-exited docs vs
+  tree-scored survivors) is garbage.
+- **Pairwise logistic rank loss** within each query (all ordered pairs
+  where the teacher separates the documents): the gate is rank-based
+  (:func:`repro.core.strategies.dense_keep_fraction`), so what actually
+  decides which documents survive is the student's per-query ORDER, not
+  its absolute calibration. MSE alone underweights exactly the
+  small-margin inversions that flip gate decisions.
+
+Training whitens features internally (masked mean/std) for optimizer
+conditioning, then FOLDS the whitening affine into the projection weights
+and bias — the returned params/scorer consume raw ``[B, F]`` features,
+which is what the engine hands a :class:`repro.core.stage.DenseStage`.
+
+Full-batch AdamW (:func:`repro.train.optimizer.adamw` — the repo's own
+pytree optimizer, no optax): the repro-scale ``[Q, D, F]`` blocks fit in
+one jitted step, so the whole loop is ~`steps` device dispatches.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections.abc import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.forest.ensemble import TreeEnsemble
+from repro.forest.scoring import score_bitvector
+from repro.models.dense_scorer import (
+    DENSE_HIDDEN,
+    DENSE_N_VEC,
+    DENSE_VEC_DIM,
+    DenseParams,
+    dense_score,
+    init_dense_scorer,
+    make_dense_scorer,
+)
+from repro.train.optimizer import adamw
+
+
+@dataclasses.dataclass
+class DistillResult:
+    """Trained student + its teacher-fit diagnostics."""
+
+    params: DenseParams
+    scorer: Callable[[jax.Array], jax.Array]  # raw-feature [B, F] → [B];
+    #   ONE closure per training run — its identity keys the engine's
+    #   step cache through DenseStage
+    history: list[dict]       # logged (step, loss, mse, rank) floats
+    teacher_rmse: float       # masked RMSE vs ensemble scores, raw scale
+    pair_accuracy: float      # teacher-ordered pairs the student orders
+    #   the same way (the quantity the rank-based gate cares about)
+
+
+def teacher_scores(ensemble: TreeEnsemble, X: jax.Array) -> jax.Array:
+    """Exact ensemble scores for a ``[Q, D, F]`` block → ``[Q, D]``."""
+    Q, D, F = X.shape
+    return score_bitvector(ensemble, X.reshape(Q * D, F)).reshape(Q, D)
+
+
+def _pair_terms(
+    pred: jax.Array, teacher: jax.Array, m: jax.Array
+) -> tuple[jax.Array, jax.Array]:
+    """Per-query pairwise logistic loss and pair accuracy.
+
+    Pairs are ordered by the TEACHER (``dt > 0`` picks each separated
+    pair once, in teacher order); the student is pushed to agree via
+    ``softplus(-ds)``. [Q, D, D] is fine at repro block sizes.
+    """
+    dt = teacher[:, :, None] - teacher[:, None, :]
+    ds = pred[:, :, None] - pred[:, None, :]
+    pair_m = (m[:, :, None] * m[:, None, :]) * (dt > 0)
+    n_pairs = jnp.maximum(pair_m.sum(), 1.0)
+    loss = (jax.nn.softplus(-ds) * pair_m).sum() / n_pairs
+    acc = ((ds > 0) * pair_m).sum() / n_pairs
+    return loss, acc
+
+
+def distill_dense_scorer(
+    ensemble: TreeEnsemble,
+    X: jax.Array,
+    mask: jax.Array,
+    steps: int = 400,
+    lr: float = 3e-3,
+    rank_weight: float = 1.0,
+    seed: int = 0,
+    n_vec: int = DENSE_N_VEC,
+    vec_dim: int = DENSE_VEC_DIM,
+    hidden: int = DENSE_HIDDEN,
+    log_every: int = 50,
+) -> DistillResult:
+    """Train the dense student against the ensemble teacher on one block.
+
+    ``X`` is the padded ``[Q, D, F]`` training/validation block, ``mask``
+    its ``[Q, D]`` validity mask (padding contributes to neither loss
+    term nor the whitening statistics). Returns folded params — the
+    scorer consumes raw features.
+    """
+    X = jnp.asarray(X, jnp.float32)
+    mask = jnp.asarray(mask, bool)
+    Q, D, F = X.shape
+    teacher = teacher_scores(ensemble, X)
+    m = mask.astype(jnp.float32)
+    w = m.reshape(Q * D, 1)
+    denom = jnp.maximum(w.sum(), 1.0)
+    flat = X.reshape(Q * D, F)
+    mu = (flat * w).sum(0) / denom
+    sd = jnp.sqrt((jnp.square(flat - mu) * w).sum(0) / denom) + 1e-6
+    Xn = (flat - mu) / sd
+
+    params = init_dense_scorer(
+        jax.random.PRNGKey(seed), F, n_vec=n_vec, vec_dim=vec_dim,
+        hidden=hidden,
+    )
+    opt = adamw(lr=lr, weight_decay=1e-4)
+    state = opt.init(params)
+
+    def loss_fn(p: DenseParams) -> tuple[jax.Array, tuple]:
+        pred = dense_score(p, Xn).reshape(Q, D)
+        mse = (jnp.square(pred - teacher) * m).sum() / denom
+        rank, acc = _pair_terms(pred, teacher, m)
+        return mse + rank_weight * rank, (mse, rank, acc)
+
+    @jax.jit
+    def train_step(p: DenseParams, s: dict) -> tuple:
+        (loss, aux), grads = jax.value_and_grad(loss_fn, has_aux=True)(p)
+        p, s = opt.update(grads, s, p)
+        return p, s, loss, aux
+
+    history = []
+    for it in range(steps):
+        params, state, loss, (mse, rank, acc) = train_step(params, state)
+        if log_every and (it % log_every == 0 or it == steps - 1):
+            history.append({
+                "step": it, "loss": float(loss), "mse": float(mse),
+                "rank": float(rank), "pair_accuracy": float(acc),
+            })
+
+    # Fold the whitening affine into the projection so the deployed
+    # scorer consumes RAW features:
+    #   einsum((x−μ)/σ, P) + b  ==  einsum(x, P/σ) + (b − einsum(μ/σ, P))
+    folded = dict(params)
+    folded["proj"] = params["proj"] / sd[:, None, None]
+    folded["pb"] = params["pb"] - jnp.einsum(
+        "f,fnd->nd", mu / sd, params["proj"]
+    )
+    pred = dense_score(folded, flat).reshape(Q, D)
+    rmse = float(jnp.sqrt((jnp.square(pred - teacher) * m).sum() / denom))
+    _, pair_acc = _pair_terms(pred, teacher, m)
+    return DistillResult(
+        params=folded,
+        scorer=make_dense_scorer(folded),
+        history=history,
+        teacher_rmse=rmse,
+        pair_accuracy=float(pair_acc),
+    )

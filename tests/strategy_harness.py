@@ -1,35 +1,55 @@
 """Strategy conformance harness — shared oracle + contract helpers.
 
-The query-exit and reorder suites both need the same scaffolding: a
-deterministic problem generator, a from-scratch numpy replay of the
+The query-exit, reorder, and hybrid suites all need the same scaffolding:
+a deterministic problem generator, a from-scratch numpy replay of the
 progressive cascade (prefixes from the ``partial_scores`` oracle, stage
 decisions and query-level exit replayed on host), cross-mode
 equivalence runs, and the launch-count contract table. Keeping them
 here pins ONE definition of "conformant" that every engine
 configuration ({fused, staged, auto} × query-exit on/off × reorder
-on/off) is held to.
+on/off × dense-stage on/off) is held to.
+
+Heterogeneous stages: passing ``dense=`` (a :class:`DenseStage`, see
+:func:`make_dense_stage`) to :func:`run_mode` / :func:`run_all_modes` /
+:func:`oracle_progressive` / :func:`assert_matches_oracle` /
+:func:`measured_launches` prepends the dense gate as stage 0. The oracle
+replays it exactly: the dense scorer and policy are pure functions of the
+full ``[Q, D]`` grid, and the engine's tree strategies are mask-invariant,
+so replaying them on full-grid prefixes (instead of the engine's
+scatter-with-garbage-in-dead-slots grids) reproduces the masks bit-for-bit.
 
 Not a test module: no ``test_`` functions live here.
 """
 
 from __future__ import annotations
 
+import functools
+
+import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.cascade import CascadeRanker
+from repro.core.stage import DenseStage, EngineConfig
 from repro.core.strategies import (
     QueryExitConfig,
+    dense_keep_fraction,
     ept_continue,
     query_converged,
 )
 from repro.forest.ensemble import TreeEnsemble, random_ensemble
 from repro.forest.scoring import partial_scores
 from repro.kernels import ops
+from repro.models.dense_scorer import init_dense_scorer, make_dense_scorer
 
 # One strategy family for the whole harness: EPT with a mid proximity
 # threshold exercises partial-score-dependent exits without training.
 STRATEGY_KWARGS = dict(k_s=5, p=0.5)
+
+# Dense-gate keep fraction for hybrid conformance runs: aggressive enough
+# that the tree stages visibly run on a pruned block, loose enough that
+# later stages still have documents to exit.
+DENSE_KEEP_FRAC = 0.5
 
 
 def make_problem(seed: int, Q: int = 4, D: int = 24, F: int = 16,
@@ -48,31 +68,66 @@ def make_ranker(ens: TreeEnsemble, sentinel: int = 10) -> CascadeRanker:
     )
 
 
-def run_mode(ranker: CascadeRanker, X, mask, sentinels, mode: str,
-             query_exit: QueryExitConfig | None = None):
-    """One engine run; auto mode gets a fixed survivor estimate."""
-    kw = dict(STRATEGY_KWARGS)
-    if mode == "auto":
-        S = len(sentinels)
-        kw.update(
-            stage_ema=jnp.linspace(0.6, 0.2, S) * mask.size,
-            have_ema=True,
-        )
-    return ranker.rank_progressive(
-        X, mask, sentinels=sentinels, mode=mode, query_exit=query_exit, **kw
+def make_dense_stage(n_features: int, seed: int = 0,
+                     keep_frac: float = DENSE_KEEP_FRAC) -> DenseStage:
+    """Deterministic (untrained) dense stage-0 gate for conformance runs.
+
+    Conformance does not care whether the dense scorer is a *good* proxy,
+    only that the engine routes its scores/decisions correctly — a
+    freshly initialised scorer with a rank-based keep-fraction policy
+    exercises exactly the same code paths as a distilled one. Build it
+    ONCE per problem and reuse the returned object: stages hash their
+    callables by identity, so a shared instance is what keeps the engine
+    step cache hot across modes.
+    """
+    params = init_dense_scorer(jax.random.PRNGKey(seed), n_features)
+    return DenseStage(
+        scorer=make_dense_scorer(params),
+        policy=functools.partial(dense_keep_fraction, keep_frac=keep_frac),
     )
 
 
+def make_config(sentinels, mode: str = "fused",
+                query_exit: QueryExitConfig | None = None,
+                dense: DenseStage | None = None) -> EngineConfig:
+    """The harness's one way of building an EngineConfig (never kwargs)."""
+    if dense is None:
+        return EngineConfig.trees(
+            tuple(sentinels), mode=mode, query_exit=query_exit
+        )
+    return EngineConfig.hybrid(
+        dense, tuple(sentinels), mode=mode, query_exit=query_exit
+    )
+
+
+def run_mode(ranker: CascadeRanker, X, mask, sentinels, mode: str,
+             query_exit: QueryExitConfig | None = None,
+             dense: DenseStage | None = None):
+    """One engine run; auto mode gets a fixed survivor estimate."""
+    kw = dict(STRATEGY_KWARGS)
+    if mode == "auto":
+        n_stages = len(sentinels) + (1 if dense is not None else 0)
+        kw.update(
+            stage_ema=jnp.linspace(0.6, 0.2, n_stages) * mask.size,
+            have_ema=True,
+        )
+    config = make_config(sentinels, mode, query_exit, dense)
+    return ranker.rank_progressive(X, mask, config, **kw)
+
+
 def run_all_modes(ranker, X, mask, sentinels,
-                  query_exit: QueryExitConfig | None = None) -> dict:
+                  query_exit: QueryExitConfig | None = None,
+                  dense: DenseStage | None = None) -> dict:
     """Run {fused, staged, auto}; assert they agree bit-for-bit.
 
     Cross-mode bit-exactness holds on non-overflow batches (the harness
     problems are sized so capacities never clip) — the engine's core
-    conformance contract, with or without query-level exit.
+    conformance contract, with or without query-level exit, and with or
+    without a dense stage 0 (both modes score the tree head on the SAME
+    dense-compacted block, so the per-block kernel sums carry over).
     """
     results = {
-        m: run_mode(ranker, X, mask, sentinels, m, query_exit)
+        m: run_mode(ranker, X, mask, sentinels, m, query_exit, dense)
         for m in ("fused", "staged", "auto")
     }
     ref = results["fused"]
@@ -95,15 +150,21 @@ def run_all_modes(ranker, X, mask, sentinels,
 
 
 def oracle_progressive(ens: TreeEnsemble, X, mask, sentinels,
-                       query_exit: QueryExitConfig | None = None):
+                       query_exit: QueryExitConfig | None = None,
+                       dense: DenseStage | None = None):
     """From-scratch numpy replay of the progressive cascade.
 
     Prefix scores come from the pure ``partial_scores`` oracle (NOT the
     engine's kernel), stage decisions and query-level exit are replayed
-    on host with the same predicate functions the engine traces.
-    Returns ``(scores, stage_masks, exited)``. Scores agree with the
-    engine up to reassociation (compare with allclose); masks and exit
-    flags agree exactly.
+    on host with the same predicate functions the engine traces. With
+    ``dense`` the gate is replayed first (scorer + policy on the full
+    grid; query-exit stage indices shift by one so the dense gate is
+    stage 0, matching the engine) and dense-exited documents keep the
+    dense score as their final score. Returns
+    ``(scores, stage_masks, exited)`` — ``stage_masks`` leads with the
+    dense gate's mask when a dense stage is present. Scores agree with
+    the engine up to reassociation (compare with allclose); masks and
+    exit flags agree exactly.
     """
     Q, D, F = X.shape
     flat = X.reshape(Q * D, F)
@@ -117,32 +178,64 @@ def oracle_progressive(ens: TreeEnsemble, X, mask, sentinels,
     alive = np.asarray(mask).copy()
     exited = np.zeros(Q, bool)
     stage_masks = []
-    scores = prefixes[0].copy()
-    for k in range(len(sentinels)):
-        cont = np.asarray(ept_continue(
-            jnp.asarray(prefixes[k]), jnp.asarray(alive), **STRATEGY_KWARGS
+
+    def exit_queries(stage_idx, prefix, alive, exited):
+        if query_exit is None or stage_idx < query_exit.from_stage:
+            return alive, exited
+        conv = np.asarray(query_converged(
+            jnp.asarray(prefix), jnp.asarray(alive),
+            k=query_exit.k, margin=query_exit.margin,
         ))
-        alive = alive & cont
-        if query_exit is not None and k >= query_exit.from_stage:
-            conv = np.asarray(query_converged(
-                jnp.asarray(prefixes[k]), jnp.asarray(alive),
-                k=query_exit.k, margin=query_exit.margin,
-            ))
-            exited = exited | conv
-            alive = alive & ~exited[:, None]
+        exited = exited | conv
+        return alive & ~exited[:, None], exited
+
+    if dense is not None:
+        d_scores = np.asarray(dense.scorer(flat)).reshape(Q, D)
+        keep = np.asarray(
+            dense.policy(jnp.asarray(d_scores), jnp.asarray(alive))
+        )
+        alive = alive & keep
+        alive, exited = exit_queries(0, d_scores, alive, exited)
         stage_masks.append(alive.copy())
-        if k + 1 < len(sentinels):
-            scores = np.where(alive, prefixes[k + 1], scores)
+        # Hybrid score-update order: a doc exited at tree stage k keeps
+        # the stage-k prefix it was just scored with; dense-exited docs
+        # keep the dense score as their final score.
+        scores = d_scores.copy()
+        for k in range(len(sentinels)):
+            scores = np.where(alive, prefixes[k], scores)
+            cont = np.asarray(ept_continue(
+                jnp.asarray(prefixes[k]), jnp.asarray(alive),
+                **STRATEGY_KWARGS,
+            ))
+            alive = alive & cont
+            alive, exited = exit_queries(k + 1, prefixes[k], alive, exited)
+            stage_masks.append(alive.copy())
+    else:
+        scores = prefixes[0].copy()
+        for k in range(len(sentinels)):
+            cont = np.asarray(ept_continue(
+                jnp.asarray(prefixes[k]), jnp.asarray(alive),
+                **STRATEGY_KWARGS,
+            ))
+            alive = alive & cont
+            alive, exited = exit_queries(k, prefixes[k], alive, exited)
+            stage_masks.append(alive.copy())
+            if k + 1 < len(sentinels):
+                scores = np.where(alive, prefixes[k + 1], scores)
     if sentinels[-1] < ens.n_trees:
         scores = np.where(alive, full, scores)
     return scores, stage_masks, exited
 
 
 def assert_matches_oracle(result, ens, X, mask, sentinels,
-                          query_exit: QueryExitConfig | None = None):
+                          query_exit: QueryExitConfig | None = None,
+                          dense: DenseStage | None = None):
     """Engine result vs the numpy replay: masks/flags exact, scores close."""
     scores, stage_masks, exited = oracle_progressive(
-        ens, X, mask, sentinels, query_exit
+        ens, X, mask, sentinels, query_exit, dense
+    )
+    assert len(result.stage_masks) == len(stage_masks), (
+        len(result.stage_masks), len(stage_masks)
     )
     for k, m in enumerate(stage_masks):
         np.testing.assert_array_equal(
@@ -160,10 +253,13 @@ def expected_launches(mode: str, S: int, has_tail: bool,
                       query_exit_on: bool) -> dict:
     """The trace-time launch-count contract for one configuration.
 
-    Without query exit the tail is unconditional; with it the tail
-    launch sits behind a run-time ``lax.cond`` and counts as "gated".
-    ``mode="auto"`` traces BOTH branch bodies into one program, so its
-    plan is the sum of the fused and staged plans.
+    ``S`` counts TREE stages only: the dense gate of a hybrid config is
+    pure XLA (one matmul, no Pallas dispatch), so a hybrid cascade has
+    exactly the same launch plan as the all-trees cascade over its tree
+    stages. Without query exit the tail is unconditional; with it the
+    tail launch sits behind a run-time ``lax.cond`` and counts as
+    "gated". ``mode="auto"`` traces BOTH branch bodies into one program,
+    so its plan is the sum of the fused and staged plans.
     """
     tail = 1 if has_tail else 0
     gated = tail if query_exit_on else 0
@@ -183,8 +279,9 @@ def expected_launches(mode: str, S: int, has_tail: bool,
 
 
 def measured_launches(ranker, X, mask, sentinels, mode: str,
-                      query_exit: QueryExitConfig | None = None) -> dict:
+                      query_exit: QueryExitConfig | None = None,
+                      dense: DenseStage | None = None) -> dict:
     """Trace-time launch counts staged by ONE fresh-step run."""
     ops.reset_launch_counts()
-    run_mode(ranker, X, mask, sentinels, mode, query_exit)
+    run_mode(ranker, X, mask, sentinels, mode, query_exit, dense)
     return ops.launch_counts()

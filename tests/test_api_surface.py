@@ -1,0 +1,137 @@
+"""Public API surface pinned against a checked-in snapshot.
+
+``repro.core``, ``repro.serve``, and ``repro.forest`` are the packages
+in-repo callers (benchmarks, examples, the serving tier) and the docs
+treat as the public API. This test describes every ``__all__`` export —
+function signatures, dataclass fields with defaults, class constructor
+signatures and public attributes — and compares the result to
+``tests/fixtures/api_surface.json``.
+
+A mismatch means the public surface changed. If the change is
+intentional, regenerate the snapshot and review the diff like any other
+contract change:
+
+    PYTHONPATH=src python tests/test_api_surface.py --update
+
+The snapshot runs in the CI ``invariants`` job next to the tracer-safety
+analyzer and the type lane: signature drift fails the gate, not a
+downstream caller.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import importlib
+import inspect
+import json
+import os
+import typing
+
+MODULES = ("repro.core", "repro.serve", "repro.forest")
+SNAPSHOT = os.path.join(
+    os.path.dirname(os.path.abspath(__file__)), "fixtures",
+    "api_surface.json",
+)
+
+
+def _default_repr(field: dataclasses.Field) -> str:
+    if field.default_factory is not dataclasses.MISSING:  # type: ignore
+        return "<factory>"
+    if field.default is dataclasses.MISSING:
+        return "<required>"
+    return repr(field.default)
+
+
+def _public_members(obj: type) -> list[str]:
+    """Methods/properties/classmethods defined BY this class (not bases)."""
+    return sorted(
+        name for name, val in vars(obj).items()
+        if not name.startswith("_")
+        and (callable(val)
+             or isinstance(val, (property, classmethod, staticmethod)))
+    )
+
+
+def _describe(obj: object) -> dict:
+    if isinstance(obj, type) and dataclasses.is_dataclass(obj):
+        return {
+            "kind": "dataclass",
+            "frozen": obj.__dataclass_params__.frozen,  # type: ignore
+            "fields": [
+                [f.name, _default_repr(f)] for f in dataclasses.fields(obj)
+            ],
+            "members": _public_members(obj),
+        }
+    if isinstance(obj, type):
+        if typing.get_origin(obj) is None and getattr(
+            obj, "_is_protocol", False
+        ):
+            return {"kind": "protocol", "members": _public_members(obj)}
+        try:
+            init = str(inspect.signature(obj.__init__))
+        except (TypeError, ValueError):
+            init = "<opaque>"
+        return {"kind": "class", "init": init,
+                "members": _public_members(obj)}
+    if callable(obj):
+        try:
+            sig = str(inspect.signature(obj))
+        except (TypeError, ValueError):
+            sig = "<opaque>"
+        return {"kind": "function", "signature": sig}
+    return {"kind": type(obj).__name__, "repr": repr(obj)}
+
+
+def describe_surface() -> dict:
+    surface: dict = {}
+    for modname in MODULES:
+        mod = importlib.import_module(modname)
+        exports = sorted(mod.__all__)
+        surface[modname] = {
+            "__all__": exports,
+            "exports": {
+                name: _describe(getattr(mod, name)) for name in exports
+            },
+        }
+    return surface
+
+
+def test_api_surface_matches_snapshot():
+    with open(SNAPSHOT) as f:
+        pinned = json.load(f)
+    current = describe_surface()
+    for modname in MODULES:
+        assert modname in pinned, f"snapshot missing {modname} — regenerate"
+        assert current[modname]["__all__"] == pinned[modname]["__all__"], (
+            f"{modname}.__all__ drifted; if intentional: "
+            "PYTHONPATH=src python tests/test_api_surface.py --update"
+        )
+        for name, desc in current[modname]["exports"].items():
+            assert desc == pinned[modname]["exports"][name], (
+                f"{modname}.{name} changed shape; if intentional: "
+                "PYTHONPATH=src python tests/test_api_surface.py --update\n"
+                f"pinned:  {pinned[modname]['exports'][name]}\n"
+                f"current: {desc}"
+            )
+    # No extra modules silently riding in the snapshot.
+    assert sorted(pinned) == sorted(MODULES)
+
+
+def test_every_export_resolves():
+    """__all__ never names something the module doesn't define."""
+    for modname in MODULES:
+        mod = importlib.import_module(modname)
+        for name in mod.__all__:
+            assert hasattr(mod, name), (modname, name)
+
+
+if __name__ == "__main__":
+    import sys
+
+    if "--update" in sys.argv:
+        with open(SNAPSHOT, "w") as f:
+            json.dump(describe_surface(), f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"wrote {SNAPSHOT}")
+    else:
+        print(__doc__)

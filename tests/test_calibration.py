@@ -14,7 +14,7 @@ import pytest
 from repro.core.lear import LearClassifier
 from repro.forest.ensemble import random_ensemble
 from repro.serve import calibration
-from repro.serve.ranking_service import RankingService
+from repro.serve.ranking_service import RankingService, ServiceConfig
 
 import jax
 import jax.numpy as jnp
@@ -107,8 +107,9 @@ def test_auto_flows_into_service_and_device_cost_model():
         for i, s in enumerate((8, 28))
     ]
     svc = RankingService(
-        ens, clfs[0], extra_classifiers=clfs[1:],
-        execution_mode="auto", launch_overhead_trees="auto",
+        ens, clfs[0],
+        ServiceConfig(execution_mode="auto", launch_overhead_trees="auto"),
+        extra_classifiers=clfs[1:],
     )
     assert svc.launch_overhead_trees == 777.0
 

@@ -1,0 +1,241 @@
+"""EngineConfig/ServiceConfig/TierConfig: the config objects and the
+deprecation shims that retired the keyword-sprawl APIs.
+
+Pins the api_redesign contract:
+
+- ``EngineConfig`` is frozen, hashable, and structural: configs built
+  independently from the same stage structure (same callables by
+  identity) are EQUAL — and therefore hit the same compiled step in the
+  ranker's LRU cache;
+- the ``trees``/``hybrid`` constructors broadcast scalars and validate
+  the parallel sequences;
+- every legacy call form still works through the shim — keyword
+  configuration on ``rank_progressive`` (and the positional-sentinels
+  spelling), ``RankingService`` knob kwargs, ``ServingTier`` knob
+  kwargs — each emitting ONE DeprecationWarning whose message starts
+  with ``repro.`` (the prefix CI escalates to an error for in-repo
+  callers), and each producing bit-identical results to the config
+  spelling;
+- mixing a config WITH legacy keywords is a ``TypeError`` for all three
+  entry points.
+"""
+
+import dataclasses
+import warnings
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.lear import LearClassifier
+from repro.core.stage import DenseStage, EngineConfig, TreeStage
+from repro.core.strategies import QueryExitConfig, ept_continue
+from repro.forest.ensemble import random_ensemble
+from repro.serve.ranking_service import RankingService, ServiceConfig
+from repro.serve.tier import ServingTier, TierConfig
+from strategy_harness import (
+    STRATEGY_KWARGS,
+    make_dense_stage,
+    make_problem,
+    make_ranker,
+)
+
+SENTINELS = (10, 20, 35)
+
+
+# -- the config value itself -------------------------------------------------
+
+
+def test_engine_config_is_frozen_and_hashable():
+    cfg = EngineConfig.trees(SENTINELS, capacities=64)
+    assert hash(cfg) is not None
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        cfg.mode = "staged"
+
+
+def test_engine_config_structural_equality():
+    """Same stage structure + same callables by identity ⇒ equal configs
+    (the property that keeps the jit-step cache hot across calls)."""
+    strat = ept_continue
+    a = EngineConfig.trees(SENTINELS, strat, capacities=64, mode="staged")
+    b = EngineConfig.trees(list(SENTINELS), strat, capacities=64,
+                           mode="staged")
+    assert a == b and hash(a) == hash(b)
+    # A different callable object breaks equality even if behaviorally
+    # identical — identity is the contract.
+    other = lambda partial, alive, **kw: ept_continue(partial, alive, **kw)
+    c = EngineConfig.trees(SENTINELS, other, capacities=64, mode="staged")
+    assert a != c
+
+
+def test_engine_config_validates():
+    with pytest.raises(AssertionError):
+        EngineConfig.trees(())                       # no tree stage
+    with pytest.raises(AssertionError):
+        EngineConfig.trees((20, 10))                 # not increasing
+    with pytest.raises(AssertionError):
+        EngineConfig.trees((10, 10))                 # duplicate sentinel
+    with pytest.raises(AssertionError):
+        EngineConfig.trees(SENTINELS, mode="eager")  # unknown mode
+    with pytest.raises(AssertionError):
+        # per-stage capacities must cover every stage
+        EngineConfig.trees(SENTINELS, capacities=(64, 64))
+    with pytest.raises(AssertionError):
+        TreeStage(sentinel=0)
+    with pytest.raises(AssertionError):
+        DenseStage(scorer=lambda x: x, policy=lambda s, m: m, capacity=0)
+
+
+def test_trees_constructor_broadcasts_scalars():
+    strat = ept_continue
+    cfg = EngineConfig.trees(SENTINELS, strat, classifier_trees=10,
+                             capacities=128)
+    assert cfg.sentinels == SENTINELS
+    assert all(st.strategy is strat for st in cfg.tree_stages)
+    assert all(st.classifier_trees == 10.0 for st in cfg.tree_stages)
+    assert cfg.capacities == 128 and cfg.dense is None
+    assert cfg.n_stages == len(SENTINELS)
+
+
+def test_hybrid_constructor_prepends_dense_capacity():
+    dense = make_dense_stage(8, seed=3)
+    cfg = EngineConfig.hybrid(dense, SENTINELS, capacities=(64, 32, 16))
+    assert cfg.dense is dense and cfg.n_stages == len(SENTINELS) + 1
+    # dense.capacity=None rides on the last tree capacity
+    assert cfg.capacities == (16, 64, 32, 16)
+    bounded = dataclasses.replace(dense, capacity=48)
+    cfg2 = EngineConfig.hybrid(bounded, SENTINELS, capacities=(64, 32, 16))
+    assert cfg2.capacities == (48, 64, 32, 16)
+
+
+def test_equal_configs_share_one_compiled_step():
+    """Per-call config construction is free: equal configs (same strategy
+    tuple) reuse the SAME cached step; a different mode compiles anew."""
+    ens, X, mask = make_problem(30)
+    r = make_ranker(ens)
+    kw = dict(STRATEGY_KWARGS)
+    r.rank_progressive(X, mask, EngineConfig.trees(SENTINELS), **kw)
+    assert len(r._step_cache) == 1
+    r.rank_progressive(X, mask, EngineConfig.trees(SENTINELS), **kw)
+    assert len(r._step_cache) == 1          # structural hit, no retrace
+    r.rank_progressive(
+        X, mask, EngineConfig.trees(SENTINELS, mode="staged"), **kw
+    )
+    assert len(r._step_cache) == 2
+
+
+# -- rank_progressive shim ---------------------------------------------------
+
+
+def _legacy_engine_call(r, X, mask, positional=False):
+    kw = dict(STRATEGY_KWARGS)
+    if positional:
+        # The legacy POSITIONAL spelling: sentinels in the config slot.
+        return r.rank_progressive(X, mask, list(SENTINELS),
+                                  capacities=64, **kw)
+    return r.rank_progressive(
+        X, mask, sentinels=list(SENTINELS), capacities=64, **kw
+    )
+
+
+@pytest.mark.parametrize("positional", [False, True],
+                         ids=["keywords", "positional"])
+def test_rank_progressive_legacy_kwargs_warn_and_match(positional):
+    ens, X, mask = make_problem(31)
+    r = make_ranker(ens)
+    with pytest.warns(DeprecationWarning) as rec:
+        legacy = _legacy_engine_call(r, X, mask, positional)
+    assert len(rec) == 1
+    assert str(rec[0].message).startswith("repro.")
+    cfg = EngineConfig.trees(SENTINELS, capacities=64)
+    modern = r.rank_progressive(X, mask, cfg, **STRATEGY_KWARGS)
+    np.testing.assert_array_equal(
+        np.asarray(legacy.scores), np.asarray(modern.scores)
+    )
+    for lm, mm in zip(legacy.stage_masks, modern.stage_masks):
+        np.testing.assert_array_equal(np.asarray(lm), np.asarray(mm))
+
+
+def test_rank_progressive_rejects_config_plus_legacy():
+    ens, X, mask = make_problem(32)
+    r = make_ranker(ens)
+    cfg = EngineConfig.trees(SENTINELS, capacities=64)
+    with pytest.raises(TypeError, match="not both"):
+        r.rank_progressive(X, mask, cfg, mode="staged", **STRATEGY_KWARGS)
+    with pytest.raises(TypeError, match="not both"):
+        r.rank_progressive(
+            X, mask, cfg, query_exit=QueryExitConfig(k=3), **STRATEGY_KWARGS
+        )
+
+
+def test_rank_progressive_requires_some_configuration():
+    ens, X, mask = make_problem(33)
+    r = make_ranker(ens)
+    with pytest.raises(AssertionError, match="EngineConfig"):
+        r.rank_progressive(X, mask)
+
+
+# -- RankingService / ServingTier shims --------------------------------------
+
+
+def _ens_and_clf(seed=0, n_features=12):
+    ens = random_ensemble(seed, n_trees=64, depth=4, n_features=n_features)
+    clf = LearClassifier(
+        forest=random_ensemble(100, n_trees=10, depth=3,
+                               n_features=n_features + 4),
+        sentinel=8,
+    )
+    return ens, clf
+
+
+def test_ranking_service_legacy_kwargs_warn_and_match():
+    ens, clf = _ens_and_clf()
+    with pytest.warns(DeprecationWarning) as rec:
+        legacy = RankingService(ens, clf, threshold=0.4,
+                                execution_mode="fused")
+    assert len(rec) == 1
+    assert str(rec[0].message).startswith("repro.")
+    modern = RankingService(
+        ens, clf, ServiceConfig(threshold=0.4, execution_mode="fused")
+    )
+    assert legacy.config == modern.config
+    rng = np.random.default_rng(0)
+    X = jnp.asarray(rng.normal(size=(2, 32, 12)), jnp.float32)
+    m = jnp.ones((2, 32), bool)
+    top_l, sc_l = legacy.rank_batch(X, m)
+    top_m, sc_m = modern.rank_batch(X, m)
+    np.testing.assert_array_equal(np.asarray(top_l), np.asarray(top_m))
+    np.testing.assert_array_equal(np.asarray(sc_l), np.asarray(sc_m))
+
+
+def test_ranking_service_default_config_is_silent():
+    ens, clf = _ens_and_clf()
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        svc = RankingService(ens, clf)
+    assert svc.config == ServiceConfig()
+
+
+def test_ranking_service_rejects_config_plus_legacy():
+    ens, clf = _ens_and_clf()
+    with pytest.raises(TypeError, match="not both"):
+        RankingService(ens, clf, ServiceConfig(), threshold=0.4)
+
+
+def test_serving_tier_legacy_kwargs_warn_and_match():
+    ens, clf = _ens_and_clf()
+    svc = RankingService(ens, clf, ServiceConfig(threshold=0.4))
+    with pytest.warns(DeprecationWarning) as rec:
+        tier = ServingTier(svc, 12, doc_counts=(32,), warmup=False,
+                           persistent_cache=False)
+    assert len(rec) == 1
+    assert str(rec[0].message).startswith("repro.")
+    assert tier.config == TierConfig(doc_counts=(32,), warmup=False,
+                                     persistent_cache=False)
+
+
+def test_serving_tier_rejects_config_plus_legacy():
+    ens, clf = _ens_and_clf()
+    svc = RankingService(ens, clf, ServiceConfig(threshold=0.4))
+    with pytest.raises(TypeError, match="not both"):
+        ServingTier(svc, 12, TierConfig(warmup=False), doc_counts=(32,))

@@ -1,11 +1,13 @@
 """Environment-variable overrides of the engine tuning constants.
 
-The three deployment knobs (`PADDED_CACHE_MAX`, `LEAF_SELECT_MAX`,
-`RANK_BLOCKED_MIN_D`) read the environment through the single
-:func:`repro.kernels.ops.env_int` helper at import time. The helper's
-parsing contract is tested in-process; the end-to-end override path (env →
-import → behavior change) needs a fresh interpreter, so it runs in a
-subprocess — same idiom as the multi-device check in test_distributed.
+The deployment knobs (`PADDED_CACHE_MAX`, `LEAF_SELECT_MAX`,
+`RANK_BLOCKED_MIN_D`, and the dense stage-0 sizing constants
+`DENSE_N_VEC` / `DENSE_VEC_DIM` / `DENSE_HIDDEN` / `DENSE_COST_TREES`)
+read the environment through the single :func:`repro.kernels.ops.env_int`
+helper at import time. The helper's parsing contract is tested
+in-process; the end-to-end override path (env → import → behavior change)
+needs a fresh interpreter, so it runs in a subprocess — same idiom as the
+multi-device check in test_distributed.
 """
 
 import subprocess
@@ -102,6 +104,71 @@ def test_override_path_end_to_end():
         cwd="/root/repo",
     )
     assert "OVERRIDES_OK" in res.stdout, res.stdout + res.stderr
+
+
+_DENSE_OVERRIDE_PROG = r"""
+import jax
+import jax.numpy as jnp
+import repro.models.dense_scorer as ds
+from repro.core.stage import DenseStage
+
+# The constants themselves picked up the environment.
+assert ds.DENSE_N_VEC == 3, ds.DENSE_N_VEC
+assert ds.DENSE_VEC_DIM == 8, ds.DENSE_VEC_DIM
+assert ds.DENSE_HIDDEN == 12, ds.DENSE_HIDDEN
+assert ds.DENSE_COST_TREES == 9, ds.DENSE_COST_TREES
+
+# ... and the behavior behind them moved: the default-initialized scorer
+# is shaped by the overridden constants end to end.
+params = ds.init_dense_scorer(jax.random.PRNGKey(0), n_features=10)
+assert params["proj"].shape == (10, 3, 8), params["proj"].shape
+assert params["pb"].shape == (3, 8), params["pb"].shape
+n_pairs = 3 * 2 // 2
+assert params["w1"].shape == (3 * 8 + n_pairs, 12), params["w1"].shape
+out = ds.dense_score(params, jnp.zeros((5, 10), jnp.float32))
+assert out.shape == (5,), out.shape
+
+# The accounting default of a DenseStage follows DENSE_COST_TREES.
+stage = DenseStage(
+    scorer=ds.make_dense_scorer(params), policy=lambda s, m: m
+)
+assert stage.stage_cost_trees == 9.0, stage.stage_cost_trees
+print("DENSE_OVERRIDES_OK")
+"""
+
+
+def test_dense_override_path_end_to_end():
+    """Env → fresh import → dense-scorer shapes and stage accounting move."""
+    res = subprocess.run(
+        [sys.executable, "-c", _DENSE_OVERRIDE_PROG],
+        capture_output=True, text=True, timeout=300,
+        env={
+            "PYTHONPATH": "src", "PATH": "/usr/bin:/bin", "HOME": "/root",
+            "JAX_PLATFORMS": "cpu",
+            "REPRO_DENSE_N_VEC": "3",
+            "REPRO_DENSE_VEC_DIM": "8",
+            "REPRO_DENSE_HIDDEN": "12",
+            "REPRO_DENSE_COST_TREES": "9",
+        },
+        cwd="/root/repo",
+    )
+    assert "DENSE_OVERRIDES_OK" in res.stdout, res.stdout + res.stderr
+
+
+def test_dense_n_vec_minimum_enforced():
+    """n_vec=1 has no pairwise interactions — rejected at import."""
+    res = subprocess.run(
+        [sys.executable, "-c", "import repro.models.dense_scorer"],
+        capture_output=True, text=True, timeout=300,
+        env={
+            "PYTHONPATH": "src", "PATH": "/usr/bin:/bin", "HOME": "/root",
+            "JAX_PLATFORMS": "cpu",
+            "REPRO_DENSE_N_VEC": "1",
+        },
+        cwd="/root/repo",
+    )
+    assert res.returncode != 0
+    assert "REPRO_DENSE_N_VEC must be >= 2" in res.stderr
 
 
 def test_bad_override_fails_at_import():

@@ -1,0 +1,170 @@
+"""Hybrid neural/tree cascade: dense stage 0 conformance + distillation.
+
+The tentpole's acceptance contract, as tests:
+
+- a heterogeneous stage list (DenseStage + TreeStages) runs in all three
+  execution modes and the modes agree bit-for-bit (the dense-compacted
+  tree head block is identical across modes);
+- the engine's masks/scores match the from-scratch numpy replay
+  (``strategy_harness.oracle_progressive``) — dense gate included, with
+  and without query-level exit;
+- dense-exited documents keep the dense score as their final score (the
+  distilled proxy stands in for the ensemble on the easy majority);
+- the launch contract is UNCHANGED vs the all-trees cascade over the
+  tree stages: the dense matmul is pure XLA and dispatches no Pallas
+  kernel, for S=1 and S>1 tree stages alike;
+- the hybrid accounting (dense spliced in as a zero-sentinel stage)
+  stays a finite, lazy device scalar;
+- ``distill_dense_scorer`` fits the ensemble's scores on a toy problem
+  (teacher RMSE shrinks, pairwise order mostly preserved) and the
+  resulting scorer drops into a DenseStage that passes the same
+  cross-mode + oracle conformance as the untrained one.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.stage import DenseStage, EngineConfig
+from repro.core.strategies import QueryExitConfig
+from strategy_harness import (
+    assert_matches_oracle,
+    expected_launches,
+    make_dense_stage,
+    make_problem,
+    make_ranker,
+    measured_launches,
+    oracle_progressive,
+    run_all_modes,
+    run_mode,
+)
+
+SENTINELS = (10, 20, 35)
+F = 16
+
+
+@pytest.fixture(scope="module")
+def problem():
+    ens, X, mask = make_problem(40, F=F)
+    return ens, X, mask, make_dense_stage(F, seed=40)
+
+
+def test_hybrid_modes_agree_and_match_oracle(problem):
+    ens, X, mask, dense = problem
+    r = make_ranker(ens)
+    results = run_all_modes(r, X, mask, SENTINELS, dense=dense)
+    for res in results.values():
+        assert_matches_oracle(res, ens, X, mask, SENTINELS, dense=dense)
+        # Dense gate leads the stage-mask list: S_tree + 1 entries.
+        assert len(res.stage_masks) == len(SENTINELS) + 1
+
+
+def test_hybrid_dense_gate_prunes_and_scores(problem):
+    """The gate's mask is the replayed policy decision, pruned docs keep
+    the dense score, and tree survivors are a subset of gate survivors."""
+    ens, X, mask, dense = problem
+    r = make_ranker(ens)
+    res = run_mode(r, X, mask, SENTINELS, "fused", dense=dense)
+    Q, D, _ = X.shape
+    d_scores = np.asarray(dense.scorer(X.reshape(Q * D, F))).reshape(Q, D)
+    gate_alive = np.asarray(res.stage_masks[0])
+    # keep_frac=0.5 on a ~90%-masked problem: a real prune, never empty.
+    assert 0 < gate_alive.sum() < np.asarray(mask).sum()
+    dense_exited = np.asarray(mask) & ~gate_alive
+    # jit-vs-eager dense evaluation differs in float32 low bits — same
+    # allclose convention as the harness's score comparison.
+    np.testing.assert_allclose(
+        np.asarray(res.scores)[dense_exited], d_scores[dense_exited],
+        rtol=1e-5, atol=1e-5,
+    )
+    for m in res.stage_masks[1:]:
+        assert not (np.asarray(m) & ~gate_alive).any()
+
+
+def test_hybrid_with_query_exit(problem):
+    ens, X, mask, dense = problem
+    r = make_ranker(ens)
+    qe = QueryExitConfig(k=3, margin=0.05, from_stage=1)
+    results = run_all_modes(r, X, mask, SENTINELS, qe, dense=dense)
+    assert_matches_oracle(
+        results["fused"], ens, X, mask, SENTINELS, qe, dense=dense
+    )
+    # margin=inf is the EXACT regime: a query exits only once it has no
+    # alive documents, so skipping its tail is score-preserving even
+    # with the dense gate in front — bit-exact with the knob off.
+    exact = QueryExitConfig(k=3, margin=float("inf"), from_stage=1)
+    inf_run = run_mode(r, X, mask, SENTINELS, "fused", exact, dense=dense)
+    base = run_mode(r, X, mask, SENTINELS, "fused", dense=dense)
+    np.testing.assert_array_equal(
+        np.asarray(inf_run.scores), np.asarray(base.scores)
+    )
+
+
+@pytest.mark.parametrize("mode", ["fused", "staged", "auto"])
+@pytest.mark.parametrize("sentinels", [(10,), SENTINELS])
+def test_hybrid_launch_contract(problem, mode, sentinels):
+    """Dense stage adds ZERO Pallas launches: the hybrid launch plan equals
+    the all-trees plan over the tree stages, including the S=1 degenerate
+    head and the auto-mode both-branches trace."""
+    ens, X, mask, dense = problem
+    r = make_ranker(ens)
+    if mode == "auto" and len(sentinels) == 1:
+        # The dense gate does NOT count toward auto's ≥2-tree-stage
+        # requirement: with one tree stage the modes are identical and
+        # the engine rejects auto, hybrid or not.
+        with pytest.raises(AssertionError, match="auto"):
+            measured_launches(r, X, mask, sentinels, mode, dense=dense)
+        return
+    counts = measured_launches(r, X, mask, sentinels, mode, dense=dense)
+    assert counts == expected_launches(
+        mode, len(sentinels), has_tail=True, query_exit_on=False
+    ), (mode, sentinels, counts)
+
+
+def test_hybrid_speedup_is_lazy_and_finite(problem):
+    ens, X, mask, dense = problem
+    r = make_ranker(ens)
+    res = run_mode(r, X, mask, SENTINELS, "fused", dense=dense)
+    assert isinstance(res.speedup, jax.Array)  # lazy: no hidden host sync
+    assert np.isfinite(float(res.speedup)) and float(res.speedup) > 0.0
+
+
+def test_hybrid_rejects_dense_after_stage_zero(problem):
+    _, _, _, dense = problem
+    from repro.core.stage import TreeStage
+
+    with pytest.raises(AssertionError):
+        EngineConfig(stages=(TreeStage(sentinel=10), dense))
+
+
+def test_distilled_scorer_conformant_end_to_end():
+    """Distill against the real ensemble, then run the distilled stage
+    through the full cross-mode + oracle conformance."""
+    from repro.train.distill import distill_dense_scorer, teacher_scores
+
+    ens, X, mask = make_problem(41, F=F)
+    out = distill_dense_scorer(
+        ens, X, mask, steps=150, lr=3e-3, seed=1, log_every=50
+    )
+    # The proxy learned the teacher: centered RMSE well under the score
+    # spread, and pairwise order mostly preserved.
+    t = np.asarray(teacher_scores(ens, X))[np.asarray(mask)]
+    assert out.teacher_rmse < 0.5 * t.std(), (out.teacher_rmse, t.std())
+    assert out.pair_accuracy > 0.8, out.pair_accuracy
+    assert len(out.history) >= 2
+    assert out.history[-1]["loss"] < out.history[0]["loss"]
+
+    import functools
+
+    from repro.core.strategies import dense_keep_fraction
+
+    stage = DenseStage(
+        scorer=out.scorer,
+        policy=functools.partial(dense_keep_fraction, keep_frac=0.5),
+    )
+    r = make_ranker(ens)
+    results = run_all_modes(r, X, mask, SENTINELS, dense=stage)
+    assert_matches_oracle(
+        results["staged"], ens, X, mask, SENTINELS, dense=stage
+    )

@@ -27,6 +27,7 @@ import numpy as np
 import pytest
 
 from repro.core.cascade import CascadeRanker, bucket_capacity
+from repro.core.stage import EngineConfig
 from repro.core.compaction import (
     compact_indices_argsort,
     compact_indices_cumsum,
@@ -122,7 +123,7 @@ def test_progressive_single_sentinel_bitexact_vs_compacted(mode):
     cascade = _cascade(ens)
     ref = cascade.rank_compacted(X, mask, capacity=64)
     got = cascade.rank_progressive(
-        X, mask, sentinels=[10], capacities=[64], mode=mode
+        X, mask, EngineConfig.trees([10], capacities=[64], mode=mode)
     )
     np.testing.assert_array_equal(np.asarray(ref.scores), np.asarray(got.scores))
     np.testing.assert_array_equal(
@@ -140,7 +141,9 @@ def test_progressive_single_sentinel_bitexact_under_overflow():
     mask = jnp.ones((Q, D), bool)
     cascade = _cascade(ens, k_s=16)  # 64 survivors
     ref = cascade.rank_compacted(X, mask, capacity=16)  # overflow 48
-    got = cascade.rank_progressive(X, mask, sentinels=[10], capacities=[16])
+    got = cascade.rank_progressive(
+        X, mask, EngineConfig.trees([10], capacities=[16])
+    )
     np.testing.assert_array_equal(np.asarray(ref.scores), np.asarray(got.scores))
     assert int(ref.overflow) == int(got.overflow) == 48
 
@@ -164,8 +167,9 @@ def test_progressive_s3_launch_budget():
 
     def run(mode):
         result = cascade.rank_progressive(
-            X, mask, sentinels=[10, 20, 35], capacities=128,
-            strategies=strategies, mode=mode,
+            X, mask, EngineConfig.trees(
+                [10, 20, 35], tuple(strategies), capacities=128, mode=mode
+            ),
         )
         jax.block_until_ready(result.scores)
         return result
@@ -204,7 +208,7 @@ def test_progressive_nested_exit_semantics():
         lambda p, m: m,                            # stage 2 would keep all
     ]
     result = cascade.rank_progressive(
-        X, mask, sentinels=[10, 30], capacities=64, strategies=strategies
+        X, mask, EngineConfig.trees([10, 30], tuple(strategies), capacities=64)
     )
     alive1 = np.asarray(result.stage_masks[0])
     alive2 = np.asarray(result.stage_masks[1])
@@ -233,7 +237,9 @@ def test_progressive_sentinel_at_ensemble_end():
     mask = jnp.ones((Q, D), bool)
     cascade = _cascade(ens)
     ops.reset_launch_counts()
-    result = cascade.rank_progressive(X, mask, sentinels=[16, 32], capacities=64)
+    result = cascade.rank_progressive(
+        X, mask, EngineConfig.trees([16, 32], capacities=64)
+    )
     jax.block_until_ready(result.scores)
     counts = ops.launch_counts()
     assert counts == {"plain": 0, "segmented": 1, "gated": 0}, counts
@@ -270,12 +276,16 @@ def test_overflow_is_lazy_device_scalar():
     cascade = _cascade(ens)
     for result in (
         cascade.rank_compacted(X, mask, capacity=16),
-        cascade.rank_progressive(X, mask, sentinels=[10], capacities=16),
+        cascade.rank_progressive(
+            X, mask, EngineConfig.trees([10], capacities=16)
+        ),
     ):
         assert isinstance(result.overflow, jax.Array)  # not a host int
         assert int(result.overflow) >= 0               # stats-path read works
     # Progressive speedup is also lazy (the reference paths return floats).
-    prog = cascade.rank_progressive(X, mask, sentinels=[10], capacities=16)
+    prog = cascade.rank_progressive(
+        X, mask, EngineConfig.trees([10], capacities=16)
+    )
     assert isinstance(prog.speedup, jax.Array)
     assert float(prog.speedup) > 1.0
 
@@ -336,11 +346,13 @@ def test_staged_matches_fused_and_oracle():
     strategies = [
         (lambda p, m, k=k: ert_continue(p, m, k_s=k)) for k in (16, 10, 6)
     ]
-    kwargs = dict(
-        sentinels=[10, 20, 35], capacities=128, strategies=strategies
-    )
-    fused = cascade.rank_progressive(X, mask, mode="fused", **kwargs)
-    staged = cascade.rank_progressive(X, mask, mode="staged", **kwargs)
+    def config(mode):
+        return EngineConfig.trees(
+            [10, 20, 35], tuple(strategies), capacities=128, mode=mode
+        )
+
+    fused = cascade.rank_progressive(X, mask, config("fused"))
+    staged = cascade.rank_progressive(X, mask, config("staged"))
     assert int(fused.overflow) == int(staged.overflow) == 0
     np.testing.assert_array_equal(
         np.asarray(fused.scores), np.asarray(staged.scores)
@@ -352,7 +364,7 @@ def test_staged_matches_fused_and_oracle():
     # Single-sentinel oracle: both modes vs the full-compute rank() path.
     for mode in ("fused", "staged"):
         got = cascade.rank_progressive(
-            X, mask, sentinels=[10], capacities=[Q * D], mode=mode
+            X, mask, EngineConfig.trees([10], capacities=[Q * D], mode=mode)
         )
         ref = cascade.rank(X, mask)
         np.testing.assert_array_equal(
@@ -375,7 +387,8 @@ def test_staged_capacity_is_real_bound_with_overflow():
     mask = jnp.ones((Q, D), bool)
     cascade = _cascade(ens, k_s=16)  # 64 stage-0 survivors
     res = cascade.rank_progressive(
-        X, mask, sentinels=[10, 20], capacities=[16, 128], mode="staged"
+        X, mask,
+        EngineConfig.trees([10, 20], capacities=[16, 128], mode="staged"),
     )
     assert int(res.overflow) == 48          # 64 survivors, stage-0 cap 16
     alive0 = np.asarray(res.stage_masks[0])
@@ -432,15 +445,14 @@ def test_auto_mode_launch_counters_stable_under_cond():
     # trusted (at this toy scale the block-rounded survivor pricing
     # saturates at the capacity block, so the flip comes from the traced
     # have_ema operand, not the EMA magnitude).
-    kwargs = dict(
-        sentinels=[10, 20, 35], capacities=128, strategies=strategies,
+    config = EngineConfig.trees(
+        [10, 20, 35], tuple(strategies), capacities=128, mode="auto",
         launch_overhead_trees=100.0,
     )
 
     ops.reset_launch_counts()
     res = cascade.rank_progressive(
-        X, mask, mode="auto", stage_ema=jnp.asarray([4.0, 4.0, 4.0]),
-        **kwargs,
+        X, mask, config, stage_ema=jnp.asarray([4.0, 4.0, 4.0])
     )
     jax.block_until_ready(res.scores)
     counts = ops.launch_counts()
@@ -448,8 +460,8 @@ def test_auto_mode_launch_counters_stable_under_cond():
     # Branch flip on the cached step (have_ema=False forces the fused
     # cold-start branch — a traced operand): no re-trace, no counter move.
     res2 = cascade.rank_progressive(
-        X, mask, mode="auto", have_ema=False,
-        stage_ema=jnp.asarray([4.0, 4.0, 4.0]), **kwargs,
+        X, mask, config, have_ema=False,
+        stage_ema=jnp.asarray([4.0, 4.0, 4.0]),
     )
     jax.block_until_ready(res2.scores)
     assert ops.launch_counts() == counts, ops.launch_counts()
@@ -469,11 +481,14 @@ def test_auto_mode_bitexact_with_picked_branch():
     strategies = [
         (lambda p, m, k=k: ert_continue(p, m, k_s=k)) for k in (16, 10, 6)
     ]
-    kwargs = dict(
-        sentinels=[10, 20, 35], capacities=128, strategies=strategies,
-    )
+    def config(mode, loh=0.0):
+        return EngineConfig.trees(
+            [10, 20, 35], tuple(strategies), capacities=128, mode=mode,
+            launch_overhead_trees=loh,
+        )
+
     fixed = {
-        m: cascade.rank_progressive(X, mask, mode=m, **kwargs)
+        m: cascade.rank_progressive(X, mask, config(m))
         for m in ("fused", "staged")
     }
     # Block-rounded pricing: at this scale staged stage work saturates at
@@ -481,8 +496,7 @@ def test_auto_mode_bitexact_with_picked_branch():
     # staged, expensive launches pick fused. Both cond branches execute.
     for loh, expect in ((100.0, "staged"), (5000.0, "fused")):
         got = cascade.rank_progressive(
-            X, mask, mode="auto", stage_ema=jnp.asarray([4.0] * 3),
-            launch_overhead_trees=loh, **kwargs,
+            X, mask, config("auto", loh), stage_ema=jnp.asarray([4.0] * 3)
         )
         assert ("staged" if bool(got.picked_staged) else "fused") == expect
         np.testing.assert_array_equal(
@@ -493,8 +507,8 @@ def test_auto_mode_bitexact_with_picked_branch():
             np.asarray(fixed[expect].continue_mask),
         )
     cold = cascade.rank_progressive(
-        X, mask, mode="auto", stage_ema=jnp.asarray([4.0] * 3),
-        have_ema=False, launch_overhead_trees=512.0, **kwargs,
+        X, mask, config("auto", 512.0), stage_ema=jnp.asarray([4.0] * 3),
+        have_ema=False,
     )
     assert not bool(cold.picked_staged)
     np.testing.assert_array_equal(

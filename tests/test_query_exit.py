@@ -237,7 +237,7 @@ def test_converged_k_clamped_to_d():
 def _service(query_exit=None, execution_mode="auto"):
     from repro.core.lear import LearClassifier
     from repro.forest.ensemble import random_ensemble
-    from repro.serve.ranking_service import RankingService
+    from repro.serve.ranking_service import RankingService, ServiceConfig
 
     ens = random_ensemble(0, n_trees=64, depth=4, n_features=12)
     clfs = [
@@ -249,9 +249,12 @@ def _service(query_exit=None, execution_mode="auto"):
         for i, s in enumerate((8, 28))
     ]
     svc = RankingService(
-        ens, clfs[0], threshold=0.4, extra_classifiers=clfs[1:],
-        execution_mode=execution_mode, launch_overhead_trees=50.0,
-        query_exit=query_exit,
+        ens, clfs[0],
+        ServiceConfig(
+            threshold=0.4, execution_mode=execution_mode,
+            launch_overhead_trees=50.0, query_exit=query_exit,
+        ),
+        extra_classifiers=clfs[1:],
     )
     gate = lambda p, m, features=None: m & (features[..., 0] > 0.0)
     svc.stage_strategies = [gate] * len(svc.sentinels)
@@ -289,11 +292,13 @@ def test_service_query_exit_margin_inf_bitexact_and_counted():
 
 
 def test_tier_stats_expose_query_exit():
-    from repro.serve.tier import ServingTier
+    from repro.serve.tier import ServingTier, TierConfig
 
     svc = _service(query_exit=QueryExitConfig(k=5))
-    tier = ServingTier(svc, n_features=12, warmup=False,
-                       persistent_cache=False)
+    tier = ServingTier(
+        svc, n_features=12,
+        config=TierConfig(warmup=False, persistent_cache=False),
+    )
     got = tier.stats()["service"]
     assert got["queries_exited"] == 0
     assert got["query_exit_rate"] == 0.0

@@ -12,10 +12,10 @@ import numpy as np
 
 from repro.core.lear import LearClassifier
 from repro.forest.ensemble import random_ensemble
-from repro.serve.ranking_service import RankingService
+from repro.serve.ranking_service import RankingService, ServiceConfig
 
 
-def _service(seed=0, n_trees=64, sentinels=(8, 28), **kwargs):
+def _service(seed=0, n_trees=64, sentinels=(8, 28), **knobs):
     ens = random_ensemble(seed, n_trees=n_trees, depth=4, n_features=12)
     clfs = [
         LearClassifier(
@@ -25,7 +25,8 @@ def _service(seed=0, n_trees=64, sentinels=(8, 28), **kwargs):
         for i, s in enumerate(sentinels)
     ]
     svc = RankingService(
-        ens, clfs[0], threshold=0.4, extra_classifiers=clfs[1:], **kwargs
+        ens, clfs[0], ServiceConfig(threshold=0.4, **knobs),
+        extra_classifiers=clfs[1:],
     )
     # Deterministic stage gate: continue ⇔ feature 0 positive. Replacing the
     # strategy list BEFORE the first batch keeps the jitted-step cache to
@@ -141,8 +142,12 @@ def test_rank_batch_zero_host_transfers_with_lear_classifier():
         for i, s in enumerate((8, 28))
     ]
     svc = RankingService(
-        ens, clfs[0], threshold=0.4, extra_classifiers=clfs[1:],
-        execution_mode="auto", launch_overhead_trees=512.0,
+        ens, clfs[0],
+        ServiceConfig(
+            threshold=0.4, execution_mode="auto",
+            launch_overhead_trees=512.0,
+        ),
+        extra_classifiers=clfs[1:],
     )
     X = jnp.asarray(rng.normal(size=(2, 32, 12)).astype(np.float32))
     mask = jnp.ones((2, 32), bool)

@@ -25,14 +25,14 @@ from repro.core.lear import LearClassifier
 from repro.forest.ensemble import random_ensemble
 from repro.serve.batching import BucketPolicy, ContinuousBatcher
 from repro.serve.placement import local, single_device
-from repro.serve.ranking_service import RankingService
-from repro.serve.tier import ServingTier
+from repro.serve.ranking_service import RankingService, ServiceConfig
+from repro.serve.tier import ServingTier, TierConfig
 from repro.serve.warmup import enable_persistent_cache, warmup_service
 
 F = 12
 
 
-def _service(seed=0, sentinels=(8, 28), **kwargs):
+def _service(seed=0, sentinels=(8, 28), **knobs):
     ens = random_ensemble(seed, n_trees=64, depth=4, n_features=F)
     clfs = [
         LearClassifier(
@@ -41,10 +41,11 @@ def _service(seed=0, sentinels=(8, 28), **kwargs):
         )
         for i, s in enumerate(sentinels)
     ]
-    kwargs.setdefault("execution_mode", "fused")
-    kwargs.setdefault("launch_overhead_trees", 512.0)
+    knobs.setdefault("execution_mode", "fused")
+    knobs.setdefault("launch_overhead_trees", 512.0)
     svc = RankingService(
-        ens, clfs[0], threshold=0.4, extra_classifiers=clfs[1:], **kwargs
+        ens, clfs[0], ServiceConfig(threshold=0.4, **knobs),
+        extra_classifiers=clfs[1:],
     )
     # Deterministic stage gate (continue ⇔ feature 0 positive), installed
     # before any trace — keeps survivor counts exact and compiles cheap.
@@ -158,9 +159,9 @@ def test_warmup_no_recompiles_no_cold_start_overflow():
 def test_tier_end_to_end_stats_and_drain():
     svc = _service()
     tier = ServingTier(
-        svc, F, doc_counts=(32,),
+        svc, F,
+        TierConfig(doc_counts=(32,), warmup=True, persistent_cache=False),
         policy=BucketPolicy(max_queries=2, max_wait_ms=20.0),
-        warmup=True, persistent_cache=False,
     )
     tier.start()
     rng = np.random.default_rng(3)
@@ -201,7 +202,7 @@ assert jax.device_count() == 8, jax.device_count()
 from repro.core.lear import LearClassifier
 from repro.forest.ensemble import random_ensemble
 from repro.serve.placement import data_parallel, single_device
-from repro.serve.ranking_service import RankingService
+from repro.serve.ranking_service import RankingService, ServiceConfig
 
 def service():
     ens = random_ensemble(0, n_trees=16, depth=2, n_features=6)
@@ -209,8 +210,9 @@ def service():
         forest=random_ensemble(7, n_trees=4, depth=2, n_features=10),
         sentinel=8,
     )
-    svc = RankingService(ens, clf, threshold=0.4, execution_mode="fused",
-                         launch_overhead_trees=512.0)
+    svc = RankingService(ens, clf, ServiceConfig(
+        threshold=0.4, execution_mode="fused", launch_overhead_trees=512.0,
+    ))
     svc.stage_strategies = [
         lambda p, m, features=None: m & (features[..., 0] > 0.0)
     ]

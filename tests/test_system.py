@@ -23,7 +23,7 @@ from repro.forest.scoring import score_bitvector
 from repro.metrics.classification import precision_recall
 from repro.metrics.ranking import mean_ndcg
 from repro.metrics.speedup import speedup_vs_full
-from repro.serve.ranking_service import RankingService
+from repro.serve.ranking_service import RankingService, ServiceConfig
 
 pytestmark = pytest.mark.slow  # trained-pipeline fixture; full lane only
 
@@ -128,7 +128,7 @@ def test_lear_dominates_ept_at_matched_quality(pipeline):
 def test_ranking_service_end_to_end(pipeline):
     data, splits, ranker, clf = pipeline
     test = splits["test"]
-    service = RankingService(ranker, clf, threshold=0.3)
+    service = RankingService(ranker, clf, ServiceConfig(threshold=0.3))
     X = jnp.asarray(test.X[:8])
     mask = jnp.asarray(test.mask[:8])
     top_idx, scores = service.rank_batch(X, mask)
