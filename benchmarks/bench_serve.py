@@ -19,6 +19,13 @@ threads at 1×/8×/64× concurrency and measures what the tentpole claims:
   whole run.
 - **Bit-exactness** — a sample of batched responses replayed through a
   fresh single-query service must match score-for-score, index-for-index.
+- **Degraded mode** (the fault-tolerance tentpole) — an overload run
+  against a tier with a degradation ladder and a bounded queue: shed rate
+  and deadline-miss rate stay finite fractions (admission control, not
+  queue growth), the rung ladder steps under load and recovers after it,
+  and a per-rung quality sweep records NDCG@10 against full-ensemble
+  teacher labels (monotone: each cheaper rung may only trade quality
+  DOWN, and stepping rungs after warmup triggers ZERO jit lowerings).
 
 CPU wall times are NOT TPU predictions (the kernel runs in interpret mode
 here); the *ratios* — batched vs serial QPS, first-request vs steady p50 —
@@ -32,16 +39,23 @@ from __future__ import annotations
 import argparse
 import json
 import os
+import sys
 import threading
 import time
 
 import numpy as np
 
 import jax.numpy as jnp
+import jax._src.test_util as jtu
 
 from repro.core.lear import LearClassifier
+from repro.core.strategies import QueryExitConfig
 from repro.forest.ensemble import random_ensemble
+from repro.forest.scoring import score_numpy_oracle
+from repro.metrics.ranking import mean_ndcg
 from repro.serve.batching import BucketPolicy
+from repro.serve.degradation import DegradationPolicy, ExitRung
+from repro.serve.errors import Overloaded
 from repro.serve.ranking_service import RankingService, ServiceConfig
 from repro.serve.tier import ServingTier, TierConfig
 from repro.serve.warmup import warmup_service
@@ -190,6 +204,159 @@ def check_bitexact(
     return {"checked": len(tier_results), "identical": identical}
 
 
+#: The degradation ladder the bench exercises: level 0 is the baseline
+#: (threshold 0.4), each rung trades NDCG for latency via the paper's own
+#: exit knobs — tighter document threshold, then tighter still plus a
+#: finite query-exit margin.
+DEGRADE_RUNGS = (
+    ExitRung("tight", threshold=0.6),
+    ExitRung(
+        "tightest", threshold=0.8,
+        query_exit=QueryExitConfig(k=10, margin=2.0),
+    ),
+)
+
+
+def _teacher_labels(svc: RankingService, q: np.ndarray) -> np.ndarray:
+    """Graded 0..4 relevance from the FULL ensemble's ranking of ``q`` —
+    the quality reference every rung is scored against (the paper's
+    NDCG@10 setup, with the exact scorer as its own teacher)."""
+    teacher = score_numpy_oracle(svc.ensemble, q)
+    order = np.argsort(-teacher, kind="stable")
+    rank = np.empty(len(q), np.int64)
+    rank[order] = np.arange(len(q))
+    labels = np.zeros(len(q), np.float32)
+    for grade, lo_r, hi_r in ((4, 0, 1), (3, 1, 4), (2, 4, 8), (1, 8, 16)):
+        labels[(rank >= lo_r) & (rank < hi_r)] = grade
+    return labels
+
+
+def run_degraded_quality(n_trees: int, smoke: bool) -> tuple[list[dict], int]:
+    """NDCG@10 of every rung on a fixed eval block, plus the jit-lowering
+    count while STEPPING rungs post-warmup (the AOT ladder guarantee)."""
+    n_eval = 4 if smoke else 16
+    n_docs = 64
+    rng = np.random.default_rng(7)
+    X = rng.normal(size=(n_eval, n_docs, N_FEATURES)).astype(np.float32)
+    mask = np.ones((n_eval, n_docs), bool)
+
+    svc = _make_service(n_trees, seed=1)
+    labels = np.stack([_teacher_labels(svc, x) for x in X])
+    svc.install_rungs(DEGRADE_RUNGS)
+    warmup_service(svc, N_FEATURES, [(n_eval, n_docs)])
+
+    Xj, mj = jnp.asarray(X), jnp.asarray(mask)
+    per_level: list[np.ndarray] = []
+    with jtu.count_jit_and_pmap_lowerings() as count:
+        for level in range(svc.n_rungs):
+            svc.set_rung(level)
+            _top, scores = svc.rank_batch(Xj, mj)
+            per_level.append(np.asarray(scores))
+    lowerings = int(count[0])
+
+    names = ["baseline"] + [r.name for r in DEGRADE_RUNGS]
+    rungs = [
+        {
+            "level": level,
+            "name": names[level],
+            "ndcg10": round(float(mean_ndcg(
+                jnp.asarray(scores), jnp.asarray(labels), mj, k=10
+            )), 4),
+        }
+        for level, scores in enumerate(per_level)
+    ]
+    return rungs, lowerings
+
+
+def run_overload(n_trees: int, smoke: bool) -> dict:
+    """Spike a degradation-enabled tier with a bounded queue far past its
+    capacity, then trickle until it recovers: the shed/miss/degrade/recover
+    numbers the fault-tolerance tentpole commits to."""
+    offered = 96 if smoke else 384
+    policy = BucketPolicy(
+        max_queries=8, max_wait_ms=2.0, min_docs=8, max_queue_depth=64
+    )
+    # Band placement: a full queue (64 deep, 8 per flush) backs requests
+    # up for several flush times (≫ 15 ms), so overload degrades; the
+    # recovery threshold must clear max_wait_ms, because trickle
+    # traffic's queue delay IS the deadline-flush wait — recovering
+    # below the flush window would be unreachable by construction.
+    dpolicy = DegradationPolicy(
+        rungs=DEGRADE_RUNGS,
+        degrade_above_ms=15.0,
+        recover_below_ms=6.0,
+        ema_alpha=0.5,
+        dwell_flushes=2,
+    )
+    svc = _make_service(n_trees)
+    tier = ServingTier(
+        svc, N_FEATURES,
+        TierConfig(
+            doc_counts=(64,), warmup=True, persistent_cache=True,
+            degradation=dpolicy,
+        ),
+        policy=policy,
+    )
+    tier.start()
+    rng = np.random.default_rng(11)
+    queries = _make_queries(rng, 32, 33, 64)
+
+    futs = []
+    max_level = 0
+    for i in range(offered):
+        try:
+            futs.append(tier.submit(queries[i % len(queries)],
+                                    deadline_ms=500.0))
+        except Overloaded:
+            pass  # counted in BatcherStats.shed_overload
+        max_level = max(max_level, tier.degradation.level)
+    for f in futs:
+        try:
+            f.result(timeout=600)
+        except Exception:
+            pass  # misses/crashes are counted typed in the stats
+        max_level = max(max_level, tier.degradation.level)
+
+    # Calm trickle until the ladder walks back to the baseline (bounded:
+    # a tier that cannot recover is itself a finding in the JSON).
+    recover_budget = time.monotonic() + (10.0 if smoke else 60.0)
+    while (
+        tier.degradation.level != 0 and time.monotonic() < recover_budget
+    ):
+        tier.rank(queries[0])
+    snap = tier.degradation.snapshot()
+    health = tier.health()
+    tier.stop()
+
+    s = tier.batcher.stats
+    return {
+        "offered": offered,
+        "completed": s.completed,
+        "shed_overload": s.shed_overload,
+        "deadline_missed": s.shed_deadline + s.expired_deadline,
+        "shed_rate": round(s.shed_rate, 4),
+        "deadline_miss_rate": round(s.deadline_miss_rate, 4),
+        "queue_depth_limit": policy.max_queue_depth,
+        "max_queue_depth_observed": s.max_queue_depth,
+        "max_level": max_level,
+        "final_level": snap["level"],
+        "recovered": snap["level"] == 0,
+        "degrade_steps": snap["degrade_steps"],
+        "recover_steps": snap["recover_steps"],
+        "worker_crashes": s.worker_crashes,
+        "health_state": health["state"],
+    }
+
+
+def run_degraded(n_trees: int, smoke: bool) -> dict:
+    rungs, lowerings = run_degraded_quality(n_trees, smoke)
+    return {
+        "overload": run_overload(n_trees, smoke),
+        "rungs": rungs,
+        "post_warmup_lowerings": lowerings,
+    }
+
+
 def main(json_path: str = JSON_PATH, smoke: bool = False) -> dict:
     n_trees = 32 if smoke else 64
     n_queries = 64 if smoke else 512
@@ -226,6 +393,7 @@ def main(json_path: str = JSON_PATH, smoke: bool = False) -> dict:
 
     serial = run_serial(n_trees, queries, doc_bucket)
     bitexact = check_bitexact(sample_results, bitexact_sample, n_trees)
+    degraded = run_degraded(n_trees, smoke)
 
     steady_p50 = streams[0]["p50_ms"]
     payload = {
@@ -259,6 +427,7 @@ def main(json_path: str = JSON_PATH, smoke: bool = False) -> dict:
         },
         "cold_start_overflow_docs": svc.stats.overflow_docs,
         "bitexact": bitexact,
+        "degraded": degraded,
     }
     with open(json_path, "w") as f:
         json.dump(payload, f, indent=2)
@@ -274,13 +443,42 @@ def main(json_path: str = JSON_PATH, smoke: bool = False) -> dict:
           f"  overflow={payload['cold_start_overflow_docs']}"
           f"  first/p50={payload['warmup']['first_to_steady_p50_ratio']}"
           f"  bitexact={bitexact['identical']}")
+    _print_degraded(degraded)
     return payload
+
+
+def _print_degraded(degraded: dict) -> None:
+    ov = degraded["overload"]
+    print(f"overload      shed={ov['shed_rate']}"
+          f"  miss={ov['deadline_miss_rate']}"
+          f"  level max={ov['max_level']} final={ov['final_level']}"
+          f"  recovered={ov['recovered']}  depth<= {ov['queue_depth_limit']}")
+    rungs = "  ".join(
+        f"{r['name']}={r['ndcg10']}" for r in degraded["rungs"]
+    )
+    print(f"rung ndcg@10  {rungs}"
+          f"  lowerings={degraded['post_warmup_lowerings']}")
 
 
 if __name__ == "__main__":
     ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
     ap.add_argument("--smoke", action="store_true",
                     help="tiny CI profile (do not commit its numbers)")
+    ap.add_argument("--overload-smoke", action="store_true",
+                    help="run ONLY the degraded/overload section, tiny — "
+                         "the nightly chaos lane's live fire exercise")
     ap.add_argument("--json", default=JSON_PATH)
     args = ap.parse_args()
+    if args.overload_smoke:
+        degraded = run_degraded(n_trees=32, smoke=True)
+        _print_degraded(degraded)
+        ov = degraded["overload"]
+        ok = (
+            ov["worker_crashes"] == 0
+            and ov["health_state"] in ("running", "stopped")
+            and ov["max_queue_depth_observed"] <= ov["queue_depth_limit"]
+            and degraded["post_warmup_lowerings"] == 0
+        )
+        print(f"overload smoke {'OK' if ok else 'FAILED'}")
+        sys.exit(0 if ok else 1)
     main(json_path=args.json, smoke=args.smoke)

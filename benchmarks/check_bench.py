@@ -31,9 +31,18 @@ Kernel bench (:func:`validate`):
 Serve bench (:func:`validate_serve`):
 
 - every section is present (``serial``, ``streams``, ``speedup``,
-  ``warmup``, ``bitexact``) with non-zero QPS and ``p99 ≥ p50`` per row;
+  ``warmup``, ``bitexact``, ``degraded``) with non-zero QPS and
+  ``p99 ≥ p50`` per row;
 - zero cold-start overflow docs (AOT warmup's no-overflow guarantee);
 - batched responses bit-exact with single-query serving;
+- the ``degraded`` section (:func:`validate_degraded`) holds the
+  fault-tolerance contracts: shed/deadline-miss rates are finite
+  fractions, the observed queue depth never exceeded the admission
+  bound, zero worker crashes and a live supervisor after the overload
+  run, per-rung NDCG@10 monotone non-increasing down the ladder (small
+  tolerance for eval-set noise), ZERO jit lowerings while stepping
+  warmed rungs, and — full runs only — recovery to the baseline rung
+  once load subsides;
 - for a FULL run additionally the acceptance ratios: ≥2× QPS at max
   concurrency vs serial, first-request latency ≤2× steady p50 (smoke
   skips only the ratio bars — tiny runs on a loaded CI box are too noisy
@@ -200,8 +209,80 @@ def validate(payload: dict) -> list[str]:
 
 REQUIRED_SERVE_SECTIONS = (
     "config", "serial", "streams", "speedup", "warmup",
-    "cold_start_overflow_docs", "bitexact",
+    "cold_start_overflow_docs", "bitexact", "degraded",
 )
+
+#: NDCG reversal allowed between adjacent rungs before the ladder is
+#: declared non-monotone — early exit freezes sentinel partial scores, so
+#: tiny lucky reversals on a finite eval set are noise, big ones a bug.
+NDCG_MONOTONE_TOL = 0.02
+
+
+def _rate(x: object) -> bool:
+    return isinstance(x, (int, float)) and math.isfinite(x) and 0.0 <= x <= 1.0
+
+
+def validate_degraded(dg: dict, smoke: bool) -> list[str]:
+    """Contract findings for the fault-tolerance (degraded-mode) section."""
+    problems: list[str] = []
+    ov = dg.get("overload")
+    if not isinstance(ov, dict):
+        return ["degraded: missing overload run"]
+    for key in ("shed_rate", "deadline_miss_rate"):
+        if not _rate(ov.get(key)):
+            problems.append(
+                f"degraded overload: {key} {ov.get(key)!r} not a finite "
+                "fraction in [0, 1]"
+            )
+    limit = ov.get("queue_depth_limit")
+    depth = ov.get("max_queue_depth_observed")
+    if isinstance(limit, int) and isinstance(depth, int) and depth > limit:
+        problems.append(
+            f"degraded overload: observed queue depth {depth} exceeded the "
+            f"admission bound {limit} — backpressure did not hold"
+        )
+    if ov.get("worker_crashes", 0) != 0:
+        problems.append(
+            f"degraded overload: {ov['worker_crashes']} worker crashes "
+            "during a crash-free load test"
+        )
+    if ov.get("health_state") not in ("running", "stopped"):
+        problems.append(
+            f"degraded overload: tier ended {ov.get('health_state')!r} "
+            "(supervision must survive an overload run)"
+        )
+
+    rungs = dg.get("rungs")
+    if not rungs:
+        problems.append("degraded: rungs sweep is empty")
+        return problems
+    prev = None
+    for r in rungs:
+        ndcg = r.get("ndcg10")
+        name = r.get("name")
+        if not (_positive_finite(ndcg) and ndcg <= 1.0):
+            problems.append(f"degraded rung {name}: bad ndcg10 {ndcg!r}")
+            continue
+        if prev is not None and ndcg > prev + NDCG_MONOTONE_TOL:
+            problems.append(
+                f"degraded rung {name}: ndcg10 {ndcg} exceeds the previous "
+                f"rung's {prev} — a CHEAPER rung cannot rank better (the "
+                "ladder is mis-ordered)"
+            )
+        prev = ndcg
+
+    low = dg.get("post_warmup_lowerings")
+    if low != 0:
+        problems.append(
+            f"degraded: {low!r} jit lowerings while stepping warmed rungs "
+            "(degrading under load must never compile)"
+        )
+    if not smoke and not ov.get("recovered"):
+        problems.append(
+            "degraded overload: tier did not recover to the baseline rung "
+            "after load subsided (full run)"
+        )
+    return problems
 
 
 def validate_serve(payload: dict) -> list[str]:
@@ -244,6 +325,9 @@ def validate_serve(payload: dict) -> list[str]:
     first = payload["warmup"].get("first_to_steady_p50_ratio")
     if not _positive_finite(first):
         problems.append(f"warmup: bad first-request ratio {first!r}")
+    problems += validate_degraded(
+        payload["degraded"], bool(payload["config"].get("smoke"))
+    )
     if problems or payload["config"].get("smoke"):
         return problems
     # Full-run acceptance bars (the committed BENCH_serve.json).

@@ -74,6 +74,19 @@ ENGINE_METHOD_NAMES: frozenset[str] = frozenset(
 )
 ENGINE_FUNCTION_SUFFIXES: tuple[str, ...] = (":warmup_service",)
 
+# --- TS007: bounded serving loops --------------------------------------
+# serve/ classes that own (or supervise) the worker loop.  Inside these
+# classes the robustness contract holds: no unbounded buffer growth (a
+# ``deque`` without ``maxlen``, a ``Queue`` without ``maxsize``, a
+# ``self.*.append/extend`` inside a ``while True`` loop — the shapes that
+# turn overload into OOM instead of typed shedding) and no blind
+# ``except:`` / ``except BaseException`` (the shape that swallows worker
+# death instead of letting the supervisor see it) without an explicit
+# ``# repro: noqa(TS007) -- why`` justification.
+WORKER_LOOP_CLASSES: frozenset[str] = frozenset(
+    {"ContinuousBatcher", "WorkerSupervisor"}
+)
+
 # --- TS006: the single-transfer contract -------------------------------
 # Host walk starts here; at most ONE explicit device→host transfer site
 # may be reachable per call.

@@ -17,6 +17,7 @@ from repro.analysis.rules.ts003_reassociation import ReassociationRule
 from repro.analysis.rules.ts004_trace_constants import TraceTimeConstantRule
 from repro.analysis.rules.ts005_thread_discipline import ThreadDisciplineRule
 from repro.analysis.rules.ts006_single_device_get import SingleDeviceGetRule
+from repro.analysis.rules.ts007_bounded_serving import BoundedServingRule
 
 
 def all_rules() -> list:
@@ -28,10 +29,12 @@ def all_rules() -> list:
         TraceTimeConstantRule(),
         ThreadDisciplineRule(),
         SingleDeviceGetRule(),
+        BoundedServingRule(),
     ]
 
 
 __all__ = [
+    "BoundedServingRule",
     "HostSyncRule",
     "TracerControlFlowRule",
     "ReassociationRule",

@@ -1,4 +1,23 @@
-from repro.serve.batching import BucketPolicy, ContinuousBatcher
+from repro.serve.batching import (
+    BatcherHooks,
+    BatcherStats,
+    BucketPolicy,
+    ContinuousBatcher,
+)
+from repro.serve.clock import Clock, MonotonicClock
+from repro.serve.degradation import (
+    DegradationController,
+    DegradationPolicy,
+    ExitRung,
+)
+from repro.serve.errors import (
+    BatcherStopped,
+    DeadlineExceeded,
+    Overloaded,
+    ServeError,
+    WorkerCrashed,
+    WorkerFailed,
+)
 from repro.serve.lm_serve import generate
 from repro.serve.placement import ServePlacement
 from repro.serve.ranking_service import (
@@ -6,18 +25,34 @@ from repro.serve.ranking_service import (
     ServiceConfig,
     ServiceStats,
 )
+from repro.serve.supervisor import SupervisorHealth, WorkerSupervisor
 from repro.serve.tier import ServingTier, TierConfig
 from repro.serve.warmup import enable_persistent_cache, warmup_service
 
 __all__ = [
+    "BatcherHooks",
+    "BatcherStats",
+    "BatcherStopped",
     "BucketPolicy",
+    "Clock",
     "ContinuousBatcher",
+    "DeadlineExceeded",
+    "DegradationController",
+    "DegradationPolicy",
+    "ExitRung",
+    "MonotonicClock",
+    "Overloaded",
     "RankingService",
+    "ServeError",
     "ServePlacement",
     "ServiceConfig",
     "ServiceStats",
     "ServingTier",
+    "SupervisorHealth",
     "TierConfig",
+    "WorkerCrashed",
+    "WorkerFailed",
+    "WorkerSupervisor",
     "enable_persistent_cache",
     "generate",
     "warmup_service",

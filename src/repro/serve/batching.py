@@ -26,6 +26,33 @@ of single queries with ragged candidate counts. The
   tie-break (descending score, ascending index) so a batched response is
   *bit-exact* with submitting the same query alone.
 
+Fault tolerance (see also :mod:`repro.serve.errors`):
+
+- **Admission control**: ``BucketPolicy.max_queue_depth`` bounds the
+  pending set; a submit against a full queue raises
+  :class:`~repro.serve.errors.Overloaded` (counted in
+  ``BatcherStats.shed_overload``) instead of growing the queue without
+  limit.
+- **Request deadlines**: ``submit(features, deadline_ms=…)`` gives the
+  request an end-to-end budget. The flush schedule subtracts the
+  *expected engine time* for the request's bucket (observed flush-time
+  EMA, seeded from the startup calibration probe) so a deadlined request
+  flushes early enough to make it; a request whose budget still expires
+  in the queue is resolved to
+  :class:`~repro.serve.errors.DeadlineExceeded` *before* the engine call
+  — an already-dead request never wastes engine work.
+- **Supervision**: the worker thread runs under a
+  :class:`~repro.serve.supervisor.WorkerSupervisor` — a crash fails the
+  in-flight bucket with :class:`~repro.serve.errors.WorkerCrashed`,
+  queued requests survive, and the worker restarts with bounded backoff.
+  Engine errors and per-request poison are contained inside
+  :meth:`ContinuousBatcher._flush` (the bucket's — or the one request's —
+  futures fail; the loop survives).
+- **Degradation**: an optional
+  :class:`~repro.serve.degradation.DegradationController` observes each
+  flush's queue delay from the worker thread and steps the service
+  through its pre-warmed exit rungs.
+
 Padding rows carry ``mask=False`` everywhere, and the engine's masked
 reductions make dead rows inert — which is what makes the bit-exactness
 claim hold: scoring is per-document, the LEAR features are per-query
@@ -35,11 +62,12 @@ query's scores do not depend on its neighbors in the block.
 
 from __future__ import annotations
 
+import collections
 import dataclasses
+import math
 import threading
-import time
 import typing
-from collections.abc import Sequence
+from collections.abc import Callable, Sequence
 from concurrent.futures import Future
 
 import numpy as np
@@ -47,26 +75,60 @@ import numpy as np
 import jax.numpy as jnp
 
 from repro.kernels.forest_score import _next_pow2
+from repro.serve.calibration import expected_engine_seconds
+from repro.serve.clock import SYSTEM_CLOCK, Clock
+from repro.serve.errors import (
+    BatcherStopped,
+    DeadlineExceeded,
+    Overloaded,
+    WorkerCrashed,
+    WorkerFailed,
+)
 from repro.serve.ranking_service import RankingService
+from repro.serve.supervisor import (
+    STATE_NEW,
+    SupervisorHealth,
+    WorkerSupervisor,
+)
 
 if typing.TYPE_CHECKING:  # annotation-only: placement is constructed by
     from numpy.typing import ArrayLike  # the tier, never by the batcher
+
+    from repro.serve.degradation import DegradationController
     from repro.serve.placement import ServePlacement
+
+#: Sliding window of completed-request latencies backing the p50/p99 in
+#: ``health()`` — bounded so introspection can never grow without limit.
+LATENCY_WINDOW = 512
+
+#: Smoothing for the per-bucket observed engine-seconds EMA that feeds
+#: deadline-aware flush scheduling.
+ENGINE_TIME_EMA_ALPHA = 0.3
+
+#: Scheduling slack subtracted from a request's deadline when placing its
+#: flush: condition-variable wakeups are not instant, and a flush timed at
+#: exactly ``expires_at - engine_time`` would race its own expiry check.
+FLUSH_SLACK_S = 5e-3
 
 
 @dataclasses.dataclass(frozen=True)
 class BucketPolicy:
-    """When to flush, and which padded shapes exist.
+    """When to flush, which padded shapes exist, and how deep the queue goes.
 
     ``max_queries`` is both the full-bucket flush trigger and the largest
     padded Q; with power-of-two padding the engine sees at most
     ``log2(max_queries)+1`` query shapes per document bucket.
+    ``max_queue_depth`` is the admission-control bound: a submit that
+    would push the TOTAL pending count past it is rejected with
+    :class:`~repro.serve.errors.Overloaded` (``None`` = unbounded, for
+    offline/batch use only — a serving deployment should always bound it).
     """
 
     max_queries: int = 8
     max_wait_ms: float = 2.0
     min_docs: int = 8
     max_docs: int = 4096
+    max_queue_depth: int | None = 1024
 
     def __post_init__(self) -> None:
         assert self.max_queries >= 1
@@ -74,6 +136,9 @@ class BucketPolicy:
             "max_queries must be a power of two", self.max_queries
         )
         assert self.min_docs >= 1 and self.max_docs >= self.min_docs
+        assert self.max_queue_depth is None or self.max_queue_depth >= 1, (
+            self.max_queue_depth
+        )
 
     def doc_bucket(self, n_docs: int) -> int:
         assert 1 <= n_docs <= self.max_docs, (n_docs, self.max_docs)
@@ -100,7 +165,10 @@ class _Pending:
     features: np.ndarray   # [n_docs, F] f32
     n_docs: int
     future: Future
-    deadline: float        # perf_counter() time at which it must flush
+    flush_at: float        # clock time by which this request must flush
+    expires_at: float      # end-to-end deadline (inf = none)
+    deadline_ms: float     # as submitted (inf = none), for error messages
+    enqueued_at: float     # clock time of submit, for latency accounting
 
 
 @dataclasses.dataclass
@@ -112,11 +180,41 @@ class BatcherStats:
     flushes_deadline: int = 0
     flushes_drain: int = 0
     padded_query_slots: int = 0   # dead rows shipped (padding overhead)
-    max_queue_depth: int = 0
+    max_queue_depth: int = 0      # high-water mark actually observed
+    shed_overload: int = 0        # submits rejected by admission control
+    shed_deadline: int = 0        # submits dead on arrival (budget <= 0)
+    expired_deadline: int = 0     # requests that timed out in the queue
+    worker_crashes: int = 0       # in-flight buckets lost to worker death
 
     @property
     def flushes(self) -> int:
         return self.flushes_full + self.flushes_deadline + self.flushes_drain
+
+    @property
+    def shed_rate(self) -> float:
+        return self.shed_overload / max(self.submitted, 1)
+
+    @property
+    def deadline_miss_rate(self) -> float:
+        return (
+            self.shed_deadline + self.expired_deadline
+        ) / max(self.submitted, 1)
+
+
+@dataclasses.dataclass
+class BatcherHooks:
+    """Fault-injection seams, exercised by ``tests/faults.py``.
+
+    ``on_flush(doc_bucket, n_reqs)`` runs on the worker thread after a
+    bucket is popped but before the engine call; an exception here escapes
+    the worker loop — i.e. it IS a worker crash, handled by the
+    supervisor. ``on_result(future)`` runs per request during
+    scatter-back; an exception poisons only that request (its future
+    fails, its bucket-mates complete).
+    """
+
+    on_flush: Callable[[int, int], None] | None = None
+    on_result: Callable[[Future], None] | None = None
 
 
 class ContinuousBatcher:
@@ -124,7 +222,10 @@ class ContinuousBatcher:
 
     Lifecycle: ``start()`` → any number of ``submit()`` (thread-safe, from
     any thread) → ``stop()`` (drains pending requests, then joins the
-    worker). ``submit`` after ``stop`` raises.
+    worker). ``submit`` after ``stop`` raises
+    :class:`~repro.serve.errors.BatcherStopped`; the stop/submit handoff
+    is atomic under the condition lock, so a submit either lands before
+    the drain snapshot (and is served) or raises — never silently lost.
     """
 
     def __init__(
@@ -133,30 +234,72 @@ class ContinuousBatcher:
         n_features: int,
         policy: BucketPolicy | None = None,
         placement: ServePlacement | None = None,
+        *,
+        clock: Clock | None = None,
+        hooks: BatcherHooks | None = None,
+        degradation: DegradationController | None = None,
+        max_restarts: int = 5,
+        backoff_base_s: float = 0.05,
+        backoff_max_s: float = 2.0,
     ) -> None:
         self.service = service
         self.n_features = int(n_features)
         self.policy = policy or BucketPolicy()
         self.placement = placement
+        self.hooks = hooks
+        self.degradation = degradation
         self.stats = BatcherStats()
+        self.max_restarts = int(max_restarts)
+        self.backoff_base_s = float(backoff_base_s)
+        self.backoff_max_s = float(backoff_max_s)
+        self._clock = clock or SYSTEM_CLOCK
         self._pending: dict[int, list[_Pending]] = {}
+        self._inflight: list[_Pending] = []
         self._cond = threading.Condition()
         self._running = False
-        self._worker: threading.Thread | None = None
+        self._failed = False
+        self._supervisor: WorkerSupervisor | None = None
+        self._last_sup_health: SupervisorHealth | None = None
+        self._latencies: collections.deque[float] = collections.deque(
+            maxlen=LATENCY_WINDOW
+        )
+        self._engine_s_ema: dict[int, float] = {}
 
     # -- client side ------------------------------------------------------
 
     def start(self) -> None:
-        assert self._worker is None, "batcher already started"
-        self._running = True
-        self._worker = threading.Thread(
-            target=self._run, name="repro-batcher", daemon=True
+        assert self._supervisor is None, "batcher already started"
+        with self._cond:
+            self._running = True
+            self._failed = False
+        self._supervisor = WorkerSupervisor(
+            self._run,
+            name="repro-batcher",
+            backoff_base_s=self.backoff_base_s,
+            backoff_max_s=self.backoff_max_s,
+            max_restarts=self.max_restarts,
+            clock=self._clock,
+            on_crash=self._on_worker_crash,
+            on_failed=self._on_worker_failed,
         )
-        self._worker.start()
+        self._supervisor.start()
 
-    def submit(self, features: ArrayLike) -> Future:
+    def submit(
+        self, features: ArrayLike, deadline_ms: float | None = None
+    ) -> Future:
         """Enqueue one query's ``[n_docs, F]`` candidate features; returns a
-        Future resolving to ``(top_idx [k], scores [n_docs])``."""
+        Future resolving to ``(top_idx [k], scores [n_docs])``.
+
+        ``deadline_ms`` is the request's END-TO-END budget from this call:
+        the batcher schedules the flush early enough to cover the expected
+        engine time, and resolves the future to
+        :class:`~repro.serve.errors.DeadlineExceeded` if the budget
+        expires while queued (a non-positive budget is dead on arrival —
+        resolved immediately, never enqueued). Raises
+        :class:`~repro.serve.errors.Overloaded` when the queue is at
+        ``max_queue_depth`` and :class:`~repro.serve.errors.BatcherStopped`
+        after (or racing) ``stop()``.
+        """
         feats = np.asarray(features, np.float32)
         assert feats.ndim == 2 and feats.shape[1] == self.n_features, (
             feats.shape, self.n_features
@@ -164,46 +307,160 @@ class ContinuousBatcher:
         n_docs = feats.shape[0]
         db = self.policy.doc_bucket(n_docs)
         fut: Future = Future()
-        req = _Pending(
-            features=feats,
-            n_docs=n_docs,
-            future=fut,
-            deadline=time.perf_counter() + self.policy.max_wait_ms / 1e3,
-        )
+        now = self._clock.now()
         with self._cond:
-            assert self._running, "batcher is not running"
-            self._pending.setdefault(db, []).append(req)
+            if self._failed:
+                raise WorkerFailed(
+                    "serving worker exhausted its restart budget"
+                )
+            if not self._running:
+                raise BatcherStopped("batcher is not running")
             self.stats.submitted += 1
+            if deadline_ms is not None and deadline_ms <= 0.0:
+                # Dead on arrival: resolve without ever queueing — the
+                # engine must not be asked to score an expired request.
+                self.stats.shed_deadline += 1
+                self.stats.failed += 1
+                fut.set_exception(DeadlineExceeded(float(deadline_ms), 0.0))
+                return fut
             depth = sum(len(v) for v in self._pending.values())
-            self.stats.max_queue_depth = max(self.stats.max_queue_depth, depth)
+            limit = self.policy.max_queue_depth
+            if limit is not None and depth >= limit:
+                self.stats.shed_overload += 1
+                raise Overloaded(depth, limit)
+            flush_at = now + self.policy.max_wait_ms / 1e3
+            expires_at = math.inf
+            if deadline_ms is not None:
+                expires_at = now + float(deadline_ms) / 1e3
+                # Flush early enough that the engine call itself fits in
+                # the remaining budget (estimated from the calibrated
+                # cost model / observed flush times, plus wakeup slack),
+                # clamped at "now" — an already-tight request flushes as
+                # soon as possible.
+                budget = self._engine_seconds_estimate(db) + FLUSH_SLACK_S
+                flush_at = min(flush_at, max(now, expires_at - budget))
+            req = _Pending(
+                features=feats,
+                n_docs=n_docs,
+                future=fut,
+                flush_at=flush_at,
+                expires_at=expires_at,
+                deadline_ms=(
+                    math.inf if deadline_ms is None else float(deadline_ms)
+                ),
+                enqueued_at=now,
+            )
+            self._pending.setdefault(db, []).append(req)
+            self.stats.max_queue_depth = max(
+                self.stats.max_queue_depth, depth + 1
+            )
             self._cond.notify()
         return fut
 
     def stop(self) -> None:
-        """Drain everything still queued, then stop the worker."""
+        """Drain everything still queued, then stop the worker.
+
+        The handoff is atomic: under the condition lock the batcher flips
+        to not-running AND snapshots the pending map, so a concurrent
+        ``submit`` either landed in the snapshot (and is drained below) or
+        observes not-running and raises — no request can slip into a dict
+        nobody will ever flush."""
         with self._cond:
-            if not self._running:
-                return
             self._running = False
-            self._cond.notify()
-        self._worker.join()
-        self._worker = None
+            drain, self._pending = self._pending, {}
+            self._cond.notify_all()
+        if self._supervisor is not None:
+            self._supervisor.stop()
+            self._last_sup_health = self._supervisor.health()
+            self._supervisor = None
         # Whatever the worker left behind (requests that arrived in its
-        # final instants) flushes on the caller's thread.
-        for db, reqs in sorted(self._pending.items()):
-            if reqs:
+        # final instants) flushes on the caller's thread — in engine-sized
+        # chunks: a drained bucket can hold MORE than max_queries (the
+        # worker never popped it), and a flush must never exceed the
+        # padded block it allocates.
+        step = self.policy.max_queries
+        for db, reqs in sorted(drain.items()):
+            for i in range(0, len(reqs), step):
                 self.stats.flushes_drain += 1
-                self._flush(db, reqs)
-        self._pending.clear()
+                self._flush(db, reqs[i:i + step])
+
+    def health(self) -> dict:
+        """Liveness snapshot: supervisor state + queue depth + latency
+        percentiles over the last :data:`LATENCY_WINDOW` completions."""
+        sup = (
+            self._supervisor.health()
+            if self._supervisor is not None
+            else self._last_sup_health or SupervisorHealth(STATE_NEW, 0, 0, None)
+        )
+        with self._cond:
+            depth = sum(len(v) for v in self._pending.values())
+            lat = list(self._latencies)
+        p50 = p99 = 0.0
+        if lat:
+            arr = np.asarray(lat, np.float64) * 1e3
+            p50 = float(np.percentile(arr, 50))
+            p99 = float(np.percentile(arr, 99))
+        return {
+            "state": sup.state,
+            "restarts": sup.restarts,
+            "crashes": sup.crashes,
+            "last_error": sup.last_error,
+            "queue_depth": depth,
+            "p50_ms": p50,
+            "p99_ms": p99,
+        }
+
+    # -- supervision callbacks (guard thread) -----------------------------
+
+    def _on_worker_crash(self, exc: BaseException) -> None:
+        """Worker died mid-bucket: fail exactly the in-flight requests.
+        Queued requests stay queued and are served after the restart."""
+        with self._cond:
+            inflight, self._inflight = self._inflight, []
+            self.stats.worker_crashes += 1
+        err = WorkerCrashed(f"serving worker died: {exc!r}")
+        err.__cause__ = exc
+        for r in inflight:
+            self._fail(r, err)
+
+    def _on_worker_failed(self, exc: BaseException) -> None:
+        """Supervisor gave up: nothing will ever drain the queue, so fail
+        every pending and in-flight future and refuse new submits."""
+        with self._cond:
+            self._failed = True
+            pending, self._pending = self._pending, {}
+            inflight, self._inflight = self._inflight, []
+            self._cond.notify_all()
+        err = WorkerFailed(f"serving worker restart budget exhausted: {exc!r}")
+        err.__cause__ = exc
+        for reqs in pending.values():
+            for r in reqs:
+                self._fail(r, err)
+        for r in inflight:
+            self._fail(r, err)
 
     # -- worker side ------------------------------------------------------
+
+    def _engine_seconds_estimate(self, db: int) -> float:
+        """Expected wall time of one engine flush at doc bucket ``db``:
+        the observed per-bucket EMA once traffic exists, else the
+        calibration probe's prior (0 when neither is available)."""
+        ema = self._engine_s_ema.get(db)
+        if ema is not None:
+            return ema
+        ensemble = getattr(self.service, "ensemble", None)
+        if ensemble is None:
+            return 0.0
+        return expected_engine_seconds(
+            self.policy.max_queries * db, ensemble.n_trees
+        )
 
     def _take_ready(
         self, now: float
     ) -> tuple[int | None, list[_Pending] | None, str | None, float | None]:
         """Pop the bucket to flush now, with its trigger, or the earliest
-        future deadline. Full buckets beat deadline flushes (they amortize
-        best); among deadline-ripe buckets the oldest request wins."""
+        future flush time. Full buckets beat timer flushes (they amortize
+        best); among timer-ripe buckets the most urgent request wins."""
         for db, reqs in sorted(self._pending.items()):
             if len(reqs) >= self.policy.max_queries:
                 self._pending[db] = reqs[self.policy.max_queries:]
@@ -212,7 +469,7 @@ class ContinuousBatcher:
         for db, reqs in self._pending.items():
             if not reqs:
                 continue
-            t = min(r.deadline for r in reqs)
+            t = min(r.flush_at for r in reqs)
             if ripe_t is None or t < ripe_t:
                 ripe_db, ripe_t = db, t
         if ripe_t is not None and ripe_t <= now:
@@ -225,44 +482,116 @@ class ContinuousBatcher:
             with self._cond:
                 db = reqs = None
                 while True:
-                    now = time.perf_counter()
+                    now = self._clock.now()
                     db, reqs, trigger, next_t = self._take_ready(now)
                     if reqs is not None:
                         break
                     if not self._running:
                         return  # leftovers flush in stop()
-                    self._cond.wait(
-                        timeout=None if next_t is None else max(next_t - now, 0.0)
+                    self._clock.wait(
+                        self._cond,
+                        None if next_t is None else max(next_t - now, 0.0),
                     )
+                self._inflight = reqs
+                queue_delay = now - min(r.enqueued_at for r in reqs)
             if trigger == "full":
                 self.stats.flushes_full += 1
             else:
                 self.stats.flushes_deadline += 1
+            if self.degradation is not None:
+                # Worker thread: the only place allowed to step the
+                # service through its pre-warmed degradation rungs.
+                self.degradation.observe(queue_delay)
+            hooks = self.hooks
+            if hooks is not None and hooks.on_flush is not None:
+                # Outside _flush's containment on purpose: an injected
+                # failure here IS a worker crash (supervisor territory).
+                hooks.on_flush(db, len(reqs))
+            t0 = self._clock.now()
             self._flush(db, reqs)
+            elapsed = self._clock.now() - t0
+            with self._cond:
+                self._inflight = []
+                a = ENGINE_TIME_EMA_ALPHA
+                prev = self._engine_s_ema.get(db)
+                self._engine_s_ema[db] = (
+                    elapsed if prev is None else (1 - a) * prev + a * elapsed
+                )
 
     def _flush(self, db: int, reqs: list[_Pending]) -> None:
-        """Score one padded block and scatter per-query results back."""
-        try:
-            qb = self.policy.query_bucket(len(reqs))
-            X = np.zeros((qb, db, self.n_features), np.float32)
-            mask = np.zeros((qb, db), bool)
-            for i, r in enumerate(reqs):
+        """Score one padded block and scatter per-query results back.
+
+        Failure containment, tightest scope first: an expired request is
+        resolved without engine work; a request that cannot even be packed
+        fails alone (its block row stays masked dead — inert to the
+        engine); an engine error fails this bucket's futures but returns
+        normally (the worker loop survives); a per-request scatter error
+        (injected poison, cancelled future) fails that request alone.
+        Anything escaping this method is a worker crash for the
+        supervisor.
+        """
+        now = self._clock.now()
+        live: list[_Pending | None] = []
+        for r in reqs:
+            if r.expires_at <= now:
+                self._expire(r, now)
+            else:
+                live.append(r)
+        if not live:
+            return  # the whole bucket died in the queue: no engine launch
+        qb = self.policy.query_bucket(len(live))
+        X = np.zeros((qb, db, self.n_features), np.float32)
+        mask = np.zeros((qb, db), bool)
+        for i, r in enumerate(live):
+            try:
                 X[i, : r.n_docs] = r.features
                 mask[i, : r.n_docs] = True
-            self.stats.padded_query_slots += qb - len(reqs)
+            except Exception as e:
+                # A malformed request fails alone; its dead row is inert.
+                mask[i] = False
+                self._fail(r, e)
+                live[i] = None
+        self.stats.padded_query_slots += qb - len(live)
+        try:
             _, scores = self.service.rank_batch(
                 jnp.asarray(X), jnp.asarray(mask), placement=self.placement
             )
             scores = np.asarray(scores)
-            for i, r in enumerate(reqs):
+        except Exception as e:
+            # Engine failure: this bucket's futures must not hang, and the
+            # worker loop must survive to serve the next bucket.
+            for r in live:
+                if r is not None:
+                    self._fail(r, e)
+            return
+        hooks = self.hooks
+        for i, r in enumerate(live):
+            if r is None:
+                continue
+            try:
+                if hooks is not None and hooks.on_result is not None:
+                    hooks.on_result(r.future)
                 s = scores[i, : r.n_docs].copy()
                 k = min(self.service.top_k, r.n_docs)
                 # lax.top_k order: descending score, ascending index.
                 top = np.lexsort((np.arange(r.n_docs), -s))[:k]
                 r.future.set_result((top.astype(np.int32), s))
                 self.stats.completed += 1
-        except BaseException as e:  # noqa: BLE001 — futures must not hang
-            for r in reqs:
-                if not r.future.done():
-                    r.future.set_exception(e)
-                    self.stats.failed += 1
+                self._latencies.append(self._clock.now() - r.enqueued_at)
+            except Exception as e:
+                # Poisoned scatter: one request fails, bucket-mates don't.
+                self._fail(r, e)
+
+    # -- resolution helpers -----------------------------------------------
+
+    def _fail(self, r: _Pending, exc: BaseException) -> None:
+        if not r.future.done():
+            r.future.set_exception(exc)
+            self.stats.failed += 1
+
+    def _expire(self, r: _Pending, now: float) -> None:
+        self.stats.expired_deadline += 1
+        self._fail(
+            r,
+            DeadlineExceeded(r.deadline_ms, (now - r.enqueued_at) * 1e3),
+        )

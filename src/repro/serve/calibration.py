@@ -133,6 +133,24 @@ def last_calibration() -> dict | None:
         if _CALIBRATION_CACHE else None
 
 
+def expected_engine_seconds(n_docs: int, n_trees: int) -> float:
+    """Prior estimate of one engine call's wall time, in seconds.
+
+    Extrapolates the calibration probe's per-doc·tree slope to a full
+    block of ``n_docs × n_trees`` work plus one launch overhead — the
+    batcher's deadline-aware flush scheduler uses this as the cold-start
+    prior before it has observed real flush times for a bucket. Returns
+    ``0.0`` when no probe has run in this process (the scheduler then
+    assumes the engine is instant, i.e. legacy flush timing).
+    """
+    cal = last_calibration()
+    if cal is None:
+        return 0.0
+    per_us = float(cal["per_doctree_us"])
+    overhead_trees = float(cal["launch_overhead_trees"])
+    return max(per_us * (n_docs * n_trees + overhead_trees), 0.0) * 1e-6
+
+
 def _record(path: str, payload: dict) -> None:
     """Merge the calibration under ``"launch_calibration"``; never raise —
     a read-only checkout or a corrupt target file must not take the

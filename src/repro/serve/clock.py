@@ -1,0 +1,55 @@
+"""Injectable time source for the serving tier.
+
+Everything in ``serve/`` that reads the wall clock or sleeps on a
+condition variable goes through a :class:`Clock`, so the fault-injection
+harness (``tests/faults.py``) can substitute a fake clock and drive
+deadline/backoff logic deterministically — a chaos test advances virtual
+time instead of really sleeping, which keeps the whole suite fast and
+flake-free.
+
+The production implementation, :class:`MonotonicClock`, is
+``time.perf_counter`` plus real condition waits; it is the default
+everywhere and costs nothing over calling ``perf_counter`` directly.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+import typing
+
+
+@typing.runtime_checkable
+class Clock(typing.Protocol):
+    """Monotonic time + interruptible waiting, as one injectable seam."""
+
+    def now(self) -> float:
+        """Seconds on a monotonic axis (``time.perf_counter`` semantics)."""
+        ...
+
+    def wait(self, cond: threading.Condition, timeout: float | None) -> bool:
+        """Wait on ``cond`` (which the caller holds) for up to ``timeout``
+        seconds (``None`` = forever). Returns True if notified."""
+        ...
+
+    def sleep(self, cond: threading.Condition, seconds: float) -> None:
+        """Sleep up to ``seconds``, interruptibly: acquires ``cond`` and
+        waits on it so a notify (e.g. stop()) wakes the sleeper early."""
+        ...
+
+
+class MonotonicClock:
+    """The real clock: ``perf_counter`` + genuine condition waits."""
+
+    def now(self) -> float:
+        return time.perf_counter()
+
+    def wait(self, cond: threading.Condition, timeout: float | None) -> bool:
+        return cond.wait(timeout=timeout)
+
+    def sleep(self, cond: threading.Condition, seconds: float) -> None:
+        with cond:
+            cond.wait(timeout=max(seconds, 0.0))
+
+
+SYSTEM_CLOCK = MonotonicClock()

@@ -1,0 +1,200 @@
+"""Load-adaptive degradation: trade NDCG for latency with LEAR's own knobs.
+
+The paper's exit thresholds are *budget* knobs — tighter thresholds, a
+finite query-exit margin, or a more aggressive dense gate all buy latency
+at a bounded quality cost. Under overload those are exactly the levers a
+serving tier should pull before shedding traffic. This module makes that
+a first-class policy:
+
+- :class:`ExitRung` — one degradation step, expressed as overrides of the
+  service's exit knobs (LEAR continue ``threshold``, a
+  :class:`~repro.core.strategies.QueryExitConfig` with a finite margin,
+  a higher-pruning ``dense_keep_frac`` for the hybrid gate). ``None``
+  fields inherit the baseline value.
+- :class:`DegradationPolicy` — the ordered rung ladder plus the
+  hysteresis band: degrade one rung when the queue-delay EMA exceeds
+  ``degrade_above_ms``, recover one rung when it falls below
+  ``recover_below_ms`` (strictly lower — no flapping at a single
+  threshold), with at least ``dwell_flushes`` engine flushes between
+  moves so one spiky batch cannot ping-pong the ladder.
+- :class:`DegradationController` — the runtime: owns the EMA and the
+  current level, and calls :meth:`RankingService.set_rung` from the
+  batcher's worker thread (the only thread allowed to touch the engine).
+
+Every rung is installed up front (:meth:`RankingService.install_rungs`)
+and AOT-compiled by :func:`repro.serve.warmup.warmup_service`, so
+stepping the ladder at peak load swaps pre-built strategy closures and
+hits a hot step cache — degrading never triggers a jit.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+import typing
+
+from repro.core.strategies import QueryExitConfig
+from repro.serve.clock import SYSTEM_CLOCK, Clock
+
+if typing.TYPE_CHECKING:  # annotation-only: avoids a serve-package cycle
+    from repro.serve.ranking_service import RankingService
+
+
+@dataclasses.dataclass(frozen=True)
+class ExitRung:
+    """One degradation step: overrides of the service's exit knobs.
+
+    ``None`` inherits the baseline service configuration, so a rung names
+    only what it tightens. ``threshold`` replaces the LEAR continue
+    threshold at every tree stage (higher = fewer survivors = cheaper);
+    ``query_exit`` replaces the service's query-exit config (typically a
+    finite margin); ``dense_keep_frac`` re-points the hybrid dense gate at
+    :func:`repro.core.strategies.dense_keep_fraction` with a smaller keep
+    fraction (ignored unless the service has a dense stage — installing
+    such a rung on an all-trees service is an error).
+    """
+
+    name: str
+    threshold: float | None = None
+    query_exit: QueryExitConfig | None = None
+    dense_keep_frac: float | None = None
+
+    def __post_init__(self) -> None:
+        assert self.name, "rung needs a name"
+        assert self.threshold is None or 0.0 <= self.threshold <= 1.0, (
+            self.threshold
+        )
+        assert self.dense_keep_frac is None or (
+            0.0 < self.dense_keep_frac <= 1.0
+        ), self.dense_keep_frac
+
+
+@dataclasses.dataclass(frozen=True)
+class DegradationPolicy:
+    """The rung ladder + when to move on it.
+
+    ``rungs`` are ordered cheapest-last; level 0 is always the baseline
+    service configuration (implicit — not listed here). The queue-delay
+    EMA (seconds a flushed bucket's oldest request waited) is the load
+    signal: above ``degrade_above_ms`` step one rung down the ladder,
+    below ``recover_below_ms`` step one rung back up. The two thresholds
+    form the hysteresis band; ``dwell_flushes`` is the minimum number of
+    observations between consecutive moves.
+    """
+
+    rungs: tuple[ExitRung, ...]
+    degrade_above_ms: float = 10.0
+    recover_below_ms: float = 2.0
+    ema_alpha: float = 0.2
+    dwell_flushes: int = 4
+
+    def __post_init__(self) -> None:
+        object.__setattr__(self, "rungs", tuple(self.rungs))
+        assert len(self.rungs) >= 1, "need at least one degradation rung"
+        assert 0.0 <= self.recover_below_ms < self.degrade_above_ms, (
+            "hysteresis band must be non-empty",
+            self.recover_below_ms, self.degrade_above_ms,
+        )
+        assert 0.0 < self.ema_alpha <= 1.0, self.ema_alpha
+        assert self.dwell_flushes >= 1, self.dwell_flushes
+
+
+class DegradationController:
+    """Runtime of one :class:`DegradationPolicy` over one service.
+
+    ``observe`` MUST be called from the batcher's worker thread only — it
+    may call :meth:`RankingService.set_rung`, and the engine's adaptive
+    state is single-threaded by design. ``snapshot`` is safe from any
+    thread (operator introspection).
+    """
+
+    def __init__(
+        self,
+        service: RankingService,
+        policy: DegradationPolicy,
+        clock: Clock | None = None,
+    ) -> None:
+        self.service = service
+        self.policy = policy
+        self.clock = clock or SYSTEM_CLOCK
+        self._lock = threading.Lock()
+        self._level = 0
+        self._delay_ema_ms: float | None = None
+        self._since_move = policy.dwell_flushes  # free to move immediately
+        self._degrade_steps = 0
+        self._recover_steps = 0
+
+    @property
+    def n_levels(self) -> int:
+        return len(self.policy.rungs) + 1  # + the implicit baseline
+
+    @property
+    def level(self) -> int:
+        with self._lock:
+            return self._level
+
+    def install(self) -> None:
+        """Install the full rung ladder (baseline + policy rungs) on the
+        service. Called by the tier before warmup so every rung's step is
+        AOT-compiled."""
+        self.service.install_rungs(self.policy.rungs)
+
+    def observe(self, queue_delay_s: float) -> int:
+        """Fold one flush's queue delay into the EMA and move the ladder
+        if the hysteresis band says so. Returns the (possibly new) level.
+        Worker thread only."""
+        delay_ms = max(float(queue_delay_s), 0.0) * 1e3
+        p = self.policy
+        with self._lock:
+            if self._delay_ema_ms is None:
+                self._delay_ema_ms = delay_ms
+            else:
+                self._delay_ema_ms = (
+                    (1.0 - p.ema_alpha) * self._delay_ema_ms
+                    + p.ema_alpha * delay_ms
+                )
+            self._since_move += 1
+            move = 0
+            if self._since_move >= p.dwell_flushes:
+                if (
+                    self._delay_ema_ms > p.degrade_above_ms
+                    and self._level < self.n_levels - 1
+                ):
+                    move = 1
+                elif (
+                    self._delay_ema_ms < p.recover_below_ms
+                    and self._level > 0
+                ):
+                    move = -1
+            if move:
+                self._level += move
+                self._since_move = 0
+                if move > 0:
+                    self._degrade_steps += 1
+                else:
+                    self._recover_steps += 1
+            level = self._level
+        if move:
+            # Outside the lock: set_rung swaps closures on the service;
+            # snapshot() readers must not block on the engine.
+            self.service.set_rung(level)
+        return level
+
+    def snapshot(self) -> dict:
+        """Operator view: current rung, smoothed delay, transition counts."""
+        with self._lock:
+            level = self._level
+            rung = (
+                "baseline" if level == 0
+                else self.policy.rungs[level - 1].name
+            )
+            return {
+                "level": level,
+                "rung": rung,
+                "n_levels": self.n_levels,
+                "queue_delay_ema_ms": self._delay_ema_ms,
+                "degrade_steps": self._degrade_steps,
+                "recover_steps": self._recover_steps,
+                "degrade_above_ms": self.policy.degrade_above_ms,
+                "recover_below_ms": self.policy.recover_below_ms,
+            }

@@ -1,0 +1,68 @@
+"""Typed failure modes for the serving tier.
+
+Every way a request can fail short of an engine bug gets its own exception
+type, so callers can branch on *policy* (retry, shed to a fallback ranker,
+return a cached page) instead of string-matching messages:
+
+- :class:`Overloaded` — admission control rejected the submit because the
+  pending queue is at ``BucketPolicy.max_queue_depth``. Raised
+  synchronously from ``submit`` (the request never enters the queue).
+- :class:`DeadlineExceeded` — the request's end-to-end deadline expired
+  before the engine would have finished it. Set on the Future (also a
+  ``TimeoutError`` so generic timeout handling catches it).
+- :class:`BatcherStopped` — submit raced a ``stop()``; the batcher is
+  draining or drained. Raised synchronously.
+- :class:`WorkerCrashed` — the worker thread died mid-flight (engine
+  exception or injected fault); in-flight futures are failed with this
+  while the supervisor restarts the worker. Requests submitted after the
+  restart are served normally.
+- :class:`WorkerFailed` — the supervisor exhausted its restart budget and
+  gave up; the tier is unhealthy until restarted by the operator.
+"""
+
+from __future__ import annotations
+
+
+class ServeError(RuntimeError):
+    """Base class for every typed serving-tier failure."""
+
+
+class Overloaded(ServeError):
+    """Admission control: the pending queue is full; the request was shed.
+
+    ``depth`` is the queue depth observed at rejection time and ``limit``
+    the configured ``BucketPolicy.max_queue_depth``.
+    """
+
+    def __init__(self, depth: int, limit: int) -> None:
+        super().__init__(
+            f"serving queue overloaded: depth {depth} >= limit {limit}"
+        )
+        self.depth = depth
+        self.limit = limit
+
+
+class DeadlineExceeded(ServeError, TimeoutError):
+    """The request's end-to-end deadline expired before scoring."""
+
+    def __init__(self, deadline_ms: float, waited_ms: float) -> None:
+        super().__init__(
+            f"request deadline of {deadline_ms:.3f} ms exceeded "
+            f"(waited {waited_ms:.3f} ms)"
+        )
+        self.deadline_ms = deadline_ms
+        self.waited_ms = waited_ms
+
+
+class BatcherStopped(ServeError):
+    """submit() raced or followed stop(); the batcher accepts no work."""
+
+
+class WorkerCrashed(ServeError):
+    """The worker thread died with this request in flight; it will be
+    restarted by the supervisor. The request itself is lost."""
+
+
+class WorkerFailed(ServeError):
+    """The supervisor gave up restarting the worker (restart budget
+    exhausted); the tier needs operator attention."""

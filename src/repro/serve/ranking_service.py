@@ -47,6 +47,7 @@ the ``sentinel_fn`` / ``full_fn`` hooks — see examples/cascade_retrieval.py.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import typing
 import warnings
 from collections.abc import Callable, Sequence
@@ -57,12 +58,13 @@ import jax.numpy as jnp
 if typing.TYPE_CHECKING:  # annotation-only: avoids a serve-package cycle
     import numpy as np
 
+    from repro.serve.degradation import ExitRung
     from repro.serve.placement import ServePlacement
 
 from repro.core.cascade import CascadeRanker, bucket_capacity
 from repro.core.lear import LearClassifier, augment_features
 from repro.core.stage import DenseStage, EngineConfig, TreeStage
-from repro.core.strategies import QueryExitConfig
+from repro.core.strategies import QueryExitConfig, dense_keep_fraction
 from repro.forest.ensemble import TreeEnsemble
 from repro.kernels.ops import ENGINE_BLOCK_B
 from repro.metrics.speedup import (
@@ -144,6 +146,26 @@ class _BucketAdaptState:
     ema: list[float] | None = None  # smoothed survivors per stage
     tail_skip: float | None = None  # smoothed P(batch skipped the gated
     #   tail launch) — feeds the cost model's query_exit_rate discount
+
+
+@dataclasses.dataclass(frozen=True)
+class _RungState:
+    """One installed degradation rung, fully materialized.
+
+    Everything a rung changes is pre-built at install time — strategy
+    closures with the rung's threshold baked in, a rung-specific
+    :class:`DenseStage` when the dense keep fraction changes — so
+    :meth:`RankingService.set_rung` is a pure pointer swap: the same
+    closure objects every time (they hash by identity) means every rung
+    maps to ONE stable :class:`EngineConfig` and therefore ONE compiled
+    step, warmed once by :func:`repro.serve.warmup.warmup_service`.
+    """
+
+    name: str
+    threshold: float
+    strategies: tuple[Callable[..., jax.Array], ...]
+    query_exit: QueryExitConfig | None
+    dense_stage: DenseStage | None
 
 
 @dataclasses.dataclass
@@ -266,11 +288,18 @@ class RankingService:
         )
         self.stage_strategies = [self._make_strategy(c) for c in stages]
 
-        # Stage tuples are cached on the strategy identities (see
-        # _engine_stage_tuple); the accounting view is fixed at
+        # Stage tuples are cached per (strategy identities, dense stage)
+        # (see _engine_stage_tuple); the accounting view is fixed at
         # construction. For a hybrid service the dense gate is a
-        # zero-sentinel stage charging cost_trees per candidate.
-        self._stages_cache: tuple[tuple, tuple] | None = None
+        # zero-sentinel stage charging cost_trees per candidate. The cache
+        # is a dict so degradation rungs (each with its own closures and
+        # possibly its own dense stage) keep their stage tuples — and
+        # therefore their EngineConfig identity — stable across swaps.
+        self._stages_cache: dict[tuple, tuple] = {}
+        # Degradation rung ladder: None until install_rungs; level 0 is
+        # always the baseline configuration.
+        self._rungs: tuple[_RungState, ...] | None = None
+        self._rung_level = 0
         if self.dense_stage is not None:
             self._acct_sentinels = (0, *self.sentinels)
             self._acct_classifier_trees = (
@@ -326,41 +355,130 @@ class RankingService:
 
     def _engine_stage_tuple(self) -> tuple:
         """The EngineConfig stage list, rebuilt only when the strategy
-        callables change (tests swap ``stage_strategies`` in place).
+        callables (tests swap ``stage_strategies`` in place) or the dense
+        stage (degradation rungs swap it) change.
 
         Caching on the strategy identities keeps the per-batch
         EngineConfigs structurally equal — the TreeStage objects (and the
         closures inside, which hash by identity) are the SAME objects
-        every batch, so the engine's compiled-step cache stays hot.
+        every batch, so the engine's compiled-step cache stays hot. A
+        dict (not a single slot) so rung switching under load revisits
+        cached tuples instead of thrashing one entry.
         """
-        strategies = tuple(self.stage_strategies)
-        if self._stages_cache is None or self._stages_cache[0] != strategies:
+        key = (tuple(self.stage_strategies), self.dense_stage)
+        stages = self._stages_cache.get(key)
+        if stages is None:
             tree_stages = tuple(
                 TreeStage(
                     sentinel=c.sentinel,
                     strategy=strat,
                     classifier_trees=float(c.n_trees),
                 )
-                for c, strat in zip(self.stage_classifiers, strategies)
+                for c, strat in zip(self.stage_classifiers, key[0])
             )
             stages = (
                 (self.dense_stage, *tree_stages)
                 if self.dense_stage is not None else tree_stages
             )
-            self._stages_cache = (strategies, stages)
-        return self._stages_cache[1]
+            self._stages_cache[key] = stages
+        return stages
 
-    def _make_strategy(self, clf: LearClassifier) -> Callable[..., jax.Array]:
+    def _make_strategy(
+        self, clf: LearClassifier, threshold: float | None = None
+    ) -> Callable[..., jax.Array]:
         # NOTE: the strategy is traced into the cached jitted cascade step,
-        # so ``self.threshold`` is baked in at trace time — construct a new
-        # service (or clear the cascade's step cache) to change it.
+        # so the threshold is baked in at trace time — ``None`` reads
+        # ``self.threshold`` at trace time (the construction-time default);
+        # degradation rungs pass their own explicit threshold and get their
+        # own closure, hence their own compiled step.
         def strategy(partial, mask, features=None):
             aug = augment_features(features, partial, mask)
+            th = self.threshold if threshold is None else threshold
             return clf.continue_mask(
-                aug, mask, self.threshold, use_kernel=self.use_kernel_classifier
+                aug, mask, th, use_kernel=self.use_kernel_classifier
             )
 
         return strategy
+
+    # -- degradation rungs -------------------------------------------------
+
+    @property
+    def n_rungs(self) -> int:
+        """Installed rung count (baseline included); 0 = no ladder."""
+        return len(self._rungs) if self._rungs is not None else 0
+
+    @property
+    def rung_level(self) -> int:
+        return self._rung_level
+
+    @property
+    def rung_names(self) -> tuple[str, ...]:
+        return tuple(r.name for r in self._rungs or ())
+
+    def install_rungs(self, rungs: Sequence[ExitRung]) -> None:
+        """Materialize the degradation ladder: level 0 is the CURRENT
+        configuration (baseline), level ``i`` applies ``rungs[i-1]``'s
+        overrides. Each rung's strategy closures (and dense stage, when
+        ``dense_keep_frac`` is overridden) are built exactly once here, so
+        :meth:`set_rung` swaps stable objects and every rung owns one
+        compiled engine step. Install before warmup — the warmup pass
+        AOT-compiles every installed rung per bucket."""
+        assert self._rungs is None, "rungs already installed"
+        assert self._rung_level == 0
+        ladder = [_RungState(
+            name="baseline",
+            threshold=self.threshold,
+            strategies=tuple(self.stage_strategies),
+            query_exit=self.query_exit,
+            dense_stage=self.dense_stage,
+        )]
+        for rung in rungs:
+            th = rung.threshold if rung.threshold is not None else self.threshold
+            if rung.threshold is None:
+                strategies = ladder[0].strategies  # same closures, same step
+            else:
+                strategies = tuple(
+                    self._make_strategy(c, th)
+                    for c in self.stage_classifiers
+                )
+            dense = self.dense_stage
+            if rung.dense_keep_frac is not None:
+                assert dense is not None, (
+                    "rung overrides dense_keep_frac but the service has "
+                    "no dense stage", rung.name,
+                )
+                dense = dataclasses.replace(
+                    dense,
+                    policy=functools.partial(
+                        dense_keep_fraction,
+                        keep_frac=float(rung.dense_keep_frac),
+                    ),
+                )
+            ladder.append(_RungState(
+                name=rung.name,
+                threshold=th,
+                strategies=strategies,
+                query_exit=(
+                    rung.query_exit if rung.query_exit is not None
+                    else self.query_exit
+                ),
+                dense_stage=dense,
+            ))
+        self._rungs = tuple(ladder)
+
+    def set_rung(self, level: int) -> None:
+        """Swap the active exit configuration to ``level`` of the installed
+        ladder. Pointer swaps only — no tracing, no allocation. MUST be
+        called from the thread that owns the engine (the batcher worker):
+        the next ``rank_batch`` picks up the rung atomically."""
+        assert self._rungs is not None, "install_rungs first"
+        assert 0 <= level < len(self._rungs), (level, len(self._rungs))
+        r = self._rungs[level]
+        self._rung_level = level
+        self.threshold = r.threshold
+        self.stage_strategies = list(r.strategies)
+        self.query_exit = r.query_exit
+        self.dense_stage = r.dense_stage
 
     def _cold_start_estimate(self, n_docs: int) -> int:
         # Cold start: assume a 40% survivor rate at EVERY stage

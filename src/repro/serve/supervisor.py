@@ -1,0 +1,196 @@
+"""Worker supervision: detect thread death, restart with bounded backoff.
+
+The continuous batcher's single worker thread owns every engine call; if
+that thread dies, an unsupervised tier silently stops serving — submits
+keep queueing, futures never resolve, and nothing tells the operator.
+:class:`WorkerSupervisor` closes that hole:
+
+- The worker body (``target``) runs inside a **guard thread** that treats
+  a normal return as a clean exit and any exception as a crash.
+- On crash the supervisor invokes ``on_crash(exc)`` (the batcher uses
+  this to fail every in-flight future with a typed
+  :class:`repro.serve.errors.WorkerCrashed` — no request ever hangs),
+  then restarts the worker after an exponential backoff
+  (``backoff_base_s · 2^k``, capped at ``backoff_max_s``) so a
+  crash-looping engine cannot spin the CPU.
+- After ``max_restarts`` consecutive crashes the supervisor gives up:
+  state becomes ``"failed"``, ``on_failed(exc)`` fires, and pending work
+  is failed by the owner rather than waiting forever.
+- A successful run (the worker staying alive until clean stop) does not
+  reset the restart counter — the budget bounds total flapping per
+  supervisor lifetime, which is what an operator reasons about.
+
+Backoff sleeps go through the injectable :class:`repro.serve.clock.Clock`
+and are interruptible: ``stop()`` wakes a sleeping supervisor immediately.
+
+``health()`` returns a :class:`SupervisorHealth` snapshot; the tier folds
+it into :meth:`repro.serve.tier.ServingTier.health`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+from collections.abc import Callable
+
+from repro.serve.clock import SYSTEM_CLOCK, Clock
+
+STATE_NEW = "new"
+STATE_RUNNING = "running"
+STATE_BACKOFF = "backoff"
+STATE_STOPPED = "stopped"
+STATE_FAILED = "failed"
+
+
+@dataclasses.dataclass(frozen=True)
+class SupervisorHealth:
+    """Point-in-time snapshot of the supervised worker."""
+
+    state: str
+    restarts: int
+    crashes: int
+    last_error: str | None
+
+    @property
+    def healthy(self) -> bool:
+        return self.state in (STATE_NEW, STATE_RUNNING)
+
+
+class WorkerSupervisor:
+    """Runs ``target`` in a guarded thread, restarting it on crashes.
+
+    Lifecycle: ``start()`` → worker runs (restarting on crash with
+    backoff) → ``stop()`` (joins the guard thread; a clean ``target``
+    return while stopping is the normal shutdown path). ``target`` must
+    exit promptly once the owner's own stop flag is set — the supervisor
+    never interrupts a running worker, it only decides what happens after
+    the worker returns or raises.
+    """
+
+    def __init__(
+        self,
+        target: Callable[[], None],
+        *,
+        name: str = "repro-worker",
+        backoff_base_s: float = 0.05,
+        backoff_max_s: float = 2.0,
+        max_restarts: int = 5,
+        clock: Clock | None = None,
+        on_crash: Callable[[BaseException], None] | None = None,
+        on_failed: Callable[[BaseException], None] | None = None,
+    ) -> None:
+        assert backoff_base_s > 0.0 and backoff_max_s >= backoff_base_s
+        assert max_restarts >= 0
+        self._target = target
+        self._name = name
+        self._backoff_base_s = float(backoff_base_s)
+        self._backoff_max_s = float(backoff_max_s)
+        self._max_restarts = int(max_restarts)
+        self._clock = clock or SYSTEM_CLOCK
+        self._on_crash = on_crash
+        self._on_failed = on_failed
+        self._cond = threading.Condition()
+        self._state = STATE_NEW
+        self._restarts = 0
+        self._crashes = 0
+        self._last_error: BaseException | None = None
+        self._running = False
+        self._guard: threading.Thread | None = None
+
+    # -- lifecycle --------------------------------------------------------
+
+    def start(self) -> None:
+        with self._cond:
+            assert self._guard is None, "supervisor already started"
+            self._running = True
+            self._state = STATE_RUNNING
+        self._guard = threading.Thread(
+            target=self._guard_loop, name=f"{self._name}-guard", daemon=True
+        )
+        self._guard.start()
+
+    def stop(self) -> None:
+        """Stop supervising and join the guard thread. The owner must have
+        already told the worker body itself to exit (its own stop flag +
+        notify) — this only stops the restart machinery."""
+        with self._cond:
+            if self._guard is None:
+                return
+            self._running = False
+            self._cond.notify_all()  # wake a backoff sleeper
+        self._guard.join()
+        self._guard = None
+
+    # -- introspection ----------------------------------------------------
+
+    def health(self) -> SupervisorHealth:
+        with self._cond:
+            return SupervisorHealth(
+                state=self._state,
+                restarts=self._restarts,
+                crashes=self._crashes,
+                last_error=(
+                    repr(self._last_error)
+                    if self._last_error is not None else None
+                ),
+            )
+
+    @property
+    def state(self) -> str:
+        with self._cond:
+            return self._state
+
+    # -- guard thread -----------------------------------------------------
+
+    def _guard_loop(self) -> None:
+        while True:
+            exc: BaseException | None = None
+            try:
+                self._target()
+            # repro: noqa(TS007) -- the supervisor IS the catch-all: any
+            # worker escape must become a supervised crash, not a leak.
+            except BaseException as e:
+                exc = e
+            with self._cond:
+                if exc is None or not self._running:
+                    # Clean worker return, or a crash during shutdown —
+                    # either way supervision ends here.
+                    self._state = STATE_STOPPED
+                    if exc is not None:
+                        self._crashes += 1
+                        self._last_error = exc
+                    return
+                self._crashes += 1
+                self._last_error = exc
+            self._notify_crash(exc)
+            with self._cond:
+                if self._restarts >= self._max_restarts:
+                    self._state = STATE_FAILED
+                    break
+                self._restarts += 1
+                self._state = STATE_BACKOFF
+                delay = min(
+                    self._backoff_base_s * 2.0 ** (self._restarts - 1),
+                    self._backoff_max_s,
+                )
+            self._clock.sleep(self._cond, delay)
+            with self._cond:
+                if not self._running:
+                    self._state = STATE_STOPPED
+                    return
+                self._state = STATE_RUNNING
+        self._notify_failed(exc)
+
+    def _notify_crash(self, exc: BaseException) -> None:
+        if self._on_crash is not None:
+            try:
+                self._on_crash(exc)
+            except Exception:  # a broken crash callback must not kill the guard
+                pass
+
+    def _notify_failed(self, exc: BaseException | None) -> None:
+        if self._on_failed is not None and exc is not None:
+            try:
+                self._on_failed(exc)
+            except Exception:  # a broken failure callback must not kill the guard
+                pass

@@ -30,7 +30,14 @@ if typing.TYPE_CHECKING:
     import numpy as np
     from numpy.typing import ArrayLike
 
-from repro.serve.batching import BatcherStats, BucketPolicy, ContinuousBatcher
+from repro.serve.batching import (
+    BatcherHooks,
+    BatcherStats,
+    BucketPolicy,
+    ContinuousBatcher,
+)
+from repro.serve.clock import Clock
+from repro.serve.degradation import DegradationController, DegradationPolicy
 from repro.serve.placement import ServePlacement, single_device
 from repro.serve.ranking_service import RankingService
 from repro.serve.warmup import (
@@ -62,12 +69,16 @@ class TierConfig:
     warmup: bool = True
     persistent_cache: bool = True
     cache_dir: str | None = None
+    degradation: DegradationPolicy | None = None
 
     def __post_init__(self) -> None:
         object.__setattr__(
             self, "doc_counts", tuple(int(d) for d in self.doc_counts)
         )
         assert len(self.doc_counts) >= 1, "need at least one doc count"
+        assert self.degradation is None or isinstance(
+            self.degradation, DegradationPolicy
+        )
 
 
 class ServingTier:
@@ -79,6 +90,8 @@ class ServingTier:
         policy: BucketPolicy | None = None,
         placement: ServePlacement | None = None,
         *,
+        clock: Clock | None = None,
+        hooks: BatcherHooks | None = None,
         doc_counts: Sequence[int] | None = None,
         warmup: bool | None = None,
         persistent_cache: bool | None = None,
@@ -118,8 +131,14 @@ class ServingTier:
         self.persistent_cache = config.persistent_cache
         self.cache_dir = config.cache_dir
         self.warmup_report: WarmupReport | None = None
+        self.degradation = (
+            DegradationController(service, config.degradation, clock=clock)
+            if config.degradation is not None else None
+        )
         self.batcher = ContinuousBatcher(
-            service, self.n_features, self.policy, placement=self.placement
+            service, self.n_features, self.policy,
+            placement=self.placement, clock=clock, hooks=hooks,
+            degradation=self.degradation,
         )
         self._started = False
 
@@ -129,6 +148,11 @@ class ServingTier:
             enable_persistent_cache(self.cache_dir)
             if self.persistent_cache else None
         )
+        if self.degradation is not None and self.service.n_rungs == 0:
+            # Materialize every rung BEFORE warmup so the warmup pass
+            # below AOT-compiles the whole ladder — degrading at peak
+            # load must never trigger a jit.
+            self.degradation.install()
         if self.do_warmup:
             self.warmup_report = warmup_service(
                 self.service,
@@ -141,10 +165,14 @@ class ServingTier:
         self._started = True
         return self
 
-    def submit(self, features: ArrayLike) -> Future:
+    def submit(
+        self, features: ArrayLike, deadline_ms: float | None = None
+    ) -> Future:
         """Non-blocking: one query's ``[n_docs, F]`` candidates → Future of
-        ``(top_idx, scores)``."""
-        return self.batcher.submit(features)
+        ``(top_idx, scores)``. ``deadline_ms`` is the request's end-to-end
+        budget (see :meth:`repro.serve.batching.ContinuousBatcher.submit`
+        for the typed rejection/expiry behavior)."""
+        return self.batcher.submit(features, deadline_ms=deadline_ms)
 
     def rank(self, features: ArrayLike) -> tuple[np.ndarray, np.ndarray]:
         """Blocking convenience wrapper around :meth:`submit`."""
@@ -180,3 +208,15 @@ class ServingTier:
             ),
             "n_devices": self.placement.n_devices,
         }
+
+    def health(self) -> dict:
+        """Liveness snapshot for operators and load balancers: supervisor
+        state (``running``/``backoff``/``failed``/…), restart and crash
+        counts, current queue depth, p50/p99 completion latency over the
+        recent window, and — when a degradation ladder is configured —
+        the current rung and its queue-delay EMA."""
+        h = self.batcher.health()
+        h["started"] = self._started
+        if self.degradation is not None:
+            h["degradation"] = self.degradation.snapshot()
+        return h

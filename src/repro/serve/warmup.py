@@ -71,6 +71,7 @@ class WarmupReport:
     buckets: list[tuple[int, int]]
     seconds_per_bucket: dict[tuple[int, int], float]
     cache_dir: str | None = None
+    rungs_warmed: int = 1   # degradation rungs compiled per bucket
 
     @property
     def total_seconds(self) -> float:
@@ -84,6 +85,7 @@ def warmup_service(
     *,
     seed_peak_frac: float = 1.0,
     run_both_branches: bool = True,
+    warm_rungs: bool = True,
     placement: ServePlacement | None = None,
 ) -> WarmupReport:
     """Compile (and execute) every ``(Q, D)`` serving bucket up front.
@@ -102,9 +104,22 @@ def warmup_service(
     entry, and because the dense matmul is traced into the same jitted
     step as the tree launches, this one synthetic batch AOT-compiles the
     dense branch too — no separate dense warmup pass exists or is needed.
+
+    With ``warm_rungs`` (default) and a degradation ladder installed
+    (:meth:`RankingService.install_rungs`), every rung's step is compiled
+    for every bucket — each rung's strategy closures / query-exit config
+    are part of the engine's static cache key, so each is its own
+    compile. This is what makes degrading under load jit-free: stepping
+    the ladder at peak traffic swaps to a step that warmup already paid
+    for. The service is left back at rung 0 (baseline).
     """
     n_stages = service.n_stages
-    report = WarmupReport(buckets=[], seconds_per_bucket={})
+    rung_levels: list[int | None] = [None]
+    if warm_rungs and service.n_rungs > 1:
+        rung_levels = list(range(service.n_rungs))
+    report = WarmupReport(
+        buckets=[], seconds_per_bucket={}, rungs_warmed=len(rung_levels)
+    )
     for Q, D in buckets:
         t0 = time.perf_counter()
         state = service.bucket_state(Q, D)
@@ -123,12 +138,17 @@ def warmup_service(
             and len(service.sentinels) > 1
         ):
             ema_probes.append([float(Q * D)] * n_stages)
-        for ema in ema_probes:
-            state.ema = ema
-            service.rank_batch(X, mask, placement=placement)
+        for level in rung_levels:
+            if level is not None:
+                service.set_rung(level)
+            for ema in ema_probes:
+                state.ema = ema
+                service.rank_batch(X, mask, placement=placement)
         state.ema = None  # real traffic re-learns its own continue rates
         report.buckets.append((Q, D))
         report.seconds_per_bucket[(Q, D)] = time.perf_counter() - t0
+    if rung_levels[-1] is not None:
+        service.set_rung(0)  # hand real traffic the baseline rung
     # Warmup batches are not traffic: stats restart clean.
     service.stats = ServiceStats()
     return report

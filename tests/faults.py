@@ -1,0 +1,213 @@
+"""Fault-injection harness for the serving tier's chaos tests.
+
+Everything here exists to make failure *deterministic and fast*:
+
+- :class:`FakeClock` — virtual monotonic time behind the
+  :class:`repro.serve.clock.Clock` protocol. ``now()`` reads virtual
+  time; ``advance()`` moves it. Condition waits become short REAL polls
+  (a few ms), so the worker loop re-reads the virtual clock often —
+  deadline and backoff logic run against fake time while the test stays
+  wall-clock fast.
+- :class:`FakeService` — a numpy stand-in for :class:`RankingService`
+  with the same ``rank_batch`` surface (deterministic per-document
+  scores, neighbor-independent like the real masked engine), plus
+  injectable engine failures and artificial per-call latency. Batcher
+  semantics (admission, deadlines, supervision, scatter) get exercised
+  without paying jax compiles.
+- :class:`CrashTimes` — a ``BatcherHooks.on_flush`` payload that kills
+  the worker thread a configured number of times (the supervisor's
+  restart path), and :class:`PoisonOnce` — an ``on_result`` payload that
+  poisons exactly one request's scatter.
+- :func:`settle` — resolve a pile of futures into (results, errors)
+  with a hard timeout: the "no future is ever left unresolved" assertion
+  helper.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from concurrent.futures import Future
+
+import numpy as np
+
+from repro.serve.ranking_service import ServiceStats
+
+#: Real seconds a FakeClock condition-wait blocks per poll. Small enough
+#: to keep chaos tests snappy, large enough not to busy-spin.
+POLL_S = 0.002
+
+
+class InjectedCrash(RuntimeError):
+    """The fault the harness throws to kill a worker thread."""
+
+
+class InjectedEngineError(RuntimeError):
+    """The fault the harness throws from inside the (fake) engine."""
+
+
+class FakeClock:
+    """Virtual time with the :class:`repro.serve.clock.Clock` surface.
+
+    ``wait``/``sleep`` do a short real wait regardless of the requested
+    timeout — the waiter wakes frequently and re-reads ``now()``, so
+    advancing virtual time is observed within a few milliseconds of real
+    time without any coupling between the test thread and the waiter.
+    """
+
+    def __init__(self, start: float = 1000.0) -> None:
+        self._now = float(start)
+        self._lock = threading.Lock()
+
+    def now(self) -> float:
+        with self._lock:
+            return self._now
+
+    def advance(self, seconds: float) -> float:
+        assert seconds >= 0.0, seconds
+        with self._lock:
+            self._now += float(seconds)
+            return self._now
+
+    def wait(self, cond: threading.Condition, timeout: float | None) -> bool:
+        if timeout is not None and timeout <= 0.0:
+            return False
+        return cond.wait(timeout=POLL_S)
+
+    def sleep(self, cond: threading.Condition, seconds: float) -> None:
+        with cond:
+            cond.wait(timeout=POLL_S)
+
+
+class FakeService:
+    """Engine stand-in: deterministic, fast, and failable on demand.
+
+    Scores are ``features.sum(-1)`` masked to alive rows — per-document
+    and independent of block neighbors, mirroring the bit-exactness
+    property the real engine guarantees. ``fail_next(n)`` arms ``n``
+    consecutive :class:`InjectedEngineError` raises; ``latency_s``
+    simulates engine wall time (real sleep, keep it tiny).
+    """
+
+    def __init__(self, top_k: int = 5, latency_s: float = 0.0) -> None:
+        self.top_k = int(top_k)
+        self.stats = ServiceStats()
+        self.calls = 0
+        self.batch_shapes: list[tuple[int, int]] = []
+        self.latency_s = float(latency_s)
+        self._fail_remaining = 0
+        self._lock = threading.Lock()
+        # Degradation duck-surface (RankingService's rung API): records
+        # every set_rung so tests can assert the controller really stepped.
+        self.rungs_installed: tuple | None = None
+        self.rung_level = 0
+        self.rung_history: list[int] = []
+
+    @property
+    def n_rungs(self) -> int:
+        if self.rungs_installed is None:
+            return 0
+        return len(self.rungs_installed) + 1  # + implicit baseline
+
+    def install_rungs(self, rungs) -> None:
+        assert self.rungs_installed is None
+        self.rungs_installed = tuple(rungs)
+
+    def set_rung(self, level: int) -> None:
+        assert self.rungs_installed is not None
+        assert 0 <= level < self.n_rungs, (level, self.n_rungs)
+        self.rung_level = level
+        self.rung_history.append(level)
+
+    def fail_next(self, n: int = 1) -> None:
+        with self._lock:
+            self._fail_remaining = int(n)
+
+    def rank_batch(
+        self, X: object, mask: object, placement: object = None
+    ) -> tuple[None, np.ndarray]:
+        self.calls += 1
+        x = np.asarray(X)
+        m = np.asarray(mask)
+        self.batch_shapes.append((x.shape[0], x.shape[1]))
+        if self.latency_s > 0.0:
+            time.sleep(self.latency_s)
+        with self._lock:
+            if self._fail_remaining > 0:
+                self._fail_remaining -= 1
+                raise InjectedEngineError("injected engine failure")
+        scores = x.sum(axis=-1) * m
+        return None, scores
+
+    @staticmethod
+    def expected_scores(features: np.ndarray) -> np.ndarray:
+        """What ``rank_batch`` returns for one query's alive rows."""
+        return np.asarray(features, np.float32).sum(axis=-1)
+
+
+class CrashTimes:
+    """``BatcherHooks.on_flush`` payload: kill the worker ``n`` times.
+
+    Each call while armed raises :class:`InjectedCrash` — which escapes
+    the worker loop and lands in the supervisor. ``fired`` counts kills.
+    """
+
+    def __init__(self, n: int = 1) -> None:
+        self.remaining = int(n)
+        self.fired = 0
+        self._lock = threading.Lock()
+
+    def __call__(self, doc_bucket: int, n_reqs: int) -> None:
+        with self._lock:
+            if self.remaining > 0:
+                self.remaining -= 1
+                self.fired += 1
+                raise InjectedCrash("injected worker kill")
+
+
+class PoisonOnce:
+    """``BatcherHooks.on_result`` payload: poison exactly one scatter."""
+
+    def __init__(self) -> None:
+        self.armed = True
+
+    def __call__(self, future: Future) -> None:
+        if self.armed:
+            self.armed = False
+            raise InjectedEngineError("injected per-request poison")
+
+
+def settle(
+    futures: list[Future], timeout_s: float = 30.0
+) -> tuple[list, list[BaseException]]:
+    """Wait for EVERY future to resolve; raise if any is left hanging.
+
+    Returns ``(results, errors)`` in submission order (each future lands
+    in exactly one list). This is the chaos suite's core assertion: no
+    interleaving of submit/crash/stop may strand a future.
+    """
+    deadline = time.monotonic() + timeout_s
+    results, errors = [], []
+    for fut in futures:
+        remaining = deadline - time.monotonic()
+        assert remaining > 0, "settle(): timed out with futures unresolved"
+        try:
+            results.append(fut.result(timeout=remaining))
+        except BaseException as e:  # noqa: BLE001 — classification, not handling
+            errors.append(e)
+    return results, errors
+
+
+def spike(batcher, n: int, features: np.ndarray, deadline_ms=None) -> list:
+    """Fire ``n`` submits as fast as possible; collect futures AND
+    synchronous rejections (Overloaded etc.) as pre-failed futures, so
+    ``settle`` can account for every request in the spike."""
+    futs: list[Future] = []
+    for _ in range(n):
+        try:
+            futs.append(batcher.submit(features, deadline_ms=deadline_ms))
+        except Exception as e:
+            f: Future = Future()
+            f.set_exception(e)
+            futs.append(f)
+    return futs

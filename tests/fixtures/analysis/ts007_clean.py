@@ -1,0 +1,51 @@
+"""TS007 clean fixture: bounded buffers, typed excepts, justified catch-all."""
+
+import collections
+import queue
+
+
+class ContinuousBatcher:
+    def __init__(self):
+        # bounded buffers: the contract TS007 enforces
+        self.latencies = collections.deque(maxlen=512)
+        self.requests = queue.Queue(maxsize=64)
+        self.history = collections.deque([], 128)  # positional maxlen
+
+    def _run(self):
+        batch = []
+        while self.running():
+            # bounded loop (not `while True`): growth is admission-gated
+            batch.append(self.requests.get())
+        return batch
+
+    def running(self):
+        return False
+
+    def _flush(self, reqs):
+        try:
+            return len(reqs)
+        except TypeError:
+            # typed handler: lets real worker death propagate
+            return 0
+
+
+class WorkerSupervisor:
+    def _guard_loop(self, target):
+        try:
+            target()
+        except BaseException:  # repro: noqa(TS007) -- the supervisor IS the catch-all: crashes become restarts
+            pass
+
+
+class RequestLog:
+    """Not a worker-loop class: the rule does not apply here."""
+
+    def __init__(self):
+        self.entries = collections.deque()
+
+    def watch(self, source):
+        while True:
+            try:
+                self.entries.append(source.get())
+            except BaseException:
+                return

@@ -1,0 +1,32 @@
+"""TS007 fixture: unbounded growth / blind excepts in worker-loop classes."""
+
+import collections
+import queue
+
+
+class ContinuousBatcher:
+    def __init__(self):
+        # unbounded buffers in a serving class: overload becomes OOM
+        self.latencies = collections.deque()
+        self.requests = queue.Queue()
+
+    def _run(self):
+        while True:
+            item = self.requests.get()
+            # growing self-state forever inside the worker loop
+            self.latencies.append(item)
+
+    def _flush(self, reqs):
+        try:
+            return len(reqs)
+        except BaseException:
+            # swallows worker death the supervisor must observe
+            return 0
+
+
+class WorkerSupervisor:
+    def _guard_loop(self, target):
+        try:
+            target()
+        except:  # noqa: E722
+            pass

@@ -20,7 +20,7 @@ from repro.analysis import run_paths
 
 FIXTURES = Path(__file__).resolve().parent / "fixtures" / "analysis"
 SRC_REPRO = Path(__file__).resolve().parent.parent / "src" / "repro"
-ALL_CODES = ("TS001", "TS002", "TS003", "TS004", "TS005", "TS006")
+ALL_CODES = ("TS001", "TS002", "TS003", "TS004", "TS005", "TS006", "TS007")
 
 EXPECTED_DIRTY_COUNTS = {
     "TS001": 3,  # float(), .item(), np.asarray via helper
@@ -29,6 +29,8 @@ EXPECTED_DIRTY_COUNTS = {
     "TS004": 3,  # os.environ.get, os.getenv, os.environ[...]
     "TS005": 2,  # batcher.submit engine call + tier.stop warmup
     "TS006": 1,  # the second transfer site
+    "TS007": 5,  # deque()/Queue() unbounded, while-True append,
+    #              except BaseException, bare except
 }
 
 

@@ -1,0 +1,400 @@
+"""Edge contracts of the fault-tolerant serving path.
+
+Fast, deterministic unit coverage riding below the chaos suite
+(tests/test_chaos.py): deadline boundary cases (zero budget, budget
+tighter than the flush window, in-queue expiry), admission control at
+exactly the queue bound, the typed stop/submit handoff, the supervisor's
+restart/backoff/budget state machine in isolation, and the degradation
+controller's hysteresis — all off the real engine (FakeService/FakeClock
+from tests/faults.py), so the whole file runs in milliseconds.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from faults import FakeClock, FakeService, settle
+from repro.serve.batching import BucketPolicy, ContinuousBatcher
+from repro.serve.calibration import expected_engine_seconds
+from repro.serve.clock import Clock, MonotonicClock, SYSTEM_CLOCK
+from repro.serve.degradation import (
+    DegradationController,
+    DegradationPolicy,
+    ExitRung,
+)
+from repro.serve.errors import (
+    BatcherStopped,
+    DeadlineExceeded,
+    Overloaded,
+    ServeError,
+    WorkerCrashed,
+    WorkerFailed,
+)
+from repro.serve.supervisor import (
+    STATE_FAILED,
+    STATE_RUNNING,
+    STATE_STOPPED,
+    WorkerSupervisor,
+)
+
+F = 12
+
+
+def _query(n_docs: int, seed: int = 0) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    return rng.normal(size=(n_docs, F)).astype(np.float32)
+
+
+# -- typed errors ---------------------------------------------------------
+
+
+def test_error_taxonomy():
+    # One catchable root for every serving failure...
+    for err in (Overloaded(3, 2), DeadlineExceeded(5.0, 9.0),
+                BatcherStopped(), WorkerCrashed(), WorkerFailed()):
+        assert isinstance(err, ServeError)
+        assert isinstance(err, RuntimeError)
+    # ...with machine-readable context on the load-control pair.
+    o = Overloaded(1024, 1024)
+    assert o.depth == 1024 and o.limit == 1024
+    d = DeadlineExceeded(5.0, 9.25)
+    assert d.deadline_ms == 5.0 and d.waited_ms == 9.25
+    # Deadline misses also answer to the stdlib timeout idiom.
+    assert isinstance(d, TimeoutError)
+
+
+# -- deadlines ------------------------------------------------------------
+
+
+def test_zero_deadline_is_dead_on_arrival():
+    svc = FakeService()
+    b = ContinuousBatcher(svc, F, BucketPolicy())
+    b.start()
+    fut = b.submit(_query(16), deadline_ms=0.0)
+    with pytest.raises(DeadlineExceeded):
+        fut.result(timeout=5)
+    b.stop()
+    # Never enqueued, never scored: the engine was not asked.
+    assert svc.calls == 0
+    assert b.stats.shed_deadline == 1 and b.stats.failed == 1
+    assert b.stats.deadline_miss_rate == 1.0
+
+
+def test_deadline_tighter_than_flush_window_flushes_early():
+    """max_wait_ms alone would stall a lone query for 10s; its 50ms
+    deadline must pull the flush forward instead of expiring it."""
+    svc = FakeService()
+    b = ContinuousBatcher(
+        svc, F, BucketPolicy(max_queries=8, max_wait_ms=10_000.0)
+    )
+    b.start()
+    t0 = time.monotonic()
+    _top, scores = b.submit(_query(16), deadline_ms=50.0).result(timeout=30)
+    elapsed = time.monotonic() - t0
+    b.stop()
+    np.testing.assert_allclose(
+        scores, FakeService.expected_scores(_query(16)), rtol=1e-6
+    )
+    assert elapsed < 5.0, elapsed  # nowhere near the 10s window
+    assert b.stats.flushes_deadline == 1
+    assert b.stats.expired_deadline == 0
+
+
+def test_in_queue_expiry_never_launches_the_engine():
+    clock = FakeClock()
+    svc = FakeService()
+    b = ContinuousBatcher(
+        svc, F, BucketPolicy(max_queries=8, max_wait_ms=5.0), clock=clock
+    )
+    b.start()
+    fut = b.submit(_query(16), deadline_ms=10.0)
+    clock.advance(0.020)  # ripen the flush AND blow the budget
+    with pytest.raises(DeadlineExceeded) as exc_info:
+        fut.result(timeout=30)
+    b.stop()
+    assert svc.calls == 0  # the whole bucket was dead: no engine launch
+    assert b.stats.expired_deadline == 1
+    assert exc_info.value.deadline_ms == 10.0
+    assert exc_info.value.waited_ms >= 10.0
+
+
+def test_expired_request_does_not_drag_down_bucket_mates():
+    clock = FakeClock()
+    svc = FakeService()
+    b = ContinuousBatcher(
+        svc, F, BucketPolicy(max_queries=8, max_wait_ms=30.0), clock=clock
+    )
+    b.start()
+    doomed = b.submit(_query(16, seed=1), deadline_ms=10.0)
+    q = _query(16, seed=2)
+    alive = b.submit(q)  # same bucket, no deadline
+    clock.advance(0.020)  # doomed expires; the bucket still flushes
+    _top, scores = alive.result(timeout=30)
+    with pytest.raises(DeadlineExceeded):
+        doomed.result(timeout=30)
+    b.stop()
+    np.testing.assert_allclose(
+        scores, FakeService.expected_scores(q), rtol=1e-6
+    )
+    assert svc.calls == 1
+    assert b.stats.completed == 1 and b.stats.expired_deadline == 1
+
+
+# -- admission control ----------------------------------------------------
+
+
+def test_queue_at_exactly_max_depth_sheds_the_next_submit():
+    clock = FakeClock()  # frozen: nothing flushes while we fill the queue
+    svc = FakeService()
+    b = ContinuousBatcher(
+        svc, F,
+        BucketPolicy(max_queries=64, max_wait_ms=1000.0, max_queue_depth=4),
+        clock=clock,
+    )
+    b.start()
+    futs = [b.submit(_query(16, seed=i)) for i in range(4)]  # fills to 4
+    with pytest.raises(Overloaded) as exc_info:
+        b.submit(_query(16, seed=99))
+    assert exc_info.value.depth == 4 and exc_info.value.limit == 4
+    assert b.stats.shed_overload == 1
+    assert b.stats.max_queue_depth == 4
+    b.stop()  # drain serves everything that was admitted
+    results, errors = settle(futs, timeout_s=30)
+    assert len(results) == 4 and errors == []
+    assert b.stats.flushes_drain >= 1
+
+
+def test_unbounded_policy_never_sheds():
+    clock = FakeClock()
+    b = ContinuousBatcher(
+        FakeService(), F,
+        BucketPolicy(max_queries=64, max_wait_ms=1000.0, max_queue_depth=None),
+        clock=clock,
+    )
+    b.start()
+    futs = [b.submit(_query(8, seed=i)) for i in range(64)]
+    assert b.stats.shed_overload == 0
+    b.stop()
+    results, errors = settle(futs, timeout_s=30)
+    assert len(results) == 64 and errors == []
+
+
+# -- stop/submit handoff --------------------------------------------------
+
+
+def test_submit_after_stop_raises_typed():
+    b = ContinuousBatcher(FakeService(), F, BucketPolicy())
+    with pytest.raises(BatcherStopped):
+        b.submit(_query(8))  # never started
+    b.start()
+    b.stop()
+    with pytest.raises(BatcherStopped):
+        b.submit(_query(8))
+
+
+def test_stop_drains_admitted_requests():
+    clock = FakeClock()  # frozen: requests sit queued until the drain
+    svc = FakeService()
+    b = ContinuousBatcher(
+        svc, F, BucketPolicy(max_queries=64, max_wait_ms=1000.0), clock=clock
+    )
+    b.start()
+    qs = [_query(16, seed=i) for i in range(5)]
+    futs = [b.submit(q) for q in qs]
+    b.stop()
+    results, errors = settle(futs, timeout_s=30)
+    assert errors == [] and len(results) == 5
+    for q, (_top, scores) in zip(qs, results):
+        np.testing.assert_allclose(
+            scores, FakeService.expected_scores(q), rtol=1e-6
+        )
+
+
+# -- supervisor state machine ---------------------------------------------
+
+
+def test_supervisor_clean_exit_is_not_a_crash():
+    ran = threading.Event()
+    sup = WorkerSupervisor(ran.set, backoff_base_s=0.001)
+    sup.start()
+    assert ran.wait(timeout=5)
+    sup.stop()
+    h = sup.health()
+    assert h.state == STATE_STOPPED
+    assert h.restarts == 0 and h.crashes == 0 and h.last_error is None
+    assert not h.healthy
+
+
+def test_supervisor_restarts_until_budget_then_fails():
+    runs = []
+    failed = threading.Event()
+
+    def target():
+        runs.append(len(runs))
+        raise RuntimeError(f"boom {len(runs)}")
+
+    crashes = []
+    sup = WorkerSupervisor(
+        target,
+        backoff_base_s=0.001,
+        backoff_max_s=0.002,
+        max_restarts=3,
+        on_crash=crashes.append,
+        on_failed=lambda exc: failed.set(),
+    )
+    sup.start()
+    assert failed.wait(timeout=10)
+    # initial run + 3 restarts = 4 executions, 4 crashes observed.
+    assert len(runs) == 4
+    assert len(crashes) == 4
+    h = sup.health()
+    assert h.state == STATE_FAILED and not h.healthy
+    assert h.restarts == 3 and h.crashes == 4
+    assert "boom 4" in h.last_error
+    sup.stop()
+    assert sup.health().state == STATE_FAILED  # failure is terminal
+
+
+def test_supervisor_stop_interrupts_backoff_immediately():
+    first = threading.Event()
+
+    def target():
+        if not first.is_set():
+            first.set()
+            raise RuntimeError("one crash, then a 60s backoff")
+
+    sup = WorkerSupervisor(target, backoff_base_s=60.0, backoff_max_s=60.0)
+    sup.start()
+    assert first.wait(timeout=5)
+    t0 = time.monotonic()
+    sup.stop()  # must wake the sleeping guard, not wait out the minute
+    assert time.monotonic() - t0 < 5.0
+    assert sup.health().state == STATE_STOPPED
+
+
+def test_supervisor_state_while_running():
+    release = threading.Event()
+    sup = WorkerSupervisor(lambda: release.wait(timeout=30))
+    sup.start()
+    assert sup.state == STATE_RUNNING
+    assert sup.health().healthy
+    release.set()
+    sup.stop()
+
+
+def test_broken_crash_callback_does_not_kill_the_guard():
+    calls = []
+
+    def target():
+        calls.append(1)
+        if len(calls) == 1:
+            raise RuntimeError("crash once")
+        time.sleep(0.005)
+
+    def bad_callback(exc):
+        raise ValueError("observer bug")
+
+    sup = WorkerSupervisor(
+        target, backoff_base_s=0.001, on_crash=bad_callback
+    )
+    sup.start()
+    deadline = time.monotonic() + 10
+    while len(calls) < 2:
+        assert time.monotonic() < deadline
+        time.sleep(0.002)
+    assert sup.health().state == STATE_RUNNING  # guard survived the observer
+    sup.stop()
+
+
+# -- degradation hysteresis ----------------------------------------------
+
+
+def _controller(dwell=2):
+    svc = FakeService()
+    policy = DegradationPolicy(
+        rungs=(ExitRung("a", threshold=0.8), ExitRung("b", threshold=0.9)),
+        degrade_above_ms=10.0,
+        recover_below_ms=2.0,
+        ema_alpha=1.0,   # EMA == last observation: exact control
+        dwell_flushes=dwell,
+    )
+    ctrl = DegradationController(svc, policy)
+    ctrl.install()
+    return svc, ctrl
+
+
+def test_controller_steps_one_rung_per_dwell_window():
+    svc, ctrl = _controller(dwell=2)
+    assert ctrl.n_levels == 3
+    assert ctrl.observe(0.050) == 1   # first move is free (fresh dwell)
+    assert ctrl.observe(0.050) == 1   # dwell blocks an immediate second
+    assert ctrl.observe(0.050) == 2   # window elapsed: next rung
+    assert ctrl.observe(0.050) == 2   # ladder is capped at its last rung
+    assert ctrl.observe(0.050) == 2
+    assert svc.rung_history == [1, 2]  # set_rung only on actual moves
+
+
+def test_controller_hysteresis_band_holds_level():
+    svc, ctrl = _controller(dwell=1)
+    assert ctrl.observe(0.050) == 1
+    # In-band delay (2ms < 5ms < 10ms): neither degrade nor recover.
+    for _ in range(5):
+        assert ctrl.observe(0.005) == 1
+    assert ctrl.observe(0.001) == 0   # below the band: recover
+    assert ctrl.observe(0.001) == 0   # floor is the baseline
+    snap = ctrl.snapshot()
+    assert snap["degrade_steps"] == 1 and snap["recover_steps"] == 1
+    assert snap["rung"] == "baseline"
+
+
+def test_controller_snapshot_names_the_active_rung():
+    _svc, ctrl = _controller(dwell=1)
+    ctrl.observe(0.050)
+    snap = ctrl.snapshot()
+    assert snap["level"] == 1 and snap["rung"] == "a"
+    assert snap["n_levels"] == 3
+    assert snap["queue_delay_ema_ms"] == pytest.approx(50.0)
+    assert snap["degrade_above_ms"] == 10.0
+    assert snap["recover_below_ms"] == 2.0
+
+
+def test_degradation_policy_validates_hysteresis_band():
+    rungs = (ExitRung("a", threshold=0.8),)
+    with pytest.raises(AssertionError):
+        DegradationPolicy(
+            rungs=rungs, degrade_above_ms=2.0, recover_below_ms=5.0
+        )
+    with pytest.raises(AssertionError):
+        DegradationPolicy(rungs=())
+    with pytest.raises(AssertionError):
+        ExitRung("bad", threshold=1.5)
+    with pytest.raises(AssertionError):
+        ExitRung("bad", dense_keep_frac=0.0)
+
+
+# -- clocks & cost prior --------------------------------------------------
+
+
+def test_monotonic_clock_satisfies_protocol():
+    assert isinstance(SYSTEM_CLOCK, Clock)
+    assert isinstance(MonotonicClock(), Clock)
+    assert isinstance(FakeClock(), Clock)  # the harness honors it too
+    c = MonotonicClock()
+    t0 = c.now()
+    cond = threading.Condition()
+    with cond:
+        assert c.wait(cond, 0.005) is False  # timeout, not notify
+    c.sleep(cond, 0.001)
+    assert c.now() > t0
+
+
+def test_expected_engine_seconds_prior_is_nonnegative():
+    # Whether or not a calibration ran in this process, the prior must be
+    # a finite non-negative number — it feeds a scheduling subtraction.
+    est = expected_engine_seconds(8 * 64, 900)
+    assert est >= 0.0 and np.isfinite(est)
+    assert expected_engine_seconds(0, 0) >= 0.0

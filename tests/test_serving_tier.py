@@ -24,6 +24,7 @@ import jax._src.test_util as jtu
 from repro.core.lear import LearClassifier
 from repro.forest.ensemble import random_ensemble
 from repro.serve.batching import BucketPolicy, ContinuousBatcher
+from repro.serve.errors import BatcherStopped
 from repro.serve.placement import local, single_device
 from repro.serve.ranking_service import RankingService, ServiceConfig
 from repro.serve.tier import ServingTier, TierConfig
@@ -175,9 +176,13 @@ def test_tier_end_to_end_stats_and_drain():
     assert s["service"]["overflow_docs"] == 0
     assert s["warmup_seconds"] > 0
     assert s["n_devices"] == 1
-    # Restart after stop is allowed; submit after stop is not.
-    with pytest.raises(AssertionError):
+    # Restart after stop is allowed; submit after stop gets the typed stop.
+    with pytest.raises(BatcherStopped):
         tier.submit(_queries(rng, 1)[0])
+    # The health surface outlives the worker: state + queue are readable.
+    h = tier.health()
+    assert h["state"] == "stopped" and h["queue_depth"] == 0
+    assert h["crashes"] == 0 and not h["started"]
 
 
 def test_single_device_placement_is_identity_and_local_mesh_bitexact():
